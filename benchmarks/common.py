@@ -1,0 +1,85 @@
+"""Shared benchmark utilities.
+
+Throughput methodology follows the paper §7: events/sec of query execution
+with data pre-loaded in memory, compile/JIT time excluded (one warmup run),
+average of ``repeats`` runs.  The container is 1 CPU core — absolute numbers
+are not comparable to the paper's 32-core Xeon, but the TiLT-vs-EventSPE
+*ratios* measure the same effects (fusion, operator-at-a-time overhead,
+single-pass execution).  The TiLT executor runs the jnp path (the Pallas
+kernels target TPU; interpret mode is a correctness harness, not a timing
+one — see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compile as qc
+from repro.core.parallel import partition_run
+from repro.core.stream import SnapshotGrid
+from repro.spe import eventspe as es
+
+N_EVENTS = 2_000_000
+REPEATS = 3
+
+
+def make_grids(data):
+    out = {}
+    for name, d in data.items():
+        val = d["value"]
+        v = ({k: jnp.asarray(a, jnp.float32) for k, a in val.items()}
+             if isinstance(val, dict) else jnp.asarray(val, jnp.float32))
+        out[name] = SnapshotGrid(value=v, valid=jnp.asarray(d["valid"]),
+                                 t0=0, prec=1)
+    return out
+
+
+def time_tilt(app, data, n_events, part_len=1_000_000, opt=True,
+              interpreted=False, repeats=REPEATS):
+    """Events/sec of the TiLT query over the full dataset."""
+    grids = make_grids(data)
+    out_len = part_len // app.query.prec
+    exe = qc.compile_query(app.query.node, out_len=out_len, pallas=False,
+                           opt=opt)
+    n_parts = max(n_events // part_len, 1)
+    # warmup (compile)
+    jax.block_until_ready(
+        partition_run(exe, grids, 0, 1, interpreted=interpreted).valid)
+    best = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = partition_run(exe, grids, 0, n_parts, interpreted=interpreted)
+        jax.block_until_ready(res.valid)
+        best.append(time.perf_counter() - t0)
+    dt = min(best)
+    return n_parts * part_len / dt, dt
+
+
+def time_spe(app, data, n_events, batch=100_000, repeats=REPEATS):
+    """Events/sec of the event-centric baseline over the full dataset."""
+    def batches():
+        for i in range(0, n_events, batch):
+            sl = slice(i, i + batch)
+            env = {}
+            for nm, dd in data.items():
+                v = dd["value"]
+                v = ({k: a[sl] for k, a in v.items()} if isinstance(v, dict)
+                     else v[sl])
+                env[nm] = es.Batch(dd["ts"][sl], v, dd["valid"][sl])
+            yield env
+
+    app.spe.run(batches())  # warmup (numpy caches, allocator)
+    best = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        app.spe.run(batches())
+        best.append(time.perf_counter() - t0)
+    dt = min(best)
+    return n_events / dt, dt
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,41 @@
+"""Fig. 7a/7b: temporal-operation and real-world-application throughput,
+TiLT vs the event-centric interpreted baseline (Trill stand-in).
+
+Paper reference points (32-core): TiLT ≈ 0.69–1.44× on Select/Where,
+6.6×/13.9× on Window-Sum/Join vs Trill; 6.3–326× across the eight apps.
+Our baseline is numpy-columnar (faster than Trill's managed C#), so ratios
+are a conservative floor — see benchmarks/common.py.
+"""
+from __future__ import annotations
+
+from repro.data import apps as A
+
+from .common import N_EVENTS, row, time_spe, time_tilt
+
+
+def run(n_events: int = N_EVENTS):
+    print("# fig7a: primitive temporal operations")
+    for op in A.TEMPORAL_OPS:
+        app = A.temporal_op(op)
+        data = app.make_input(n_events, 7)
+        tps, t_t = time_tilt(app, data, n_events)
+        sps, t_s = time_spe(app, data, n_events)
+        row(f"fig7a_{op}_tilt", t_t * 1e6, f"{tps/1e6:.1f}Mev/s")
+        row(f"fig7a_{op}_spe", t_s * 1e6, f"{sps/1e6:.1f}Mev/s")
+        row(f"fig7a_{op}_speedup", 0.0, f"{tps/sps:.2f}x")
+
+    print("# fig7b: real-world applications")
+    for name in A.APPS:
+        if name == "ysb":
+            continue  # fig8's benchmark
+        app = A.make_app(name)
+        data = app.make_input(n_events, 11)
+        tps, t_t = time_tilt(app, data, n_events)
+        sps, t_s = time_spe(app, data, n_events)
+        row(f"fig7b_{name}_tilt", t_t * 1e6, f"{tps/1e6:.1f}Mev/s")
+        row(f"fig7b_{name}_spe", t_s * 1e6, f"{sps/1e6:.1f}Mev/s")
+        row(f"fig7b_{name}_speedup", 0.0, f"{tps/sps:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

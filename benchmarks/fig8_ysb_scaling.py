@@ -1,0 +1,43 @@
+"""Fig. 8: YSB multicore scalability — adapted to this 1-core container.
+
+The paper scales worker threads on 12/32-core machines.  Here parallel
+speedup cannot be *measured* (1 core), so this benchmark reports the two
+quantities that determine it structurally:
+
+* throughput vs. partition count at fixed total work — flat means the
+  partitioned execution adds no per-partition cost beyond the halo;
+* the halo-duplication overhead ratio (duplicated ticks / total ticks),
+  which bounds the scaling loss of the synchronization-free parallel
+  execution: efficiency(n) ≥ 1 − halo·n/N.
+
+The real multi-device path (shard_map + ppermute halo exchange) is
+exercised for correctness in tests/test_parallel_multidev.py on 8 host
+devices, and its collective cost appears in the dry-run HLO.
+"""
+from __future__ import annotations
+
+from repro.core import boundary
+from repro.data import apps as A
+
+from .common import N_EVENTS, row, time_spe, time_tilt
+
+
+def run(n_events: int = N_EVENTS):
+    app = A.make_app("ysb")
+    data = app.make_input(n_events, 13)
+
+    sps, _ = time_spe(app, data, n_events)
+    row("fig8_ysb_spe", 0.0, f"{sps/1e6:.1f}Mev/s")
+
+    halos = boundary.halo_ticks(app.query.node)
+    halo = max(l for l, r in halos.values())
+    for n_parts in (1, 2, 4, 8, 16):
+        part = n_events // n_parts
+        tps, dt = time_tilt(app, data, n_events, part_len=part)
+        eff = 1.0 - halo * n_parts / n_events
+        row(f"fig8_ysb_tilt_p{n_parts}", dt * 1e6,
+            f"{tps/1e6:.1f}Mev/s;halo_eff={eff:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table: aggregates the dry-run JSONs (out/dryrun) into the
+EXPERIMENTS.md §Roofline table rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+HBM = 16e9  # v5e per-chip
+
+
+def run(out_dir: str = "out/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        row("roofline_table", 0.0, "no dry-run artifacts; run "
+            "`python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    print("# arch,shape,mesh,ok,per_dev_GB,fits,compute_s,memory_s,"
+          "collective_s,dominant,useful_ratio,roofline_frac")
+    n_ok = n_fail = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        if not d.get("ok"):
+            n_fail += 1
+            print(f"{tag},FAIL,{d.get('error', '?')[:80]}")
+            continue
+        n_ok += 1
+        gb = d.get("per_device_bytes", 0) / 1e9
+        fits = "fits" if d.get("per_device_bytes", 0) <= HBM else "OVER"
+        r = d.get("roofline")
+        if r:
+            print(f"{tag},ok,{gb:.2f},{fits},{r['compute_s']:.3f},"
+                  f"{r['memory_s']:.3f},{r['collective_s']:.3f},"
+                  f"{r['dominant']},{r['useful_ratio']:.2f},"
+                  f"{r['roofline_fraction']:.4f}")
+        else:
+            print(f"{tag},ok,{gb:.2f},{fits},-,-,-,-,-,-")
+    row("roofline_cells_ok", 0.0, f"{n_ok}")
+    row("roofline_cells_fail", 0.0, f"{n_fail}")
+
+
+if __name__ == "__main__":
+    run()

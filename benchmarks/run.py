@@ -1,0 +1,35 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+Scale with REPRO_BENCH_EVENTS (default 2M events — the paper uses 160M on
+a 32-core machine; this container is 1 core).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    n = int(os.environ.get("REPRO_BENCH_EVENTS", 2_000_000))
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    from . import (fig7_throughput, fig8_ysb_scaling, fig9_latency,
+                   fig10_fusion, roofline_table)
+
+    sections = {
+        "fig7": lambda: fig7_throughput.run(n),
+        "fig8": lambda: fig8_ysb_scaling.run(n),
+        "fig9": lambda: fig9_latency.run(min(n, 1_000_000)),
+        "fig10": lambda: fig10_fusion.run(n),
+        "roofline": roofline_table.run,
+    }
+    for name, fn in sections.items():
+        if only and only != name:
+            continue
+        print(f"## section {name}")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

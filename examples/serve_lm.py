@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests (prefill + continuous-batching
+decode loop) — the serving path the decode_* dry-run shapes compile.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args = ap.parse_args()
+    S.main(["--arch", args.arch, "--smoke", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16", "--requests", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,274 @@
+"""TiLT intermediate representation (paper §4).
+
+A streaming query is a DAG of :class:`Node` objects, each defining an output
+*temporal object* as a functional transformation of its inputs over a time
+domain ``TDom(Ts, Te, prec)`` (paper §4.1).  The node vocabulary is the
+minimal set the paper identifies:
+
+* :class:`Input`    — a source temporal object (``~stock``).
+* :class:`Const`    — a constant temporal object (always valid).
+* :class:`Map`      — elementwise functional transformation of one or more
+                      temporal objects at the *same* time instant.  Covers
+                      Select and temporal Join (binary Map with strict-overlap
+                      φ semantics) from Fig. 1/4.
+* :class:`Where`    — conditional nulling: value passes through, validity is
+                      ANDed with a predicate (Fig. 4 ``~where``).
+* :class:`Shift`    — time shift: ``out[t] = in[t - delta]``.
+* :class:`Reduce`   — ``⊕(op, ~in[t-window : t])`` on a (possibly strided)
+                      output domain: sliding/tumbling window aggregation.
+* :class:`Interp`   — gap fill (imputation/resampling support): values at
+                      invalid ticks are reconstructed from neighbours within
+                      a bounded ``max_gap`` (hold / linear interpolation).
+
+φ-semantics (paper eq. 1): every node computes a ``(value, valid)`` pair per
+tick; arithmetic on φ yields φ, hence ``Map.valid = AND(arg valids)``;
+``Reduce`` folds only valid ticks and yields φ on empty windows.
+
+Precision & alignment: each node carries ``prec``.  A node with precision
+``q`` reads an argument with precision ``p`` at output time ``τ`` using the
+snapshot *hold* rule (stream.py): arg tick ``(τ - t0)//p - 1``.  The frontend
+enforces ``p | q`` or ``q | p`` so alignment is a static gather.
+
+Time is left symbolic: nodes never store ``Ts``/``Te``.  Boundary resolution
+(boundary.py) turns the infinite domain into a partition contract, and
+compile.py instantiates the query on concrete grids — this mirrors the
+paper's Fig. 3(a→b) pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Optional, Sequence
+
+__all__ = [
+    "Node", "Input", "Const", "Map", "Where", "Shift", "Reduce", "Interp",
+    "topo_order", "free_inputs", "validate",
+]
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Node:
+    """Base temporal-expression node. Nodes are hashable by identity."""
+
+    prec: int
+    name: str
+
+    @property
+    def args(self) -> tuple["Node", ...]:
+        return ()
+
+    def _replace_args(self, new_args: Sequence["Node"]) -> "Node":
+        assert not new_args
+        return self
+
+
+def _mk_name(prefix: str) -> str:
+    return f"{prefix}_{next(_ids)}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Input(Node):
+    """Source temporal object.  ``fields`` documents payload structure."""
+
+    fields: tuple[str, ...] = ()
+
+    @staticmethod
+    def make(name: str, prec: int = 1, fields: tuple[str, ...] = ()) -> "Input":
+        return Input(prec=prec, name=name, fields=fields)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Node):
+    value: Any = 0.0
+
+    @staticmethod
+    def make(value: Any, prec: int = 1) -> "Const":
+        return Const(prec=prec, name=_mk_name("const"), value=value)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Map(Node):
+    """Elementwise transformation at aligned time instants.
+
+    ``fn`` maps the argument *values* (pytrees) to the output value.  It must
+    be a pure jnp-traceable function.  Validity is the AND of argument
+    validities (strict-overlap Join semantics for arity ≥ 2).
+
+    With ``phi_aware=True`` the function instead receives ``(value, valid)``
+    pairs and returns a ``(value, valid)`` pair — this expresses φ-sensitive
+    expressions like the paper's ``(~x[t] != φ) ? ~x[t] : ~avg[t]``
+    (imputation / coalesce / left-join patterns).
+    """
+
+    fn: Callable[..., Any] = None
+    phi_aware: bool = False
+    _args: tuple[Node, ...] = ()
+
+    @property
+    def args(self) -> tuple[Node, ...]:
+        return self._args
+
+    def _replace_args(self, new_args):
+        return dataclasses.replace(self, _args=tuple(new_args))
+
+    @staticmethod
+    def make(fn: Callable[..., Any], args: Sequence[Node],
+             prec: Optional[int] = None, name: Optional[str] = None,
+             phi_aware: bool = False) -> "Map":
+        args = tuple(args)
+        q = prec if prec is not None else max(a.prec for a in args)
+        for a in args:
+            if q % a.prec != 0 and a.prec % q != 0:
+                raise ValueError(
+                    f"precision mismatch: arg {a.name} prec={a.prec} vs out prec={q}")
+        return Map(prec=q, name=name or _mk_name("map"), fn=fn,
+                   phi_aware=phi_aware, _args=args)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Where(Node):
+    """``out[t] = pred(in[t]) ? in[t] : φ``."""
+
+    pred: Callable[[Any], Any] = None
+    _args: tuple[Node, ...] = ()
+
+    @property
+    def args(self) -> tuple[Node, ...]:
+        return self._args
+
+    def _replace_args(self, new_args):
+        return dataclasses.replace(self, _args=tuple(new_args))
+
+    @staticmethod
+    def make(pred: Callable[[Any], Any], arg: Node,
+             name: Optional[str] = None) -> "Where":
+        return Where(prec=arg.prec, name=name or _mk_name("where"),
+                     pred=pred, _args=(arg,))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Shift(Node):
+    """``out[t] = in[t - delta]`` (delta in time units, multiple of prec)."""
+
+    delta: int = 0
+    _args: tuple[Node, ...] = ()
+
+    @property
+    def args(self) -> tuple[Node, ...]:
+        return self._args
+
+    def _replace_args(self, new_args):
+        return dataclasses.replace(self, _args=tuple(new_args))
+
+    @staticmethod
+    def make(arg: Node, delta: int, name: Optional[str] = None,
+             prec: Optional[int] = None) -> "Shift":
+        # delta need not be a multiple of the precision: the hold-alignment
+        # rule (latest tick ≤ τ−delta) gives sub-precision shifts exact
+        # snapshot semantics.  ``prec`` re-domains the result (e.g. shifting
+        # a strided aggregate onto the fine grid to broadcast window stats
+        # over the window's own ticks).
+        return Shift(prec=prec or arg.prec, name=name or _mk_name("shift"),
+                     delta=delta, _args=(arg,))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Reduce(Node):
+    """``out[t] = ⊕(op, ~in[t - window : t])`` on an output domain of
+    precision ``prec`` (== stride).  ``window`` is in time units and must be
+    a multiple of the input precision.
+
+    ``op`` is a key into reduction.REDUCTIONS (sum/count/mean/max/min/...)
+    or a custom :class:`reduction.Reduction`.
+    """
+
+    op: Any = "sum"
+    window: int = 0
+    field: Optional[str] = None  # reduce a single payload field of a dict stream
+    _args: tuple[Node, ...] = ()
+
+    @property
+    def args(self) -> tuple[Node, ...]:
+        return self._args
+
+    def _replace_args(self, new_args):
+        return dataclasses.replace(self, _args=tuple(new_args))
+
+    @staticmethod
+    def make(op: Any, arg: Node, window: int, stride: Optional[int] = None,
+             field: Optional[str] = None, name: Optional[str] = None) -> "Reduce":
+        stride = stride if stride is not None else arg.prec
+        if window % arg.prec != 0:
+            raise ValueError("window must be a multiple of input precision")
+        if stride % arg.prec != 0:
+            raise ValueError("stride must be a multiple of input precision")
+        return Reduce(prec=stride, name=name or _mk_name(f"{op}w{window}"),
+                      op=op, window=window, field=field, _args=(arg,))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Interp(Node):
+    """Gap reconstruction for signal imputation / resampling.
+
+    mode='hold':   last valid value within max_gap ticks.
+    mode='linear': linear interpolation between the nearest valid neighbours
+                   within ±max_gap ticks (paper's resampling app [55]).
+    Output precision may differ from input precision (resampling).
+    """
+
+    mode: str = "hold"
+    max_gap: int = 0  # time units; bounds the lookback/lookahead
+    _args: tuple[Node, ...] = ()
+
+    @property
+    def args(self) -> tuple[Node, ...]:
+        return self._args
+
+    def _replace_args(self, new_args):
+        return dataclasses.replace(self, _args=tuple(new_args))
+
+    @staticmethod
+    def make(arg: Node, mode: str, max_gap: int, prec: Optional[int] = None,
+             name: Optional[str] = None) -> "Interp":
+        return Interp(prec=prec or arg.prec, name=name or _mk_name(f"interp_{mode}"),
+                      mode=mode, max_gap=max_gap, _args=(arg,))
+
+
+# ---------------------------------------------------------------------------
+# DAG utilities
+# ---------------------------------------------------------------------------
+
+def topo_order(root: Node) -> list[Node]:
+    """Post-order (deps first) topological order of the expression DAG."""
+    seen: dict[int, Node] = {}
+    order: list[Node] = []
+
+    def visit(n: Node):
+        if id(n) in seen:
+            return
+        seen[id(n)] = n
+        for a in n.args:
+            visit(a)
+        order.append(n)
+
+    visit(root)
+    return order
+
+
+def free_inputs(root: Node) -> list[Input]:
+    return [n for n in topo_order(root) if isinstance(n, Input)]
+
+
+def validate(root: Node) -> None:
+    """Sanity-check precisions and windows along the DAG."""
+    for n in topo_order(root):
+        if isinstance(n, Reduce):
+            (a,) = n.args
+            assert n.window % a.prec == 0, n.name
+            assert n.prec % a.prec == 0, (
+                f"{n.name}: stride {n.prec} not a multiple of input prec {a.prec}")
+        for a in n.args:
+            assert (n.prec % a.prec == 0) or (a.prec % n.prec == 0), (
+                f"{n.name}: unalignable precisions {n.prec} vs {a.prec}")

@@ -1,0 +1,269 @@
+"""Partitioned / distributed TiLT query execution (paper §6.2, Fig. 6).
+
+Boundary resolution gives a per-input halo contract; this module turns it
+into three execution strategies:
+
+* :func:`partition_run`    — host loop over time partitions (the paper's
+  worker-thread model, one partition at a time).  Used by tests to assert
+  partition invariance and by the latency-bounded-throughput benchmark
+  (partition size == batch size knob of Fig. 9).
+
+* :func:`shard_map_run`    — SPMD execution over a mesh axis: the timeline is
+  sharded across devices, and each device fetches its lookback/lookahead halo
+  from its neighbours with ``jax.lax.ppermute`` (a `collective-permute` on
+  TPU ICI — the cheapest collective there is; one hop, no reduction tree).
+  After the halo exchange the computation is embarrassingly parallel —
+  exactly the paper's "synchronization-free worker" property, recast as SPMD.
+
+* :class:`StreamRunner`    — continuous operation: consume unbounded streams
+  chunk by chunk, carrying the halo *tail* of each input between calls as
+  the only state.  The state size is the boundary contract — independent of
+  stream length — which is what makes long-running queries restartable
+  (the tail is checkpointable; see train/checkpoint.py integration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import compile as qcompile
+from .stream import SnapshotGrid
+
+__all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
+           "slice_grid"]
+
+
+def _slice_pad(value, valid, lo: int, hi: int):
+    """Slice ticks [lo, hi) of a grid, padding out-of-range with φ."""
+    T = valid.shape[0]
+    lo_c, hi_c = max(lo, 0), min(hi, T)
+    pad_l, pad_r = lo_c - lo, hi - hi_c
+
+    def one(leaf):
+        s = jax.lax.slice_in_dim(leaf, lo_c, max(hi_c, lo_c), axis=0)
+        if pad_l or pad_r:
+            cfg = [(pad_l, pad_r)] + [(0, 0)] * (leaf.ndim - 1)
+            s = jnp.pad(s, cfg)
+        return s
+
+    v = jax.tree_util.tree_map(one, value)
+    m = one(valid) if not (pad_l or pad_r) else jnp.pad(
+        jax.lax.slice_in_dim(valid, lo_c, max(hi_c, lo_c), axis=0),
+        [(pad_l, pad_r)])
+    return v, m
+
+
+def slice_grid(grid: SnapshotGrid, t0: int, t_end: int) -> SnapshotGrid:
+    """Grid restricted to (t0, t_end]; out-of-range ticks are φ."""
+    p = grid.prec
+    assert (t0 - grid.t0) % p == 0 and (t_end - t0) % p == 0
+    lo = (t0 - grid.t0) // p
+    hi = (t_end - grid.t0) // p
+    v, m = _slice_pad(grid.value, grid.valid, lo, hi)
+    return SnapshotGrid(value=v, valid=m, t0=t0, prec=p)
+
+
+def partition_run(exe: qcompile.CompiledQuery,
+                  inputs: Dict[str, SnapshotGrid],
+                  out_t0: int, n_parts: int,
+                  interpreted: bool = False) -> SnapshotGrid:
+    """Run ``n_parts`` partitions of ``exe.out_len`` output ticks each,
+    starting at ``out_t0``, stitching the outputs."""
+    span = exe.out_len * exe.out_prec
+    outs_v, outs_m = [], []
+    for k in range(n_parts):
+        p0 = out_t0 + k * span
+        part_in = {}
+        for name, spec in exe.input_specs.items():
+            g = inputs[name]
+            part_in[name] = _grid_window(g, p0 + spec.t0, spec.length)
+        res = (exe.run_interpreted(part_in) if interpreted
+               else exe.fn(part_in))
+        outs_v.append(res[0])
+        outs_m.append(res[1])
+    value = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *outs_v)
+    valid = jnp.concatenate(outs_m, axis=0)
+    return SnapshotGrid(value=value, valid=valid, t0=out_t0,
+                        prec=exe.out_prec)
+
+
+def _grid_window(g: SnapshotGrid, t0: int, length: int):
+    lo = (t0 - g.t0) // g.prec
+    return _slice_pad(g.value, g.valid, lo, lo + length)
+
+
+def shard_map_run(exe: qcompile.CompiledQuery,
+                  inputs: Dict[str, SnapshotGrid],
+                  mesh: Mesh, axis: str = "data") -> SnapshotGrid:
+    """SPMD partitioned execution: one partition per device along ``axis``.
+
+    Each input's *core* region (no halo) is sharded along time; halos move
+    between neighbours via ppermute.  ``exe`` must be compiled with
+    ``out_len == global_out_len // mesh.shape[axis]``.
+    """
+    n = mesh.shape[axis]
+    span = exe.out_len * exe.out_prec  # per-shard output span
+
+    specs = exe.input_specs
+    core_len = {name: span * n // s.prec for name, s in specs.items()}
+    halo_l = {name: -s.t0 // s.prec for name, s in specs.items()}
+    halo_r = {name: s.length - (-s.t0 // s.prec) - span // s.prec
+              for name, s in specs.items()}
+
+    def local_body(*flat):
+        local = dict(zip(sorted(specs), flat))
+        full = {}
+        for name in sorted(specs):
+            v, m = local[name]
+            hl, hr = halo_l[name], halo_r[name]
+            right_perm = [(i, i + 1) for i in range(n - 1)]
+            left_perm = [(i + 1, i) for i in range(n - 1)]
+
+            def xch(leaf, cnt, perm, take_tail):
+                if cnt == 0 or n == 1:
+                    shp = (0,) + leaf.shape[1:]
+                    return jnp.zeros(shp, leaf.dtype)
+                part = leaf[-cnt:] if take_tail else leaf[:cnt]
+                return jax.lax.ppermute(part, axis, perm)
+
+            if hl:
+                lv = jax.tree_util.tree_map(
+                    lambda x: _xch_pad(x, hl, right_perm, True, axis, n), v)
+                lm = _xch_pad(m, hl, right_perm, True, axis, n)
+            else:
+                lv = jax.tree_util.tree_map(
+                    lambda x: x[:0], v)
+                lm = m[:0]
+            if hr:
+                rv = jax.tree_util.tree_map(
+                    lambda x: _xch_pad(x, hr, left_perm, False, axis, n), v)
+                rm = _xch_pad(m, hr, left_perm, False, axis, n)
+            else:
+                rv = jax.tree_util.tree_map(lambda x: x[:0], v)
+                rm = m[:0]
+            fv = jax.tree_util.tree_map(
+                lambda a, b, c: jnp.concatenate([a, b, c], axis=0), lv, v, rv)
+            fm = jnp.concatenate([lm, m, rm], axis=0)
+            full[name] = (fv, fm)
+        return exe.trace_fn(full)
+
+    from jax.experimental.shard_map import shard_map
+    in_specs = tuple(P(axis) for _ in sorted(specs))
+    flat_in = tuple(
+        (inputs[name].value, inputs[name].valid) for name in sorted(specs))
+    sharded = shard_map(local_body, mesh=mesh,
+                        in_specs=in_specs,
+                        out_specs=(P(axis), P(axis)),
+                        check_rep=False)
+    # shard the core inputs along time
+    placed = []
+    for name, (v, m) in zip(sorted(specs), flat_in):
+        assert m.shape[0] == core_len[name], (
+            f"input {name}: expected core length {core_len[name]}, "
+            f"got {m.shape[0]} — supply exactly the output-span region")
+        sh = NamedSharding(mesh, P(axis))
+        placed.append((jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sh), v), jax.device_put(m, sh)))
+    val, msk = jax.jit(sharded)(*placed)
+    return SnapshotGrid(value=val, valid=msk, t0=0, prec=exe.out_prec)
+
+
+def _xch_pad(leaf, cnt, perm, take_tail, axis, n):
+    """ppermute a halo slab; devices with no neighbour receive zeros (φ)."""
+    part = leaf[-cnt:] if take_tail else leaf[:cnt]
+    return jax.lax.ppermute(part, axis, perm)
+
+
+def batch_run(exe: qcompile.CompiledQuery,
+              inputs: Dict[str, SnapshotGrid]) -> SnapshotGrid:
+    """Keyed/partitioned-stream execution (paper §6.2's *other* parallelism
+    axis): input grids carry a leading key axis (K, T) — one sub-stream per
+    stock symbol / user / campaign — and the compiled query is vmapped over
+    it.  Composes with time partitioning (vmap outside, halo inside), and
+    the key axis shards over the mesh exactly like a batch axis.
+    """
+    names = sorted(exe.input_specs)
+
+    def one(*flat):
+        return exe.trace_fn(dict(zip(names, flat)))
+
+    flat_in = []
+    for n in names:
+        spec = exe.input_specs[n]
+        g = inputs[n]
+        hl = -spec.t0 // spec.prec            # lookback ticks (φ-padded)
+        core = (exe.out_len * exe.out_prec) // spec.prec
+        hr = spec.length - hl - core          # lookahead ticks
+        v = jax.tree_util.tree_map(
+            lambda x: jnp.pad(x, [(0, 0), (hl, hr)]
+                              + [(0, 0)] * (x.ndim - 2)), g.value)
+        m = jnp.pad(g.valid, [(0, 0), (hl, hr)])
+        flat_in.append((v, m))
+    val, msk = jax.jit(jax.vmap(one))(*flat_in)
+    return SnapshotGrid(value=val, valid=msk, t0=0, prec=exe.out_prec)
+
+
+@dataclasses.dataclass
+class StreamRunner:
+    """Continuous chunked execution with carried halo state.
+
+    The only cross-chunk state is, per input, the trailing ``left_halo``
+    ticks of the previous chunk — i.e. exactly the boundary-resolution
+    contract.  (Queries with lookahead delay their output by the lookahead;
+    we keep lookahead-free operation the default and raise otherwise.)
+    """
+
+    exe: qcompile.CompiledQuery
+    _tails: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+    _t: int = 0  # absolute time of the next output partition start
+
+    def __post_init__(self):
+        for name, s in self.exe.input_specs.items():
+            hr = s.length - (-s.t0 // s.prec) - (
+                self.exe.out_len * self.exe.out_prec) // s.prec
+            if hr > 0:
+                raise NotImplementedError(
+                    "StreamRunner supports lookback-only queries "
+                    f"(input {name} has lookahead)")
+
+    def step(self, chunks: Dict[str, SnapshotGrid]) -> SnapshotGrid:
+        """Feed exactly one partition's worth of new core ticks per input."""
+        part_in = {}
+        for name, spec in self.exe.input_specs.items():
+            g = chunks[name]
+            hl = -spec.t0 // spec.prec
+            core = (self.exe.out_len * self.exe.out_prec) // spec.prec
+            assert g.valid.shape[0] == core, (name, g.valid.shape, core)
+            if name in self._tails:
+                tv, tm = self._tails[name]
+            else:  # stream start: φ halo
+                tv = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((hl,) + x.shape[1:], x.dtype), g.value)
+                tm = jnp.zeros((hl,), bool)
+            fv = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), tv, g.value)
+            fm = jnp.concatenate([tm, g.valid], axis=0)
+            part_in[name] = (fv, fm)
+            if hl:
+                self._tails[name] = (
+                    jax.tree_util.tree_map(lambda x: x[-hl:], fv), fm[-hl:])
+        v, m = self.exe.fn(part_in)
+        out = SnapshotGrid(value=v, valid=m, t0=self._t, prec=self.exe.out_prec)
+        self._t += self.exe.out_len * self.exe.out_prec
+        return out
+
+    def state(self) -> Dict[str, tuple]:
+        """Checkpointable runner state (host arrays)."""
+        return {k: jax.tree_util.tree_map(np.asarray, v)
+                for k, v in self._tails.items()} | {"__t": self._t}
+
+    def restore(self, state: Dict) -> None:
+        self._t = state.pop("__t")
+        self._tails = {k: jax.tree_util.tree_map(jnp.asarray, v)
+                       for k, v in state.items()}

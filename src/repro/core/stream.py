@@ -1,0 +1,200 @@
+"""Stream representations for TiLT-X.
+
+Two representations of a temporal object (paper §4.1, §6.1.1):
+
+* :class:`EventStream` — host-side sequence of events ``(start, end, payload]``.
+  This is the ingestion format and the oracle-side representation used by the
+  event-centric baseline SPE and by tests.
+
+* :class:`SnapshotGrid` — device-side dense materialization of the temporal
+  object on the ``TDom`` precision grid.  This is the TPU-native adaptation of
+  the paper's snapshot buffer (see DESIGN.md §2): instead of storing only
+  change points with data-dependent loop counters, we store the value at every
+  grid tick together with a validity mask (``valid == False`` encodes the null
+  value φ) and vectorize over time.
+
+Grid convention (used consistently across the package):
+
+* All times are integers in an abstract base unit.
+* A grid is parametrized by ``t0`` (exclusive left edge), precision ``p`` and
+  length ``T``.  Tick ``i`` carries the value of the temporal object at time
+  ``t0 + (i + 1) * p``; i.e. the grid covers the half-open interval
+  ``(t0, t0 + T*p]`` sampled at multiples of ``p``.
+* An event ``(s, e, v]`` is active at time ``τ`` iff ``s < τ <= e``.
+* Snapshot-buffer *hold* semantics: the value of a temporal object with
+  precision ``p`` at an arbitrary time ``τ`` is the value of the latest tick at
+  or before ``τ``, i.e. tick ``i = (τ - t0)//p - 1`` (invalid if ``i < 0``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Event", "EventStream", "SnapshotGrid", "events_to_grid", "grid_to_events"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """A single event: payload valid on the half-open interval ``(start, end]``."""
+
+    start: int
+    end: int
+    payload: Any  # scalar or dict-of-scalars
+
+    def active_at(self, t: int) -> bool:
+        return self.start < t <= self.end
+
+
+class EventStream:
+    """Host-side, time-ordered sequence of events (the paper's input format)."""
+
+    def __init__(self, events: Sequence[Event], name: str = "stream"):
+        self.events = sorted(events, key=lambda e: (e.start, e.end))
+        self.name = name
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def value_at(self, t: int):
+        """Oracle: payload of the event active at ``t`` or None (φ).
+
+        With overlapping events, the *latest-starting* active event wins
+        (deterministic tie-break; matches events_to_grid which writes events
+        in start order so later starts overwrite).
+        """
+        hit = None
+        for e in self.events:
+            if e.active_at(t):
+                hit = e.payload
+        return hit
+
+    @staticmethod
+    def regular(values: Sequence[Any], period: int = 1, t0: int = 0,
+                name: str = "stream") -> "EventStream":
+        """Fixed-frequency signal: event ``k`` covers ``(t0+k*p, t0+(k+1)*p]``."""
+        evs = [Event(t0 + k * period, t0 + (k + 1) * period, v)
+               for k, v in enumerate(values)]
+        return EventStream(evs, name=name)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SnapshotGrid:
+    """Dense on-grid materialization of a temporal object.
+
+    ``value`` is a pytree of arrays whose leading axis is time (length T);
+    ``valid`` is a bool[T] mask (False == φ).  ``t0`` and ``prec`` are static.
+    """
+
+    value: Any           # pytree of jnp arrays, leading axis T
+    valid: jax.Array     # bool[T]
+    t0: int              # static
+    prec: int            # static
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.value, self.valid), (self.t0, self.prec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        value, valid = children
+        t0, prec = aux
+        return cls(value=value, valid=valid, t0=t0, prec=prec)
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def length(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def t_end(self) -> int:
+        return self.t0 + self.length * self.prec
+
+    def tick_time(self, i: int) -> int:
+        return self.t0 + (i + 1) * self.prec
+
+    def leaves(self):
+        return jax.tree_util.tree_leaves(self.value)
+
+    def replace(self, **kw) -> "SnapshotGrid":
+        return dataclasses.replace(self, **kw)
+
+
+def events_to_grid(stream: EventStream, t0: int, t_end: int, prec: int,
+                   fill: float = 0.0, dtype=jnp.float32) -> SnapshotGrid:
+    """Grid-snap an event stream onto ``TDom(t0, t_end, prec)``.
+
+    Ticks with no active event get ``valid=False`` (φ).  Overlapping events:
+    the latest-starting event wins (bounded-capacity multi-value snapshots are
+    handled by the K_overlap variant in data/streams.py where needed).
+    """
+    assert (t_end - t0) % prec == 0, "grid extent must be a multiple of prec"
+    T = (t_end - t0) // prec
+
+    # Determine payload structure from the first event.
+    sample = stream.events[0].payload if stream.events else 0.0
+    is_dict = isinstance(sample, dict)
+    keys = list(sample.keys()) if is_dict else None
+
+    vals = {k: np.full((T,), fill, dtype=np.float64) for k in (keys or ["v"])}
+    valid = np.zeros((T,), dtype=bool)
+
+    for e in stream.events:
+        # Tick i lives at time τ_i = t0 + (i+1)p; the event is active at τ_i
+        # iff  s < τ_i <= e.  Hence (integer floor division, valid for
+        # negatives via Python's //):
+        #   first active tick:  i+1 > (s-t0)/p  ->  i = floor((s-t0)/p)
+        #   last  active tick:  i+1 <= (e-t0)/p ->  i = floor((e-t0)/p) - 1
+        first_i = (e.start - t0) // prec
+        last_i = (e.end - t0) // prec - 1
+        a = max(0, first_i)
+        b = min(T - 1, last_i)
+        if b < a:
+            continue
+        if is_dict:
+            for k in keys:
+                vals[k][a:b + 1] = e.payload[k]
+        else:
+            vals["v"][a:b + 1] = e.payload
+        valid[a:b + 1] = True
+
+    value = ({k: jnp.asarray(v, dtype=dtype) for k, v in vals.items()}
+             if is_dict else jnp.asarray(vals["v"], dtype=dtype))
+    return SnapshotGrid(value=value, valid=jnp.asarray(valid), t0=t0, prec=prec)
+
+
+def grid_to_events(grid: SnapshotGrid) -> EventStream:
+    """Change-compress a grid back into events (inverse of events_to_grid).
+
+    Consecutive ticks with equal payload and valid=True merge into one event —
+    this is the paper's snapshot-buffer compression, applied on egress.
+    """
+    valid = np.asarray(grid.valid)
+    value = jax.tree_util.tree_map(np.asarray, grid.value)
+    is_dict = isinstance(value, dict)
+    T = valid.shape[0]
+    events: list[Event] = []
+    i = 0
+    while i < T:
+        if not valid[i]:
+            i += 1
+            continue
+        j = i
+        def payload_at(k):
+            return ({kk: vv[k].item() for kk, vv in value.items()}
+                    if is_dict else value[k].item())
+        pi = payload_at(i)
+        while j + 1 < T and valid[j + 1] and payload_at(j + 1) == pi:
+            j += 1
+        # ticks i..j  ->  times (t0 + i*p, t0 + (j+1)*p]
+        events.append(Event(grid.t0 + i * grid.prec,
+                            grid.t0 + (j + 1) * grid.prec, pi))
+        i = j + 1
+    return EventStream(events)

@@ -1,0 +1,418 @@
+"""The paper's benchmark applications (Table 2 + Appendix A) in both engines.
+
+Each application factory returns an :class:`App` carrying:
+* ``query``      — the TiLT query (frontend → IR),
+* ``spe``        — the equivalent EventSPE pipeline (Trill stand-in),
+* ``make_input`` — synthetic data generator matching the paper's datasets
+  (random floats at fixed frequency; random-walk prices for NYSE; synthetic
+  ECG; etc.),
+* dataset/time-scale metadata.
+
+Window sizes follow the paper's descriptions (Appendix A); time unit = one
+input tick (the generators produce fixed-frequency streams, e.g. the paper's
+1000 Hz synthetic signal ⇒ 1 tick = 1 ms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.frontend import TStream
+from ..spe import eventspe as es
+
+__all__ = ["App", "APPS", "make_app", "temporal_op", "TEMPORAL_OPS"]
+
+
+@dataclasses.dataclass
+class App:
+    name: str
+    query: TStream               # TiLT IR
+    spe: es.Pipeline             # event-centric baseline
+    make_input: Callable[[int, int], dict]   # (n_events, seed) -> {name: np arrays}
+    input_prec: int = 1
+    description: str = ""
+
+
+def _randwalk(n, seed, mu=100.0, sigma=0.05):
+    rng = np.random.default_rng(seed)
+    return (mu + np.cumsum(rng.normal(0, sigma, n))).astype(np.float64)
+
+
+def _signal(n, seed, missing=0.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n)
+    valid = rng.random(n) >= missing
+    return x, valid
+
+
+def _dense_input(x, valid=None):
+    n = len(x)
+    return {"ts": np.arange(1, n + 1, dtype=np.int64),
+            "value": np.asarray(x, np.float64),
+            "valid": np.ones(n, bool) if valid is None else valid}
+
+
+# ---------------------------------------------------------------------------
+# 1. Trend-based trading (Fig. 2a): Avg(2), Join, Where
+# ---------------------------------------------------------------------------
+
+def trend_app(short: int = 20, long: int = 50) -> App:
+    s = TStream.source("in", prec=1)
+    q = (s.window(short).mean()
+         .join(s.window(long).mean(), lambda a, b: a - b, name="diff")
+         .where(lambda d: d > 0, name="uptrend"))
+
+    spe = es.Pipeline([
+        (es.WindowAgg("mean", short), ("in",), "a_s"),
+        (es.WindowAgg("mean", long), ("in",), "a_l"),
+        (es.Join(lambda a, b: a - b), ("a_s", "a_l"), "diff"),
+        (es.Where(lambda d: d > 0), ("diff",), "out"),
+    ])
+    return App("trend", q, spe,
+               lambda n, seed: {"in": _dense_input(_randwalk(n, seed))},
+               description="moving-average trend, NYSE-style prices")
+
+
+# ---------------------------------------------------------------------------
+# 2. Relative strength index: Shift, Join, Avg(2)
+# ---------------------------------------------------------------------------
+
+def rsi_app(period: int = 14) -> App:
+    s = TStream.source("in", prec=1)
+    delta = s.join(s.shift(1), lambda x, px: x - px, name="delta")
+    gain = delta.select(lambda d: jnp.maximum(d, 0.0), name="gain")
+    loss = delta.select(lambda d: jnp.maximum(-d, 0.0), name="loss")
+    ag = gain.window(period).mean()
+    al = loss.window(period).mean()
+    q = ag.join(al, lambda g, l: 100.0 - 100.0 / (1.0 + g / jnp.maximum(l, 1e-9)),
+                name="rsi")
+
+    spe = es.Pipeline([
+        (es.ShiftOp(1), ("in",), "prev"),
+        (es.Join(lambda x, p: x - p), ("in", "prev"), "delta"),
+        (es.Select(lambda d: np.maximum(d, 0.0)), ("delta",), "gain"),
+        (es.Select(lambda d: np.maximum(-d, 0.0)), ("delta",), "loss"),
+        (es.WindowAgg("mean", period), ("gain",), "ag"),
+        (es.WindowAgg("mean", period), ("loss",), "al"),
+        (es.Join(lambda g, l: 100.0 - 100.0 / (1.0 + g / np.maximum(l, 1e-9))),
+         ("ag", "al"), "out"),
+    ])
+    return App("rsi", q, spe,
+               lambda n, seed: {"in": _dense_input(_randwalk(n, seed))},
+               description="relative strength index momentum")
+
+
+# ---------------------------------------------------------------------------
+# 3. Normalization: Avg, StdDev, Join (z-score per tumbling window)
+# ---------------------------------------------------------------------------
+
+def znorm_app(win: int = 10) -> App:
+    s = TStream.source("in", prec=1)
+    # shift(-(win-1)) + hold-alignment broadcasts each tumbling window's
+    # stats onto the ticks of that same window (t+win-1 floors to the
+    # window-end tick for every t in the window).
+    mu = s.window(win, stride=win).mean().shift(-(win - 1), prec=1)
+    sd = s.window(win, stride=win).stddev().shift(-(win - 1), prec=1)
+    q = TStream.zip([s, mu, sd],
+                    lambda x, m, d: (x - m) / jnp.maximum(d, 1e-9),
+                    prec=1, name="znorm")
+
+    spe = es.Pipeline([
+        (es.WindowAgg("mean", win, stride=win), ("in",), "mu"),
+        (es.WindowAgg("stddev", win, stride=win), ("in",), "sd"),
+        (_SpeZnormJoin(win), ("in", "mu", "sd"), "out"),
+    ])
+    return App("znorm", q, spe,
+               lambda n, seed: {"in": _dense_input(_signal(n, seed)[0])},
+               description="z-score normalization, 10-tick tumbling window")
+
+
+class _SpeZnormJoin(es.Operator):
+    """3-way join assigning each event the stats of its own window.
+
+    (The event-centric engine needs a *custom* operator here — the exact
+    kind of inflexibility §3 attributes to fixed operator vocabularies.)
+    """
+
+    def __init__(self, win: int):
+        self.win = win
+
+    def __call__(self, xb, mub, sdb):
+        # window containing tick t ends at ceil(t/win)*win
+        wend = ((xb.ts + self.win - 1) // self.win) * self.win
+        idx = np.searchsorted(mub.ts, wend)
+        idx_ok = idx < len(mub.ts)
+        idx_c = np.clip(idx, 0, max(len(mub.ts) - 1, 0))
+        mu = np.asarray(mub.value)[idx_c]
+        sd = np.asarray(sdb.value)[idx_c]
+        ok = xb.valid & idx_ok & mub.valid[idx_c] & sdb.valid[idx_c]
+        val = (np.asarray(xb.value) - mu) / np.maximum(sd, 1e-9)
+        return es.Batch(xb.ts, val, ok)
+
+
+# ---------------------------------------------------------------------------
+# 4. Signal imputation: Avg, Shift, Join (fill gaps with window mean)
+# ---------------------------------------------------------------------------
+
+def impute_app(win: int = 10) -> App:
+    s = TStream.source("in", prec=1)
+    mu = s.window(win, stride=win).mean().shift(-(win - 1), prec=1)
+    q = s.coalesce(mu, name="imputed")
+
+    spe = es.Pipeline([
+        (es.WindowAgg("mean", win, stride=win), ("in",), "mu"),
+        (_SpeImputeJoin(win), ("in", "mu"), "out"),
+    ])
+
+    def mk(n, seed):
+        x, valid = _signal(n, seed, missing=0.1)
+        return {"in": _dense_input(x, valid)}
+
+    return App("impute", q, spe, mk,
+               description="fill missing samples with window mean (1000 Hz)")
+
+
+class _SpeImputeJoin(es.Operator):
+    def __init__(self, win: int):
+        self.win = win
+
+    def __call__(self, xb, mub):
+        wend = ((xb.ts + self.win - 1) // self.win) * self.win
+        idx = np.searchsorted(mub.ts, wend)
+        idx_ok = idx < len(mub.ts)
+        idx_c = np.clip(idx, 0, max(len(mub.ts) - 1, 0))
+        mu = np.asarray(mub.value)[idx_c]
+        mu_ok = idx_ok & mub.valid[idx_c]
+        val = np.where(xb.valid, np.asarray(xb.value), mu)
+        return es.Batch(xb.ts, val, xb.valid | mu_ok)
+
+
+# ---------------------------------------------------------------------------
+# 5. Resampling: Select, Join, Shift, Chop  (linear interpolation)
+# ---------------------------------------------------------------------------
+
+def resample_app(out_prec: int = 4, max_gap: int = 16) -> App:
+    # e.g. 1000 Hz -> 250 Hz with linear interpolation
+    s = TStream.source("in", prec=1)
+    q = s.resample(out_prec, max_gap=max_gap)
+
+    spe = es.Pipeline([
+        (es.InterpOp(1, out_prec, max_gap), ("in",), "out"),
+    ])
+
+    def mk(n, seed):
+        x, valid = _signal(n, seed, missing=0.05)
+        return {"in": _dense_input(x, valid)}
+
+    return App("resample", q, spe, mk,
+               description="linear-interpolation resampling 1000→250 Hz")
+
+
+# ---------------------------------------------------------------------------
+# 6. Pan-Tompkins QRS detection: Custom-Agg(3), Select, Avg
+# ---------------------------------------------------------------------------
+
+def pantomkins_app(fs: int = 200) -> App:
+    """Streaming Pan-Tompkins (derivative → square → MWI → adaptive
+    threshold via trailing-max custom agg; see Appendix A)."""
+    mwi_w = int(0.150 * fs)   # 150 ms moving-window integration
+    thr_w = 2 * fs            # 2 s trailing max for the adaptive threshold
+    s = TStream.source("in", prec=1)
+    deriv = s.join(s.shift(1), lambda x, px: x - px, name="deriv")
+    sq = deriv.select(lambda d: d * d, name="square")
+    mwi = sq.window(mwi_w).mean()
+    thr = mwi.window(thr_w).max().select(lambda m: 0.5 * m, name="thr")
+    q = mwi.join(thr, lambda sig, th: sig - th, name="qrs") \
+           .where(lambda d: d > 0, name="qrs_hit")
+
+    spe = es.Pipeline([
+        (es.ShiftOp(1), ("in",), "prev"),
+        (es.Join(lambda x, p: x - p), ("in", "prev"), "deriv"),
+        (es.Select(lambda d: d * d), ("deriv",), "sq"),
+        (es.WindowAgg("mean", mwi_w), ("sq",), "mwi"),
+        (es.WindowAgg("max", thr_w), ("mwi",), "mx"),
+        (es.Select(lambda m: 0.5 * m), ("mx",), "thr"),
+        (es.Join(lambda s_, t: s_ - t), ("mwi", "thr"), "d"),
+        (es.Where(lambda d: d > 0), ("d",), "out"),
+    ])
+
+    def mk(n, seed):
+        rng = np.random.default_rng(seed)
+        t = np.arange(n) / fs
+        ecg = (0.1 * np.sin(2 * np.pi * 1.0 * t)
+               + 1.2 * (np.sin(2 * np.pi * 1.2 * t) ** 63)  # QRS-ish spikes
+               + 0.05 * rng.normal(0, 1, n))
+        return {"in": _dense_input(ecg)}
+
+    return App("pantomkins", q, spe, mk,
+               description="QRS detection on synthetic ECG (MIMIC-III style)")
+
+
+# ---------------------------------------------------------------------------
+# 7. Vibration analysis: Max, Avg(2), Join(2), Custom-Agg
+# ---------------------------------------------------------------------------
+
+def vibration_app(win: int = 100) -> App:
+    """kurtosis + RMS + crest factor over a tumbling window (100 ticks =
+    100 ms at the paper's bearing-sensor rates)."""
+    s = TStream.source("in", prec=1)
+    kurt = s.window(win, stride=win).kurtosis()
+    rms = s.window(win, stride=win).rms()
+    amax = s.window(win, stride=win).absmax()
+    crest = amax.join(rms, lambda a, r: a / jnp.maximum(r, 1e-9), name="crest")
+    q = TStream.zip([kurt, rms, crest],
+                    lambda k, r, c: {"kurtosis": k, "rms": r, "crest": c},
+                    name="vib")
+
+    spe = es.Pipeline([
+        (es.WindowAgg("kurtosis", win, stride=win), ("in",), "k"),
+        (es.WindowAgg("rms", win, stride=win), ("in",), "r"),
+        (es.WindowAgg("absmax", win, stride=win), ("in",), "m"),
+        (es.Join(lambda a, r: a / np.maximum(r, 1e-9)), ("m", "r"), "c"),
+        (_SpeZip3(), ("k", "r", "c"), "out"),
+    ])
+
+    def mk(n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, 1, n) + 0.5 * np.sin(np.arange(n) * 0.1)
+        x[rng.random(n) < 0.001] *= 8.0  # bearing impacts
+        return {"in": _dense_input(x)}
+
+    return App("vibration", q, spe, mk,
+               description="kurtosis/RMS/crest-factor machine monitoring")
+
+
+# ---------------------------------------------------------------------------
+# 8. Fraud detection: Avg, StdDev, Shift, Join
+# ---------------------------------------------------------------------------
+
+class _SpeZip3(es.Operator):
+    def __call__(self, kb, rb, cb):
+        return es.Batch(kb.ts, {"kurtosis": np.asarray(kb.value),
+                                "rms": np.asarray(rb.value),
+                                "crest": np.asarray(cb.value)},
+                        kb.valid & rb.valid & cb.valid)
+
+
+def fraud_app(win: int = 1000) -> App:
+    """Flag transactions above μ+3σ of the *trailing* window (shifted one
+    tick so current transactions don't mask themselves)."""
+    s = TStream.source("in", prec=1)
+    mu = s.window(win).mean().shift(1)
+    sd = s.window(win).stddev().shift(1)
+    thr = mu.join(sd, lambda m, d: m + 3.0 * d, name="thr")
+    q = s.join(thr, lambda x, t: x - t, name="excess") \
+         .where(lambda e: e > 0, name="fraud")
+
+    spe = es.Pipeline([
+        (es.WindowAgg("mean", win), ("in",), "mu"),
+        (es.WindowAgg("stddev", win), ("in",), "sd"),
+        (es.ShiftOp(1), ("mu",), "mu1"),
+        (es.ShiftOp(1), ("sd",), "sd1"),
+        (es.Join(lambda m, d: m + 3.0 * d), ("mu1", "sd1"), "thr"),
+        (es.Join(lambda x, t: x - t), ("in", "thr"), "ex"),
+        (es.Where(lambda e: e > 0), ("ex",), "out"),
+    ])
+
+    def mk(n, seed):
+        rng = np.random.default_rng(seed)
+        amt = rng.lognormal(3.0, 1.0, n)
+        amt[rng.random(n) < 0.002] *= 50.0  # injected fraud
+        return {"in": _dense_input(amt)}
+
+    return App("fraud", q, spe, mk,
+               description="credit-card anomaly flagging (Kaggle-style)")
+
+
+# ---------------------------------------------------------------------------
+# Yahoo Streaming Benchmark: Select, Where, tumbling-window count
+# ---------------------------------------------------------------------------
+
+def ysb_app(win: int = 10) -> App:
+    s = TStream.source("in", prec=1)
+    views = s.where(lambda v: v["etype"] == 1.0, name="views")
+    q = views.window(win, stride=win).count(field="etype", name="cnt")
+
+    spe = es.Pipeline([
+        (es.Where(lambda v: v["etype"] == 1.0), ("in",), "views"),
+        (_SpeDictCount(win), ("views",), "out"),
+    ])
+
+    def mk(n, seed):
+        rng = np.random.default_rng(seed)
+        etype = (rng.integers(0, 3, n) == 1).astype(np.float64)
+        camp = rng.integers(0, 100, n).astype(np.float64)
+        return {"in": {"ts": np.arange(1, n + 1, dtype=np.int64),
+                       "value": {"etype": etype, "camp": camp},
+                       "valid": np.ones(n, bool)}}
+
+    return App("ysb", q, spe, mk,
+               description="Yahoo streaming benchmark (filter+project+count)")
+
+
+class _SpeDictCount(es.Operator):
+    def __init__(self, win):
+        self.agg = es.WindowAgg("count", win, stride=win)
+
+    def reset(self):
+        self.agg.reset()
+
+    def __call__(self, b):
+        return self.agg(es.Batch(b.ts, np.asarray(b.value["etype"]), b.valid))
+
+
+APPS = {
+    "trend": trend_app,
+    "rsi": rsi_app,
+    "znorm": znorm_app,
+    "impute": impute_app,
+    "resample": resample_app,
+    "pantomkins": pantomkins_app,
+    "vibration": vibration_app,
+    "fraud": fraud_app,
+    "ysb": ysb_app,
+}
+
+
+def make_app(name: str, **kw) -> App:
+    return APPS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# the four primitive temporal operations (Fig. 1 / Fig. 7a)
+# ---------------------------------------------------------------------------
+
+def temporal_op(name: str) -> App:
+    s = TStream.source("in", prec=1)
+    if name == "select":
+        q = s.select(lambda v: v + 1.0)
+        spe = es.Pipeline([(es.Select(lambda v: v + 1.0), ("in",), "out")])
+    elif name == "where":
+        q = s.where(lambda v: v % 2 == 0)
+        spe = es.Pipeline([(es.Where(lambda v: v % 2 == 0), ("in",), "out")])
+    elif name == "wsum":
+        q = s.window(10, stride=5).sum()
+        spe = es.Pipeline([(es.WindowAgg("sum", 10, 5), ("in",), "out")])
+    elif name == "join":
+        t = TStream.source("in2", prec=1)
+        q = s.join(t, lambda a, b: a + b)
+        spe = es.Pipeline([(es.Join(lambda a, b: a + b), ("in", "in2"), "out")])
+    else:  # pragma: no cover
+        raise KeyError(name)
+
+    def mk(n, seed):
+        rng = np.random.default_rng(seed)
+        d = {"in": _dense_input(np.floor(rng.random(n) * 100))}
+        if name == "join":
+            e = _dense_input(np.floor(rng.random(n) * 100))
+            e["valid"] = rng.random(n) > 0.3  # irregular second stream
+            d["in2"] = e
+        return d
+
+    return App(name, q, spe, mk, description=f"primitive op {name}")
+
+
+TEMPORAL_OPS = ("select", "where", "wsum", "join")

@@ -1,0 +1,101 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Production shape: the pipeline is a pure function of (seed, step), so
+
+* any worker can regenerate any batch (no coordination state),
+* restart-exactly is trivial: the checkpoint stores only ``step``,
+* elastic re-sharding changes nothing (batches are generated globally and
+  sharded by device_put, matching how a real tokenized-shard reader would
+  hand out per-host slices).
+
+Also hosts the TiLT-preprocessing integration: ``StreamFeaturePipeline``
+runs a compiled TiLT query as the feature extractor over a raw signal
+stream and emits model-ready batches — the paper's engine as the data
+plane of the training framework (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+__all__ = ["TokenPipeline", "StreamFeaturePipeline"]
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    """Synthetic LM token batches (B, S) with next-token labels."""
+
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict):
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+
+    def next(self) -> Dict[str, jax.Array]:
+        rng = np.random.default_rng((self.seed << 20) + self.step)
+        # every token is emitted twice in a row: the second occurrence is
+        # exactly predictable, so CE has a clean learnable floor ≈ ½·ln V
+        base = rng.integers(0, self.cfg.vocab,
+                            (self.batch, self.seq // 2 + 1))
+        toks = np.repeat(base, 2, axis=1)[:, :self.seq + 1]
+        self.step += 1
+        batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        if self.cfg.family == "encdec":
+            frames = rng.normal(
+                0, 1, (self.batch, self.cfg.enc_seq, self.cfg.d_model))
+            batch["frames"] = jnp.asarray(frames, jnp.float32)
+        return batch
+
+
+@dataclasses.dataclass
+class StreamFeaturePipeline:
+    """TiLT query as a training-data feature extractor.
+
+    Wraps a compiled TiLT query + a raw-signal generator; each ``next()``
+    advances the continuous StreamRunner one partition and returns the
+    (values, validity) features.  The runner tail state is checkpointable
+    (train/checkpoint.py stores it in the manifest) so feature extraction
+    resumes exactly after restart.
+    """
+
+    exe: object          # core.compile.CompiledQuery
+    gen_seed: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        from ..core.parallel import StreamRunner
+        self.runner = StreamRunner(self.exe)
+
+    def state(self) -> dict:
+        return {"step": self.step, "runner": self.runner.state()}
+
+    def restore(self, state: dict):
+        self.step = int(state["step"])
+        self.runner.restore(state["runner"])
+
+    def next(self):
+        from ..core.stream import SnapshotGrid
+        rng = np.random.default_rng((self.gen_seed << 20) + self.step)
+        chunks = {}
+        for name, spec in self.exe.input_specs.items():
+            core = (self.exe.out_len * self.exe.out_prec) // spec.prec
+            vals = rng.normal(0, 1, core).astype(np.float32)
+            chunks[name] = SnapshotGrid(
+                value=jnp.asarray(vals),
+                valid=jnp.ones((core,), bool), t0=0, prec=spec.prec)
+        self.step += 1
+        return self.runner.step(chunks)

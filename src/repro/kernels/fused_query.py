@@ -1,0 +1,104 @@
+"""Fully-fused trend-query Pallas kernel (paper §5.2's end state).
+
+The optimized TiLT IR for the stock-trend query is a single expression:
+
+    ~filter[t] = { s10 = ⊕(+, ~stock[t-W1:t]);  s20 = ⊕(+, ~stock[t-W2:t])
+                   j = s10/W1 - s20/W2;  return (j > 0) ? j : φ }
+
+This kernel IS that expression as one ``pallas_call``: each grid step loads
+two W2-wide rows of the timeline into VMEM, computes *both* window sums
+from one prefix/suffix scan pair (any ≤W2 trailing-window sum over two
+adjacent rows is ``suffix_prev[... ] + prefix_cur[j] − prefix_cur[j−w]``),
+applies the join and the predicate, and writes (value, validity) — the
+source is read exactly once per tick, intermediates never leave VMEM.
+
+Dense-stream fast path: assumes all input ticks valid (the trend app's
+price stream); leading partial windows divide by the available count
+(derived from the absolute position, no mask channel needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_trend", "fused_trend_ref"]
+
+
+def _kernel(prev_ref, cur_ref, val_ref, ok_ref, *, w1, w2):
+    prev = prev_ref[...].astype(jnp.float32)   # (1, W2) row k-1 (padded idx)
+    cur = cur_ref[...].astype(jnp.float32)     # (1, W2) row k
+    W2 = cur.shape[-1]
+    k = pl.program_id(0)
+
+    prefix = jnp.cumsum(cur, axis=-1)
+    suffix = jnp.cumsum(prev[:, ::-1], axis=-1)[:, ::-1]
+    j = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 1)   # lane in row
+    pos = k * W2 + j                                        # global tick
+
+    def wsum(w):
+        # trailing-w sum ending at lane j (window spans ≤ 2 rows)
+        intra = prefix - jnp.where(j >= w, _shift_r(prefix, w), 0.0)
+        # contribution of row k-1: last (w-1-j) elements, when j < w-1
+        need = w - 1 - j
+        tail = jnp.where(need > 0, _gather_suffix(suffix, W2 - need), 0.0)
+        return intra + tail
+
+    def _shift_r(a, w):
+        return jnp.where(j - w >= 0,
+                         jnp.take_along_axis(a, jnp.maximum(j - w, 0),
+                                             axis=1), 0.0)
+
+    def _gather_suffix(s, idx):
+        return jnp.take_along_axis(s, jnp.clip(idx, 0, W2 - 1), axis=1)
+
+    s1, s2 = wsum(w1), wsum(w2)
+    c1 = jnp.minimum(pos + 1, w1).astype(jnp.float32)
+    c2 = jnp.minimum(pos + 1, w2).astype(jnp.float32)
+    diff = s1 / c1 - s2 / c2
+    val_ref[...] = diff
+    ok_ref[...] = diff > 0
+
+
+def fused_trend(x: jax.Array, w1: int, w2: int,
+                interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x: (T,) dense stream.  Returns (diff (T,) f32, uptrend (T,) bool)."""
+    assert w1 < w2, "short window first"
+    T = x.shape[0]
+    W2 = int(w2)
+    Tp = -(-T // W2) * W2
+    xp = jnp.pad(x.astype(jnp.float32), (W2, Tp - T))[None, :]  # lead pad row
+    rows = Tp // W2
+
+    kern = functools.partial(_kernel, w1=int(w1), w2=W2)
+    val, ok = pl.pallas_call(
+        kern,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, W2), lambda k: (0, k)),      # row k-1 (padded)
+            pl.BlockSpec((1, W2), lambda k: (0, k + 1)),  # row k
+        ],
+        out_specs=[pl.BlockSpec((1, W2), lambda k: (0, k)),
+                   pl.BlockSpec((1, W2), lambda k: (0, k))],
+        out_shape=[jax.ShapeDtypeStruct((1, Tp), jnp.float32),
+                   jax.ShapeDtypeStruct((1, Tp), jnp.bool_)],
+        interpret=interpret,
+    )(xp, xp)
+    return val[0, :T], ok[0, :T]
+
+
+def fused_trend_ref(x: jax.Array, w1: int, w2: int):
+    """Pure-jnp oracle (float64-free but algebraically direct)."""
+    xf = x.astype(jnp.float32)
+    T = xf.shape[0]
+    p = jnp.cumsum(xf)
+
+    def wmean(w):
+        pw = jnp.pad(p, (w, 0))[:T]
+        cnt = jnp.minimum(jnp.arange(T) + 1, w).astype(jnp.float32)
+        return (p - pw) / cnt
+
+    diff = wmean(w1) - wmean(w2)
+    return diff, diff > 0

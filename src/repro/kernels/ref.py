@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against these functions.  They are also the fallback
+execution path on backends without Pallas support (ops.py dispatch).
+
+Window convention: ``out[t]`` aggregates input ticks ``[t-W+1, t]`` clipped
+to the start of the array (partial leading windows — matching φ-semantics
+where ticks before the stream simply do not exist).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["prefix_sum_ref", "sliding_sum_ref", "sliding_assoc_ref"]
+
+
+def prefix_sum_ref(x: jax.Array) -> jax.Array:
+    """Inclusive prefix sum along the last axis, accumulated in f32."""
+    acc = x.astype(jnp.float32) if x.dtype != jnp.float64 else x
+    return jnp.cumsum(acc, axis=-1).astype(x.dtype)
+
+
+def sliding_sum_ref(x: jax.Array, valid: jax.Array, window: int) -> tuple:
+    """Masked sliding-window sum + valid count.
+
+    Args:
+      x:      (C, T) channel values.
+      valid:  (T,) bool mask; invalid ticks contribute 0.
+      window: W ticks.
+
+    Returns:
+      sums (C, T) f32, count (T,) f32.
+    """
+    xm = jnp.where(valid[None, :], x, 0).astype(jnp.float32)
+    p = jnp.cumsum(xm, axis=-1)
+    pw = jnp.pad(p, ((0, 0), (window, 0)))[:, : p.shape[-1]]
+    sums = p - pw
+    c = jnp.cumsum(valid.astype(jnp.float32))
+    cw = jnp.pad(c, (window, 0))[: c.shape[-1]]
+    return sums, c - cw
+
+
+def sliding_assoc_ref(x: jax.Array, valid: jax.Array, window: int,
+                      combine, identity) -> tuple:
+    """Masked sliding-window associative reduce (max/min family).
+
+    Args/returns as sliding_sum_ref but with a generic combine; returns
+    (values (C, T), any_valid (T,) bool).
+    """
+    C, T = x.shape
+    xm = jnp.where(valid[None, :], x, identity)
+    # O(W) shift-combine reference — simple and obviously correct.
+    out = xm
+    anyv = valid
+    for d in range(1, window):
+        shifted = jnp.pad(xm, ((0, 0), (d, 0)),
+                          constant_values=identity)[:, :T]
+        out = combine(out, shifted)
+        vs = jnp.pad(valid, (d, 0))[:T]
+        anyv = anyv | vs
+    return out, anyv
+
+
+def sliding_reduce_window_ref(x: jax.Array, window: int, init, combine):
+    """lax.reduce_window cross-check oracle (single channel)."""
+    return jax.lax.reduce_window(
+        x, init, combine, window_dimensions=(window,),
+        window_strides=(1,), padding=((window - 1, 0),))
+
+
+def sliding_assoc_block_ref(x: jax.Array, window: int, combine, identity,
+                            scan_fn=None) -> jax.Array:
+    """Vectorized Van Herk / Gil-Werman in pure jnp (no Pallas).
+
+    Same striped-row decomposition as kernels/window_reduce.sliding_assoc —
+    O(1) combines per element — but expressed on a (rows, W) reshape so the
+    jnp fallback path is fast on any backend.  Semantics identical to
+    ``sliding_assoc_ref`` (masking handled by the caller via ``identity``).
+    """
+    C, T = x.shape
+    W = int(window)
+    if W <= 1:
+        return x
+    Tp = -(-T // W) * W
+    xp = jnp.pad(x, ((0, 0), (W, Tp - T)), constant_values=identity)
+    rows = xp.reshape(C, Tp // W + 1, W)
+    scan = scan_fn or (lambda a, rev: jax.lax.associative_scan(
+        combine, a, axis=2, reverse=rev))
+    prefix = scan(rows, False)[:, 1:]           # rows 1..K (current rows)
+    suffix = scan(rows, True)[:, :-1]           # rows 0..K-1 (prev rows)
+    suf = jnp.concatenate(
+        [suffix[:, :, 1:],
+         jnp.full((C, suffix.shape[1], 1), identity, x.dtype)], axis=2)
+    out = combine(suf, prefix).reshape(C, Tp)
+    return out[:, :T]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernels for TiLT window reductions (DESIGN.md §2).
+
+Two kernels cover every built-in reduction:
+
+* :func:`prefix_scan` — multi-block inclusive prefix sum with a VMEM carry
+  across the (sequential) grid.  Invertible reductions (sum/count/mean/
+  stddev/moments) become ``P[t] - P[t-W]`` — Subtract-on-Evict vectorized
+  over all ticks; the subtract itself is a cheap XLA slice, so the kernel is
+  the bandwidth-bound scan.
+
+* :func:`sliding_assoc` — Van Herk / Gil-Werman sliding reduce for
+  non-invertible associative ops (max/min): the timeline is striped into
+  rows of width W (lane axis); a prefix scan of the current row and a suffix
+  scan of the previous row combine into the exact W-window reduce with O(1)
+  work per element and 2 reads per element.
+
+TPU mapping notes (kernels are *validated* with ``interpret=True`` on CPU —
+this container has no TPU — and *targeted* at TPU):
+
+* Blocks are ``(C, B)`` with C = channel count on the sublane axis and B on
+  the lane axis; wrappers pad B to a multiple of 128 (MXU/VPU lane width)
+  and C to 8 sublanes when C > 1.
+* The grid is 1-D and sequential on TPU, which makes the VMEM carry scratch
+  legal (scratch persists across grid steps).
+* ``associative_scan``/``cumsum`` inside the kernel body lower to
+  log-depth vector ops on the VPU; window widths that are not multiples of
+  128 relayout (performance, not correctness).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces; present in jax 0.8
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+__all__ = ["prefix_scan", "sliding_assoc", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 1024  # lanes per grid step for the prefix scan
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: multi-block prefix scan with carry
+# ---------------------------------------------------------------------------
+
+def _prefix_scan_kernel(x_ref, out_ref, carry_ref):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (C, B)
+    p = jnp.cumsum(x, axis=-1) + carry_ref[...]  # carry (C, 1) broadcasts
+    out_ref[...] = p
+    carry_ref[...] = p[:, -1:]
+
+
+def prefix_scan(x: jax.Array, block: int = DEFAULT_BLOCK,
+                interpret: bool = True) -> jax.Array:
+    """Inclusive f32 prefix sum along the last axis of ``x: (C, T)``.
+
+    T is padded to a multiple of ``block``; the pad region is zeros so the
+    carry is unaffected, and the wrapper slices the result back.
+    """
+    C, T = x.shape
+    Tp = -(-T // block) * block
+    xp = jnp.pad(x, ((0, 0), (0, Tp - T)))
+    grid = Tp // block
+
+    out = pl.pallas_call(
+        _prefix_scan_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((C, block), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((C, block), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((C, Tp), jnp.float32),
+        scratch_shapes=[_VMEM((C, 1), jnp.float32)] if _VMEM else None,
+        interpret=interpret,
+    )(xp)
+    return out[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: Van Herk / Gil-Werman sliding associative reduce
+# ---------------------------------------------------------------------------
+
+def _vanherk_kernel(prev_ref, cur_ref, out_ref, *, combine, identity):
+    prev = prev_ref[...]   # (C, W) — row k-1 of the striped timeline
+    cur = cur_ref[...]     # (C, W) — row k
+    C, W = cur.shape
+    prefix = jax.lax.associative_scan(combine, cur, axis=1)
+    suffix = jax.lax.associative_scan(combine, prev, axis=1, reverse=True)
+    # out[t = kW + j] reduces [t-W+1, t] = prev[j+1:] ∪ cur[:j+1]
+    #               = combine(suffix[j+1] (identity when j = W-1), prefix[j])
+    suf = jnp.concatenate(
+        [suffix[:, 1:], jnp.full((C, 1), identity, cur.dtype)], axis=-1)
+    out_ref[...] = combine(suf, prefix)
+
+
+def sliding_assoc(x: jax.Array, window: int, combine, identity,
+                  interpret: bool = True) -> jax.Array:
+    """Sliding-window associative reduce along the last axis of ``x: (C, T)``.
+
+    ``out[:, t] = combine over x[:, max(0, t-window+1) : t+1]``.
+
+    The wrapper left-pads one full row of ``identity`` (so row k-1 always
+    exists and leading partial windows are exact) and right-pads T to a
+    multiple of W.
+    """
+    C, T = x.shape
+    W = int(window)
+    if W <= 1:
+        return x
+    Tp = -(-T // W) * W
+    xp = jnp.pad(x, ((0, 0), (W, Tp - T)), constant_values=identity)
+    rows = Tp // W  # output rows; padded input has rows+1 rows
+
+    kern = functools.partial(_vanherk_kernel, combine=combine,
+                             identity=identity)
+    out = pl.pallas_call(
+        kern,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((C, W), lambda k: (0, k)),      # prev row (padded idx k)
+            pl.BlockSpec((C, W), lambda k: (0, k + 1)),  # cur row (padded idx k+1)
+        ],
+        out_specs=pl.BlockSpec((C, W), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((C, Tp), x.dtype),
+        interpret=interpret,
+    )(xp, xp)
+    return out[:, :T]

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init) — hence their position at the very top.  The flag is
+# set ONLY here: smoke tests and benchmarks see 1 device.
+#
+# Per cell this driver:
+#   1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+#   2. builds the jitted step (train_step for train shapes; prefill / decode
+#      for serve shapes) with NamedSharding in/out specs from sharding.py,
+#   3. ``.lower(**ShapeDtypeStructs).compile()`` — no arrays allocated,
+#   4. records ``memory_analysis()`` (fits-per-device proof) from the
+#      production (layer-scanned) lowering, and ``cost_analysis()`` +
+#      the HLO collective scrape from a layer-UNROLLED lowering — XLA's
+#      cost_analysis counts while bodies once, so the scanned module would
+#      undercount FLOPs by ~n_layers (the collective scrape is while-aware,
+#      but flops cannot be re-attributed; see roofline/analysis.py).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k \
+#       --mesh single --json out/cell.json
+#   python -m repro.launch.dryrun --all --out-dir out/dryrun --mesh both
+import argparse
+import dataclasses
+
+
+def jnp_int32_placeholder():
+    import jax.numpy as jnp
+    return jnp.int32
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _lower_step(cfg, shape, mesh, n_micro=1):
+    """Build and lower the cell's step function. Returns jax.stages.Lowered."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..models.model import build_model
+    from ..train.optimizer import AdamWConfig, init_opt_state
+    from ..train.train_step import make_serve_steps, make_train_step
+    from . import sharding as SH
+
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+    box = {}
+
+    def _shapes_only(rng):
+        p, a = model.init(rng)
+        box["axes"] = a
+        return p
+
+    params_s = jax.eval_shape(_shapes_only, jax.random.PRNGKey(0))
+    axes = box["axes"]
+    param_sh = SH.param_shardings(axes, cfg, mesh)
+    batch_sh = SH.batch_sharding(mesh)
+    repl = NamedSharding(mesh, P())
+
+    def shard_like_batch(tree):
+        return jax.tree_util.tree_map(
+            lambda x: SH.batch_sharding_for(mesh, x)
+            if getattr(x, "ndim", 0) >= 1 else repl, tree)
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, AdamWConfig(), n_micro=n_micro)
+            opt_s = jax.eval_shape(init_opt_state, params_s)
+            opt_sh = {"m": param_sh, "v": param_sh, "step": repl}
+            return jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, shard_like_batch(specs)),
+                out_shardings=(param_sh, opt_sh, repl),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, specs)
+        if shape.kind == "prefill":
+            prefill_fn, _ = make_serve_steps(model)
+            args = [params_s, specs["tokens"]]
+            in_sh = [param_sh, SH.batch_sharding_for(mesh, specs["tokens"])]
+            if "frames" in specs:
+                args.append(specs["frames"])
+                in_sh.append(SH.batch_sharding_for(mesh, specs["frames"]))
+            # the returned KV cache dominates prefill memory: without an
+            # out_sharding it materializes replicated (§Perf: dbrx prefill
+            # 18.3 GB temp was almost entirely the cache)
+            out_caches = jax.eval_shape(
+                lambda *a: prefill_fn(*a), *args)[1]
+            cache_out_sh = SH.cache_shardings(
+                model.cache_axes(shape.seq_len), out_caches, cfg, mesh)
+            logits_sh = SH.batch_sharding_for(
+                mesh, jax.ShapeDtypeStruct(
+                    (shape.global_batch, 1), jnp_int32_placeholder()))
+            out_sh = [logits_sh, cache_out_sh]
+            n_out = len(jax.tree_util.tree_structure(
+                jax.eval_shape(lambda *a: prefill_fn(*a), *args)).children())
+            if "frames" in specs:  # encdec prefill also returns enc_out
+                out_sh.append(SH.batch_sharding_for(mesh, specs["frames"]))
+            return jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                           out_shardings=tuple(out_sh)).lower(*args)
+        # decode
+        _, decode_fn = make_serve_steps(model)
+        cache_sh = SH.cache_shardings(
+            model.cache_axes(shape.seq_len), specs["caches"], cfg, mesh)
+        args = [params_s, specs["caches"], specs["tokens"], specs["pos"]]
+        in_sh = [param_sh, cache_sh,
+                 SH.batch_sharding_for(mesh, specs["tokens"]), repl]
+        if "enc_out" in specs:
+            args.append(specs["enc_out"])
+            in_sh.append(SH.batch_sharding_for(mesh, specs["enc_out"]))
+        return jax.jit(decode_fn, in_shardings=tuple(in_sh),
+                       donate_argnums=(1,)).lower(*args)
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v.lower() in ("true", "false"):
+        v = v.lower() == "true"
+    else:
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+    return k, v
+
+
+def _cell(arch: str, shape_name: str, mesh_kind: str, hlo_dir=None,
+          skip_unrolled=False, overrides=(), micro=None) -> dict:
+    import jax
+
+    from ..configs.base import SHAPES, get_config
+    from ..models import shardctx
+    from ..roofline.analysis import roofline
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **dict(overrides))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shardctx.set_mesh_axes(mesh.axis_names)
+    n_dev = mesh.size
+
+    # -- production (scanned) lowering: compile proof + memory -------------
+    # train shapes run with gradient accumulation (4 microbatches) — the
+    # production memory configuration the fits-per-device proof is about.
+    n_micro = micro or (4 if shape.kind == "train" else 1)
+    t0 = time.time()
+    lowered = _lower_step(cfg, shape, mesh, n_micro=n_micro)
+    lower_s = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+    mem = compiled.memory_analysis()
+    mem_d = {k: getattr(mem, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes")
+        if hasattr(mem, k)}
+
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": True,
+        "devices": n_dev, "n_micro": n_micro, "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1), "memory": mem_d,
+        "per_device_bytes": (mem_d.get("argument_size_in_bytes", 0)
+                             + mem_d.get("temp_size_in_bytes", 0)),
+    }
+
+    # collective bytes from the production (scanned) HLO — the scrape is
+    # while-aware, so this is valid without the unrolled lowering and is
+    # what hillclimb iterations (--skip-unrolled) compare on
+    try:
+        from ..roofline.analysis import collective_bytes
+        coll_scanned = collective_bytes(compiled.as_text())
+        res["coll_scanned"] = coll_scanned
+        res["collective_s_scanned"] = coll_scanned["total"] / 50e9
+    except Exception as e:  # pragma: no cover
+        res["coll_scanned_error"] = str(e)[:200]
+
+    # -- cost accounting (single-pod only: the roofline table mesh) --------
+    if mesh_kind == "single" and not skip_unrolled:
+        # cost lowering: layers unrolled, no microbatch scan — every flop
+        # visible to cost_analysis exactly once per step
+        cfg_u = dataclasses.replace(cfg, scan_layers=False)
+        t2 = time.time()
+        compiled_u = _lower_step(cfg_u, shape, mesh).compile()
+        res["unrolled_compile_s"] = round(time.time() - t2, 1)
+        cost = compiled_u.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        cost = dict(cost or {})
+        hlo = compiled_u.as_text()
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            with open(os.path.join(
+                    hlo_dir, f"{arch}_{shape_name}_{mesh_kind}.hlo"),
+                    "w") as f:
+                f.write(hlo)
+
+        n_active = cfg.n_active_params()
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+        mult = 6.0 if shape.kind == "train" else 2.0
+        model_flops = mult * n_active * tokens / n_dev
+        rep = roofline(cost, hlo, model_flops)
+        res["cost"] = {k: v for k, v in cost.items()
+                       if k in ("flops", "bytes accessed")}
+        res["roofline"] = rep.to_dict()
+    return res
+
+
+def run_cell(arch, shape, mesh_kind, json_path=None, hlo_dir=None,
+             skip_unrolled=False, overrides=(), micro=None):
+    try:
+        res = _cell(arch, shape, mesh_kind, hlo_dir, skip_unrolled,
+                    overrides, micro)
+        if overrides:
+            res["overrides"] = dict(overrides)
+    except Exception as e:  # record failures as data, not crashes
+        res = {"arch": arch, "shape": shape, "mesh": mesh_kind, "ok": False,
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+def all_cells():
+    """The assigned (arch × shape) grid, minus documented skips
+    (DESIGN.md §Arch-applicability: long_500k needs sub-quadratic)."""
+    from ..configs.base import SHAPES, get_config, registry
+    cells = []
+    for arch in sorted(registry()):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                continue  # quadratic attention at 500k — documented skip
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--json")
+    ap.add_argument("--hlo-dir")
+    ap.add_argument("--skip-unrolled", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb knobs)")
+    ap.add_argument("--micro", type=int, default=None,
+                    help="gradient-accumulation microbatches (train)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="out/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    if not args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        ov = tuple(_parse_override(kv) for kv in args.set)
+        for mk in meshes:
+            res = run_cell(args.arch, args.shape, mk, args.json,
+                           args.hlo_dir, args.skip_unrolled, ov, args.micro)
+            print(json.dumps(
+                {k: v for k, v in res.items() if k != "trace"}, indent=1))
+            if not res["ok"]:
+                sys.exit(1)
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for arch, shape in all_cells():
+        for mk in meshes:
+            out = os.path.join(args.out_dir, f"{arch}_{shape}_{mk}.json")
+            if os.path.exists(out):
+                with open(out) as f:
+                    prev = json.load(f)
+                if prev.get("ok"):
+                    print(f"SKIP (cached) {arch} {shape} {mk}", flush=True)
+                    continue
+            # subprocess per cell: isolates compile memory + failures
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mk,
+                   "--json", out]
+            if args.hlo_dir:
+                cmd += ["--hlo-dir", args.hlo_dir]
+            t0 = time.time()
+            try:
+                p = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                ok = p.returncode == 0
+            except subprocess.TimeoutExpired:
+                ok = False
+                with open(out, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mk,
+                               "ok": False, "error": "compile timeout"}, f)
+            failures += (not ok)
+            print(f"{'OK  ' if ok else 'FAIL'} {arch:24s} {shape:12s} {mk} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required for the
+dry-run's 512-placeholder-device bootstrap (dryrun.py sets XLA_FLAGS before
+any jax import; everything else must stay lazy).
+
+Axis semantics:
+* ``pod``   — slowest axis, crosses the inter-pod DCN/ICI boundary; only
+              data parallelism is mapped here (gradient all-reduce once per
+              step; no layer-wise collectives cross pods).
+* ``data``  — intra-pod data parallel + FSDP parameter/optimizer sharding +
+              TiLT stream-time sharding.
+* ``model`` — tensor parallel (attention heads / MLP hidden / MoE experts /
+              vocab).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh", "DP_AXES", "TP_AXIS"]
+
+DP_AXES = ("pod", "data")   # batch / FSDP axes (pod present when multi-pod)
+TP_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: Optional[int] = None, n_model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    n_data = n_data or (n // n_model)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,163 @@
+"""Logical-axis → mesh-axis mapping (the GSPMD sharding rulebook).
+
+Model code annotates every parameter with *logical* axis names
+(models/layers.py); this module maps them onto the physical mesh per
+architecture, with divisibility-aware fallbacks:
+
+* ``heads``/``kv_heads`` shard over ``model`` only when the head count
+  divides the axis — otherwise they fall back to replication and the MLP
+  carries the tensor parallelism (gemma2-2b's 8 heads / whisper's 20 heads
+  on a 16-way model axis; recorded per-arch in the dry-run report, and the
+  subject of a §Perf iteration).
+* ``vocab``/``mlp``/``expert`` shard over ``model`` (vocab is pre-padded to
+  a multiple of 128, so always divisible).
+* ``embed`` (the d_model axis of weight matrices) shards over ``data`` —
+  ZeRO-3/FSDP: parameters and optimizer state live sharded and are
+  all-gathered layer-by-layer inside the scan (XLA's latency-hiding
+  scheduler overlaps the gathers with compute).
+* activations: batch over ``("pod","data")``, model-parallel axes over
+  ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+__all__ = ["axis_rules", "param_shardings", "batch_sharding",
+           "tree_map_axes"]
+
+
+def tree_map_axes(fn, tree):
+    """Map over an axes tree where tuples are leaves."""
+    if isinstance(tree, dict):
+        return {k: tree_map_axes(fn, v) for k, v in tree.items()}
+    return fn(tree)
+
+
+def axis_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Optional[str]]:
+    """Logical axis name -> mesh axis (or None = replicate)."""
+    tp = mesh.shape.get("model", 1)
+    fsdp = "data" if "data" in mesh.shape else None
+
+    def div(n):  # shard only when evenly divisible
+        return "model" if n % tp == 0 else None
+
+    W = cfg.lru_width or cfg.d_model
+    rules = {
+        "vocab": div(cfg.vocab_padded),
+        "embed": fsdp,
+        "mlp": div(cfg.d_ff),
+        "mlp_moe": div(cfg.d_ff),
+        "heads": div(cfg.n_heads),
+        "kv_heads": div(cfg.n_kv_heads),
+        "expert": div(cfg.n_experts) if cfg.n_experts else None,
+        "lru": div(W),
+        "lru_in": fsdp,
+        "heads_rw": div(cfg.d_model),
+        "layers": None,
+    }
+    # MoE: experts take the model axis; expert-internal mlp must not reuse it
+    if cfg.n_experts and rules["expert"] == "model":
+        rules["mlp_moe"] = None
+        rules["embed_moe"] = fsdp
+    # avoid double-assignment: if kv_heads replicated but heads sharded, fine
+    return rules
+
+
+def spec_for(axes: tuple, rules: Dict[str, Optional[str]]) -> P:
+    used = set()
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m in used:  # a mesh axis may appear only once per spec
+            m = None
+        if m is not None:
+            used.add(m)
+        parts.append(m)
+    return P(*parts)
+
+
+def param_shardings(axes_tree, cfg: ModelConfig, mesh: Mesh):
+    rules = axis_rules(cfg, mesh)
+    return tree_map_axes(
+        lambda ax: NamedSharding(mesh, spec_for(ax, rules)), axes_tree)
+
+
+def batch_sharding(mesh: Mesh):
+    """Tokens/labels: batch over all DP axes."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(mesh, P(dp))
+
+
+def batch_sharding_for(mesh: Mesh, leaf):
+    """Batch sharding with a divisibility guard (global_batch=1 decode
+    shapes replicate rather than over-shard)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    deg = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    shape = getattr(leaf, "shape", ())
+    if not shape or shape[0] % deg != 0:
+        # try the inner 'data' axis alone before full replication
+        if shape and "data" in mesh.shape and shape[0] % mesh.shape["data"] == 0:
+            return NamedSharding(mesh, P("data"))
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(dp))
+
+
+def cache_shardings(axes_tree, struct_tree, cfg: ModelConfig, mesh: Mesh):
+    """Decode-state shardings from the model's cache_axes strings.
+
+    ``batch`` → all DP axes; ``kv_heads``/``heads``/``lru`` → model when
+    divisible; everything else replicated.  (The KV cache is the dominant
+    decode-shape buffer — ~TBs at decode_32k — so batch sharding here is
+    what makes those cells fit; leaving it implicit replicates it, which is
+    how §Perf iteration 0 discovered this.)"""
+    rules = axis_rules(cfg, mesh)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+    rules = dict(rules)
+    rules["batch"] = dp
+    # context-parallel fallback: when kv-heads cannot take the model axis
+    # (whisper's 20 heads on a 16-way axis), shard the cache TIME axis over
+    # it instead — GSPMD turns the attention contraction into a partial
+    # softmax + all-reduce, and the per-device cache shrinks ×tp.
+    rules["time"] = "model" if rules.get("kv_heads") is None else None
+    rules["none"] = None
+
+    def one(ax_str, leaf):
+        # 'scalar' marks a rank-0 base leaf: it contributes no spec entry
+        names = [None if a in ("none", "") else a
+                 for a in ax_str.split(",") if a != "scalar"]
+        shape = getattr(leaf, "shape", ())
+        used = set()
+        parts = []
+        for d, ax in enumerate(names):
+            m = rules.get(ax) if ax is not None else None
+            dim = shape[d] if d < len(shape) else 0
+
+            def degree(mm):
+                if mm is None:
+                    return 1
+                if isinstance(mm, tuple):
+                    return int(np.prod([mesh.shape[a] for a in mm]))
+                return mesh.shape[mm]
+
+            if isinstance(m, tuple):
+                m = tuple(x for x in m if x not in used) or None
+                if m is not None and dim % degree(m) != 0:
+                    m = None  # e.g. batch=1 long-context decode
+                if m is not None:
+                    used.update(m)
+            elif m is not None:
+                if m in used or dim % degree(m) != 0:
+                    m = None
+                else:
+                    used.add(m)
+            parts.append(m)
+        return NamedSharding(mesh, P(*parts))
+
+    import jax as _jax
+    return _jax.tree_util.tree_map(one, axes_tree, struct_tree)

@@ -1,0 +1,429 @@
+"""Model-layer primitives shared by all 10 assigned architectures.
+
+Pure-function JAX (no flax): every layer is ``init(rng, cfg) -> (params,
+axes)`` + ``apply(params, x, ...)``.  ``axes`` mirrors ``params`` with
+logical-axis name tuples used by launch/sharding.py to build NamedShardings
+(("embed", "mlp") → P("data", "model") etc.) — the standard logical/physical
+split production frameworks use so one model definition serves every mesh.
+
+Conventions: B batch, T query time, S key time, D d_model, F d_ff,
+H q-heads, N kv-heads, G = H//N group size, K head_dim, E experts, C expert
+capacity.  Params are ``param_dtype``; activations ``dtype``; softmax/norm
+statistics in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "init_attention", "attention",
+    "init_mlp", "mlp", "init_moe", "moe_ffn", "KVCache",
+]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms & rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (B, T, n, K); positions: (B, T) or (T,)."""
+    K = x.shape[-1]
+    half = K // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, T, half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; global / sliding-local / bidirectional / cross)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time KV cache.
+
+    Global layers: ``k``/``v`` are (B, S_max, N, K), absolute slots.
+    Local layers:  (B, window, N, K) rolling buffers (oldest first).
+    ``pos`` is the number of tokens already cached.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array  # int32 scalar
+    window: int = 0  # 0 == global
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), (self.window,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(ch[0], ch[1], ch[2], aux[0])
+
+
+def init_attention(rng, cfg: ModelConfig):
+    D, H, N, K = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    r = jax.random.split(rng, 4)
+    s = D ** -0.5
+    p = {
+        "wq": _init(r[0], (D, H, K), s, _pdt(cfg)),
+        "wk": _init(r[1], (D, N, K), s, _pdt(cfg)),
+        "wv": _init(r[2], (D, N, K), s, _pdt(cfg)),
+        "wo": _init(r[3], (H, K, D), (H * K) ** -0.5, _pdt(cfg)),
+    }
+    a = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((K,), _pdt(cfg))
+        p["k_norm"] = jnp.zeros((K,), _pdt(cfg))
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return p, a
+
+
+def _mask(kind: str, q_pos, k_pos, window: int):
+    """Additive mask from absolute positions. q_pos (B,T), k_pos (B,S)."""
+    ok = k_pos[:, None, :] >= 0
+    if kind in ("global", "local"):
+        ok = ok & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if kind == "local":
+        ok = ok & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    return jnp.where(ok, 0.0, -1e30)  # (B, T, S)
+
+
+def attention(p, x, cfg: ModelConfig, kind: str, q_pos,
+              cache: Optional[KVCache] = None,
+              kv_x: Optional[jax.Array] = None,
+              kv_pos: Optional[jax.Array] = None):
+    """GQA attention.
+
+    kind: 'global' (causal) | 'local' (causal sliding window) |
+          'bidir' (encoder) | 'cross' (decoder→encoder, needs kv_x).
+    q_pos: (B, T) absolute positions of the query tokens.
+    cache: decode-time KV cache (self-attention kinds only); updated
+           functionally and returned.
+    """
+    B, T, D = x.shape
+    H, N, K = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // N
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dnk->bsnk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", src, p["wv"].astype(x.dtype))
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    use_rope = kind in ("global", "local")
+    if use_rope:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, q_pos if kv_pos is None else kv_pos, cfg.rope_theta)
+
+    cache_dt = jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    new_cache = None
+    if cache is not None and T > 1:
+        # one-shot prefill from an empty cache: attend over the chunk's own
+        # k/v (full context), then write the cache tail.  Local caches are
+        # RING buffers (slot = position % W) so that decode-time writes are
+        # O(1) aliasable dynamic_update_slices, never full-buffer rolls.
+        kq, vq = k.astype(cache_dt), v.astype(cache_dt)
+        if cache.window:
+            W = cache.window
+            if T >= W:
+                ck = jnp.roll(kq[:, -W:], (T - W) % W, axis=1)
+                cv = jnp.roll(vq[:, -W:], (T - W) % W, axis=1)
+            else:
+                ck = cache.k.at[:, :T].set(kq)
+                cv = cache.v.at[:, :T].set(vq)
+            new_cache = KVCache(ck, cv, cache.pos + T, W)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, cache.pos,
+                                                     1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, cache.pos,
+                                                     1)
+            new_cache = KVCache(ck, cv, cache.pos + T, 0)
+        k_pos = q_pos if kv_pos is None else kv_pos
+    elif cache is not None:  # T == 1: decode against the cache
+        if cache.window:  # ring buffer: write slot pos % W (in-place alias)
+            W = cache.window
+            slot = cache.pos % W
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache_dt), slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache_dt), slot, 1)
+            new_cache = KVCache(ck, cv, cache.pos + 1, W)
+            k, v = ck, cv
+            # slot i holds the latest position ≡ i (mod W) that is ≤ pos
+            i = jnp.arange(W)[None, :]
+            k_pos = (cache.pos - ((cache.pos - i) % W)) * jnp.ones(
+                (B, 1), jnp.int32)
+        else:
+            S = cache.k.shape[1]
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache_dt), cache.pos, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache_dt), cache.pos, 1)
+            new_cache = KVCache(ck, cv, cache.pos + T, 0)
+            k, v = ck, cv
+            k_pos = jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+            k_pos = jnp.where(k_pos < cache.pos + T, k_pos, -1)
+    else:
+        if kind == "cross":
+            S = src.shape[1]
+            k_pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        else:
+            k_pos = q_pos if kv_pos is None else kv_pos
+
+    qg = q.reshape(B, T, N, G, K)
+    k, v = k.astype(x.dtype), v.astype(x.dtype)  # upcast quantized cache
+    mask_kind = "bidir" if kind in ("cross", "bidir") else kind
+    S = k.shape[1]
+    if S > _CHUNKED_KV_THRESHOLD and T > 1:
+        out = _attn_chunked(qg, k, v, cfg, mask_kind, q_pos, k_pos)
+    else:
+        scores = jnp.einsum("btngk,bsnk->bntgs", qg, k).astype(jnp.float32)
+        scores = scores * (K ** -0.5)
+        if cfg.softcap_attn:
+            c = cfg.softcap_attn
+            scores = c * jnp.tanh(scores / c)
+        m = _mask(mask_kind, q_pos, k_pos, cfg.window)
+        scores = scores + m[:, None, :, None, :]  # (B,N,T,G,S)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bntgs,bsnk->btngk", w, v)
+    out = out.reshape(B, T, H, K)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+_CHUNKED_KV_THRESHOLD = 2048   # dense scores up to 2k keys; flash beyond
+_KV_CHUNK = 1024
+
+
+def _attn_chunked(qg, k, v, cfg: ModelConfig, mask_kind: str, q_pos, k_pos,
+                  chunk: int = _KV_CHUNK):
+    """Online-softmax (flash-style) attention over KV chunks.
+
+    Never materializes the (T, S) score matrix: a ``lax.scan`` over key
+    chunks carries the running max ``m``, normalizer ``l`` and accumulator —
+    the standard memory-efficient attention, in pure JAX so it lowers on any
+    backend (the Pallas TPU kernel version is a recorded §Perf candidate;
+    this formulation already bounds memory to O(T·chunk)).
+    """
+    B, T, N, G, K = qg.shape
+    S = k.shape[1]
+    assert S % chunk == 0, (S, chunk)
+    nC = S // chunk
+    kc = k.reshape(B, nC, chunk, N, K).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nC, chunk, N, K).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(B, nC, chunk).transpose(1, 0, 2)
+    scale = K ** -0.5
+    q32 = qg.astype(jnp.float32)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, kpb = xs
+        s = jnp.einsum("btngk,bsnk->bntgs", q32,
+                       kb.astype(jnp.float32)) * scale
+        if cfg.softcap_attn:
+            c = cfg.softcap_attn
+            s = c * jnp.tanh(s / c)
+        mask = _mask(mask_kind, q_pos, kpb, cfg.window)
+        s = s + mask[:, None, :, None, :]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p_, axis=-1)
+        acc = (acc * corr[..., None]
+               + jnp.einsum("bntgs,bsnk->bntgk", p_,
+                            vb.astype(jnp.float32)))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, N, T, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, N, T, G), jnp.float32)
+    acc0 = jnp.zeros((B, N, T, G, K), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, kpc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3, 4).astype(qg.dtype)  # (B,T,N,G,K)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def init_mlp(rng, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    r = jax.random.split(rng, 3)
+    p = {"wi": _init(r[0], (D, F), D ** -0.5, _pdt(cfg)),
+         "wo": _init(r[1], (F, D), F ** -0.5, _pdt(cfg))}
+    a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.mlp_gated:
+        p["wg"] = _init(r[2], (D, F), D ** -0.5, _pdt(cfg))
+        a["wg"] = ("embed", "mlp")
+    return p, a
+
+
+def mlp(p, x, cfg: ModelConfig):
+    act = _ACTS[cfg.mlp_act]
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(x.dtype))
+    if cfg.mlp_gated:
+        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("btf,fd->btd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-dropped, sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    r = jax.random.split(rng, 4)
+    p = {
+        "router": _init(r[0], (D, E), D ** -0.5, jnp.float32),
+        "wi": _init(r[1], (E, D, F), D ** -0.5, _pdt(cfg)),
+        "wg": _init(r[2], (E, D, F), D ** -0.5, _pdt(cfg)),
+        "wo": _init(r[3], (E, F, D), F ** -0.5, _pdt(cfg)),
+    }
+    a = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", "mlp_moe"),
+        "wg": ("expert", "embed", "mlp_moe"),
+        "wo": ("expert", "mlp_moe", "embed"),
+    }
+    return p, a
+
+
+_MOE_GROUPS = 32  # dispatch groups; a multiple of every DP degree we run
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """Grouped sort-based top-k MoE (GShard-style capacity drops, MegaBlocks
+    style sorted dispatch).  Returns (y, aux_loss).
+
+    Tokens are split into G dispatch groups (G a multiple of the DP degree,
+    so each group is shard-local under pjit): sort/positioning/scatter are
+    vmapped per group — WITHOUT grouping, the argsort/cumsum would be over
+    the globally-sharded token axis and GSPMD would all-gather every
+    activation to one giant sort (§Perf iteration 0's 81 GB/device MoE
+    temp).  The grouped (G, E, C, D) buffer is sharding-hinted
+    (dp over G, model over E), which makes the dispatch an all-to-all —
+    the canonical TPU MoE pattern.  Per-group capacity drops are exactly
+    GShard semantics; groups with ≤64 tokens (decode) get dropless capacity
+    so step-by-step decode stays bit-consistent with parallel prefill.
+    """
+    from .shardctx import hint
+
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.topk
+    N = B * T
+    G = math.gcd(_MOE_GROUPS, N)
+    Ng = N // G
+    xf = x.reshape(G, Ng, D)
+
+    logits = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, K)                        # (G, Ng, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch): E * Σ_e f_e · P_e (global)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(
+        jnp.ones((N * K,), jnp.float32)) / (N * K)
+    aux = E * jnp.sum(me * ce)
+
+    if Ng <= 64:
+        C = Ng * K              # dropless (decode-scale groups)
+    else:
+        C = max(int(cfg.capacity_factor * Ng * K / E), 1)
+
+    def dispatch_combine(xg, selg, gateg):
+        """One group: (Ng, D), (Ng, K), (Ng, K) -> (E, C, D) buffer + meta."""
+        sel_f = selg.reshape(-1)                               # (Ng*K,)
+        order = jnp.argsort(sel_f)
+        sorted_e = sel_f[order]
+        token_of = order // K
+        counts = jnp.bincount(sel_f, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(Ng * K) - starts[sorted_e]
+        keep = pos_in_e < C
+        slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
+        buf = jnp.zeros((E * C + 1, D), xg.dtype).at[slot].set(
+            xg[token_of] * keep[:, None].astype(xg.dtype))
+        w = gateg.reshape(-1)[order].astype(xg.dtype)
+        return buf[:-1].reshape(E, C, D), (token_of, slot, keep, w)
+
+    buf, meta = jax.vmap(dispatch_combine)(xf, sel, gate)      # (G, E, C, D)
+    buf = hint(buf, "dp", "model", None, None)                 # all-to-all
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(x.dtype))
+    h = _ACTS[cfg.mlp_act](g) * h
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    y = hint(y, "dp", "model", None, None)
+
+    def combine(yg, m):
+        token_of, slot, keep, w = m
+        y_tok = yg.reshape(E * C, D)
+        gathered = jnp.where(keep[:, None],
+                             y_tok[jnp.clip(slot, 0, E * C - 1)], 0.0)
+        return jnp.zeros((Ng, D), x.dtype).at[token_of].add(
+            gathered * w[:, None])
+
+    out = jax.vmap(combine)(y, meta)                           # (G, Ng, D)
+    return out.reshape(B, T, D), aux

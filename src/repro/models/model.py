@@ -1,0 +1,104 @@
+"""Unified model façade: ``build_model(cfg)`` → init / loss / serve fns and
+dry-run input specs for every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, Shape
+from . import encdec, transformer
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                  # rng -> (params, axes)
+    train_loss: Callable            # (params, batch) -> scalar
+    prefill: Callable               # (params, **inputs) -> (logits, cache, ...)
+    decode_step: Callable           # (params, cache, tokens, pos, ...) -> ...
+    init_cache: Callable            # (B, S_max) -> cache
+    input_specs: Callable           # Shape -> dict of ShapeDtypeStruct
+    cache_axes: Callable = None     # () -> logical-axis strings tree
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _token_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against an S-long cache
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S))
+    return {"caches": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _build_lm(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(transformer.init, cfg=cfg),
+        train_loss=lambda params, batch: transformer.train_loss(
+            params, cfg, batch),
+        prefill=lambda params, tokens, max_len=None: transformer.prefill(
+            params, cfg, tokens, max_len),
+        decode_step=lambda params, caches, tokens, pos: (
+            transformer.decode_step(params, cfg, caches, tokens, pos)),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        input_specs=functools.partial(_token_specs, cfg),
+        cache_axes=functools.partial(transformer.cache_axes, cfg),
+    )
+
+
+def _encdec_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    frames = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    if shape.kind == "train":
+        return {"frames": frames,
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"frames": frames,
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    cache = jax.eval_shape(lambda: encdec.init_cache(cfg, B, S))
+    return {"caches": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "enc_out": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                            jnp.dtype(cfg.dtype))}
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(encdec.init, cfg=cfg),
+        train_loss=lambda params, batch: encdec.train_loss(
+            params, cfg, {"frames": batch["frames"],
+                          "tokens": batch["tokens"],
+                          "labels": batch["labels"]}),
+        prefill=lambda params, tokens, frames, max_len=None: encdec.prefill(
+            params, cfg, tokens, frames, max_len),
+        decode_step=lambda params, caches, tokens, pos, enc_out: (
+            encdec.decode_step(params, cfg, caches, tokens, pos, enc_out)),
+        init_cache=functools.partial(encdec.init_cache, cfg),
+        input_specs=functools.partial(_encdec_specs, cfg),
+        cache_axes=functools.partial(encdec.cache_axes, cfg),
+    )

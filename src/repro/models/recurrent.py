@@ -1,0 +1,319 @@
+"""Recurrent token-mix blocks: RG-LRU (Griffin/recurrentgemma) and RWKV-6.
+
+Both are *time recurrences* — the same mathematical shape as TiLT's
+partitioned stream execution: a chunk of timeline plus a carried boundary
+state.  The RG-LRU uses a log-depth ``associative_scan`` (diagonal linear
+recurrence → TPU-friendly); RWKV-6's matrix-state recurrence with
+data-dependent per-channel decay runs as a sequential ``lax.scan`` over
+time with the state carried per chunk (the numerically-stable form; the
+chunk-parallel GLA decomposition is a recorded hillclimb candidate —
+see EXPERIMENTS.md §Perf).
+
+Decode-time state:
+* RG-LRU:  ``h`` (B, W) recurrent state + ``conv`` (B, cw-1, W) tail.
+* RWKV-6:  ``S`` (B, H, K, K) matrix state + token-shift tail (B, D).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import _init, _pdt, rms_norm
+
+__all__ = ["init_rglru_block", "rglru_block", "init_rwkv_mix", "rwkv_mix",
+           "init_rwkv_channel", "rwkv_channel"]
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin):  conv1d → gated diagonal linear RNN
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    cw = cfg.conv_width
+    r = jax.random.split(rng, 7)
+    p = {
+        "wx": _init(r[0], (D, W), D ** -0.5, _pdt(cfg)),    # branch in-proj
+        "wy": _init(r[1], (D, W), D ** -0.5, _pdt(cfg)),    # gate branch
+        "conv_w": _init(r[2], (cw, W), cw ** -0.5, _pdt(cfg)),
+        "conv_b": jnp.zeros((W,), _pdt(cfg)),
+        "wa": _init(r[3], (W, W), W ** -0.5, _pdt(cfg)),    # recurrence gate
+        "wi": _init(r[4], (W, W), W ** -0.5, _pdt(cfg)),    # input gate
+        # Λ init so a = σ(Λ)^c spreads over (0.9, 0.999) as in the paper
+        "lam": (jax.random.uniform(r[5], (W,), jnp.float32,
+                                   0.9 ** (1 / _C_RGLRU),
+                                   0.999 ** (1 / _C_RGLRU))),
+        "wo": _init(r[6], (W, D), W ** -0.5, _pdt(cfg)),
+    }
+    a = {
+        "wx": ("embed", "lru"), "wy": ("embed", "lru"),
+        "conv_w": (None, "lru"), "conv_b": ("lru",),
+        "wa": ("lru_in", "lru"), "wi": ("lru_in", "lru"),
+        "lam": ("lru",), "wo": ("lru", "embed"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, tail: Optional[jax.Array]):
+    """Depthwise causal conv along time. x (B,T,W); w (cw,W); tail (B,cw-1,W)."""
+    cw = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(cw))
+    return out + b.astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def rglru_block(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """Griffin recurrent block.  Returns (y, new_state)."""
+    B, T, D = x.shape
+    u = jnp.einsum("btd,dw->btw", x, p["wx"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(x.dtype)))
+
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv(u, p["conv_w"], p["conv_b"], tail)
+
+    r = jax.nn.sigmoid(jnp.einsum(
+        "btw,wv->btv", u, p["wa"].astype(u.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "btw,wv->btv", u, p["wi"].astype(u.dtype)).astype(jnp.float32))
+    log_lam = jnp.log(jnp.clip(p["lam"], 1e-6, 1 - 1e-6))  # log σ-free param
+    log_a = _C_RGLRU * r * log_lam[None, None, :]            # (B,T,W) ≤ 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = (mult * i * u.astype(jnp.float32))
+
+    if T == 1 and state is not None:
+        h = a[:, 0] * state["h"] + b[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        def comb(l, rt):
+            return (l[0] * rt[0], l[1] * rt[0] + rt[1])
+        a0, b0 = a, b
+        if state is not None:  # inject carried state via the first step
+            b0 = b0.at[:, 0].add(a0[:, 0] * state["h"])
+        _, hs = jax.lax.associative_scan(comb, (a0, b0), axis=1)
+        new_h = hs[:, -1]
+
+    y = hs.astype(x.dtype) * gate
+    out = jnp.einsum("btw,wd->btd", y, p["wo"].astype(x.dtype))
+    return out, {"h": new_h, "conv": new_tail}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    W = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, W),
+                              jnp.dtype(cfg.dtype))}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 token mix (Finch): matrix state, data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+def init_rwkv_mix(rng, cfg: ModelConfig):
+    D, H, K = cfg.d_model, cfg.n_heads, cfg.hd
+    assert H * K == D, "rwkv6 head_dim * heads must equal d_model"
+    r = jax.random.split(rng, 9)
+    lora = 64
+    p = {
+        "mu_r": jnp.full((D,), 0.5, _pdt(cfg)),
+        "mu_k": jnp.full((D,), 0.5, _pdt(cfg)),
+        "mu_v": jnp.full((D,), 0.5, _pdt(cfg)),
+        "mu_w": jnp.full((D,), 0.5, _pdt(cfg)),
+        "mu_g": jnp.full((D,), 0.5, _pdt(cfg)),
+        "wr": _init(r[0], (D, D), D ** -0.5, _pdt(cfg)),
+        "wk": _init(r[1], (D, D), D ** -0.5, _pdt(cfg)),
+        "wv": _init(r[2], (D, D), D ** -0.5, _pdt(cfg)),
+        "wg": _init(r[3], (D, D), D ** -0.5, _pdt(cfg)),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": _init(r[4], (D,), 0.5, jnp.float32) - 5.0,
+        "wA": _init(r[5], (D, lora), D ** -0.5, _pdt(cfg)),
+        "wB": _init(r[6], (lora, D), lora ** -0.5, _pdt(cfg)),
+        "u": _init(r[7], (H, K), 0.5, jnp.float32),  # bonus for current token
+        "ln_w": jnp.ones((D,), _pdt(cfg)),           # per-head group norm
+        "wo": _init(r[8], (D, D), D ** -0.5, _pdt(cfg)),
+    }
+    a = {k: (("embed", "heads_rw") if v.ndim == 2 and v.shape == (D, D)
+             else tuple([None] * v.ndim)) for k, v in p.items()}
+    a["wo"] = ("heads_rw", "embed")
+    return p, a
+
+
+_RWKV_CHUNK = 32
+
+
+def _rwkv_chunked(r, k, v, logw, S0, u, L: int):
+    """Chunk-parallel RWKV-6 recurrence (GLA-style, stable form).
+
+    The token-by-token scan reads+writes the (B,H,K,K) matrix state from
+    HBM every step — ~2·B·H·K²·4 bytes × T per layer, the dominant memory
+    term of rwkv6 prefill (§Perf cell c).  This form carries the state once
+    per L-token chunk (HBM traffic ÷L) and computes within-chunk
+    interactions as dense attention-like contractions (MXU work):
+
+        A[t,s] = Σ_c r[t,c]·k[s,c]·exp(LW[t−1,c] − LW[s,c])   (s < t)
+        A[t,t] = r_t·(u ⊙ k_t)
+        o      = A @ v
+        S'     = exp(LW[L]) ⊙ S + Σ_s (k_s ⊙ exp(LW[L]−LW[s])) v_sᵀ
+
+    Numerical stability: every exponent is a *difference* of cumulative
+    log-decays over a suffix of the chunk, hence ≤ 0 — no overflow, unlike
+    the separable exp(LW_t)·exp(−LW_s) factorization.  This mirrors TiLT's
+    partitioned streams: the chunk is the partition, S is the carried
+    boundary state.
+    """
+    B, T, H, K = r.shape
+    nC = T // L
+
+    def resh(x):  # (B,T,H,K) -> (nC, B, L, H, K)
+        return jnp.moveaxis(x.reshape(B, nC, L, H, K), 1, 0)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)     # strict s < t
+
+    def chunk(S, xs):
+        rb, kb, vb, wb = xs                                  # (B,L,H,K)
+        lw = jnp.cumsum(wb, axis=1)                          # LW_t inclusive
+        lw_prev = lw - wb                                    # LW_{t-1}
+        # pairwise decayed scores (exponent ≤ 0 by construction)
+        diff = lw_prev[:, :, None] - lw[:, None, :]          # (B,L,L,H,K)
+        pair = (rb[:, :, None] * kb[:, None, :]) * jnp.exp(
+            jnp.minimum(diff, 0.0))
+        A = jnp.einsum("blmhk->bhlm", pair)                  # sum over K
+        A = A * tri[None, None]
+        diag = jnp.einsum("blhk,hk,blhk->blh", rb, u, kb)    # bonus term
+        o = (jnp.einsum("bhlm,bmhv->blhv", A, vb)
+             + diag[..., None] * vb)
+        # cross-chunk contribution from the carried state
+        o = o + jnp.einsum("blhk,bhkv->blhv",
+                           rb * jnp.exp(lw_prev), S)
+        # state update
+        lwL = lw[:, -1:]                                     # (B,1,H,K)
+        S = (jnp.exp(lwL[:, 0])[..., None] * S
+             + jnp.einsum("blhk,blhv->bhkv",
+                          kb * jnp.exp(jnp.minimum(lwL - lw, 0.0)), vb))
+        return S, o
+
+    S_new, os = jax.lax.scan(chunk, S0, (rc, kc, vc, wc))
+    return S_new, jnp.moveaxis(os, 0, 1).reshape(B, T, H, K)
+
+
+def _token_shift(x, mu, tail):
+    """lerp(x_{t-1}, x_t, mu); tail is x_{-1} (B, D) from the prev chunk."""
+    prev = jnp.concatenate([tail[:, None, :].astype(x.dtype), x[:, :-1]],
+                           axis=1)
+    return prev + mu.astype(x.dtype) * (x - prev)
+
+
+def rwkv_mix(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """RWKV-6 time mix.  Returns (y, new_state).
+
+    state = {"S": (B,H,K,K) f32, "x_tail": (B,D)}.
+    """
+    B, T, D = x.shape
+    H, K = cfg.n_heads, cfg.hd
+    tail = (state["x_tail"] if state is not None
+            else jnp.zeros((B, D), x.dtype))
+
+    def proj(mu_key, w_key):
+        xs = _token_shift(x, p[mu_key], tail)
+        return jnp.einsum("btd,de->bte", xs, p[w_key].astype(x.dtype))
+
+    r = proj("mu_r", "wr").reshape(B, T, H, K)
+    k = proj("mu_k", "wk").reshape(B, T, H, K)
+    v = proj("mu_v", "wv").reshape(B, T, H, K)
+    g = jax.nn.silu(proj("mu_g", "wg"))
+
+    xw = _token_shift(x, p["mu_w"], tail)
+    ww = (p["w0"].astype(jnp.float32)
+          + jnp.einsum("btd,dl,le->bte", xw.astype(jnp.float32),
+                       p["wA"].astype(jnp.float32),
+                       p["wB"].astype(jnp.float32)))
+    logw = -jnp.exp(ww)                        # log decay ≤ 0, (B,T,D)
+    w = jnp.exp(logw).reshape(B, T, H, K)
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((B, H, K, K), jnp.float32))
+
+    r32, k32, v32 = (z.astype(jnp.float32) for z in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    logw = logw.reshape(B, T, H, K)
+
+    L = cfg.rwkv_chunk
+    if L and T >= 2 * L and T % L == 0:
+        S_new, o = _rwkv_chunked(r32, k32, v32, logw, S0, u, L)
+    else:
+        def step(S, inp):
+            rt, kt, vt, wt = inp  # (B,H,K) each
+            # o_t = r·(S + u⊙k v^T);  S' = diag(w) S + k v^T
+            kv = kt[..., :, None] * vt[..., None, :]       # (B,H,K,K)
+            o = jnp.einsum("bhk,bhkv->bhv", rt,
+                           S + u[None, :, :, None] * kv)
+            S = wt[..., :, None] * S + kv
+            return S, o
+
+        xs = tuple(jnp.moveaxis(z, 1, 0) for z in
+                   (r32, k32, v32, w.astype(jnp.float32)))
+        S_new, os = jax.lax.scan(step, S0, xs)
+        o = jnp.moveaxis(os, 0, 1)
+    o = o.reshape(B, T, D)                                 # (B,T,D) f32
+
+    # per-head group norm then gate
+    o = o.reshape(B, T, H, K)
+    o = o * jax.lax.rsqrt(jnp.mean(o * o, axis=-1, keepdims=True) + 1e-5)
+    o = (o.reshape(B, T, D) * p["ln_w"].astype(jnp.float32)).astype(x.dtype)
+    o = o * g
+    out = jnp.einsum("btd,de->bte", o, p["wo"].astype(x.dtype))
+    return out, {"S": S_new, "x_tail": x[:, -1]}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    H, K = cfg.n_heads, cfg.hd
+    return {"S": jnp.zeros((batch, H, K, K), jnp.float32),
+            "x_tail": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "c_tail": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype))}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_channel(rng, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    r = jax.random.split(rng, 3)
+    p = {
+        "mu_k": jnp.full((D,), 0.5, _pdt(cfg)),
+        "mu_r": jnp.full((D,), 0.5, _pdt(cfg)),
+        "wk": _init(r[0], (D, F), D ** -0.5, _pdt(cfg)),
+        "wv": _init(r[1], (F, D), F ** -0.5, _pdt(cfg)),
+        "wr": _init(r[2], (D, D), D ** -0.5, _pdt(cfg)),
+    }
+    a = {"mu_k": (None,), "mu_r": (None,),
+         "wk": ("embed", "mlp"), "wv": ("mlp", "embed"),
+         "wr": ("embed", "heads_rw")}
+    return p, a
+
+
+def rwkv_channel(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    B, T, D = x.shape
+    tail = (state["c_tail"] if state is not None
+            else jnp.zeros((B, D), x.dtype))
+    xk = _token_shift(x, p["mu_k"], tail)
+    xr = _token_shift(x, p["mu_r"], tail)
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["wk"].astype(x.dtype))))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                  p["wr"].astype(x.dtype)))
+    return r * kv, {"c_tail": x[:, -1]}

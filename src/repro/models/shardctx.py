@@ -1,0 +1,51 @@
+"""Activation-sharding hints, decoupled from model code.
+
+Drivers (dryrun / train / serve launchers) declare the mesh axes once via
+:func:`set_mesh_axes`; model code sprinkles :func:`hint` on the activations
+whose layout GSPMD tends to get wrong without help (logits over vocab,
+hidden states over batch).  With no axes declared (CPU smoke tests) hints
+are no-ops, so the model runs anywhere.
+
+``"dp"`` in a hint expands to the declared data-parallel axis group
+(("pod","data") on the multi-pod mesh); ``"model"`` passes through when the
+mesh has a model axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["set_mesh_axes", "clear", "hint"]
+
+_DP: Optional[tuple] = None
+_AXES: Optional[set] = None
+
+
+def set_mesh_axes(axes: Sequence[str]):
+    """Declare physical mesh axis names, e.g. ("pod","data","model")."""
+    global _DP, _AXES
+    _AXES = set(axes)
+    _DP = tuple(a for a in ("pod", "data") if a in _AXES) or None
+
+
+def clear():
+    global _DP, _AXES
+    _DP = None
+    _AXES = None
+
+
+def hint(x, *names):
+    """Constrain ``x``'s sharding; names are mesh axes, "dp", or None."""
+    if _AXES is None:
+        return x
+    parts = []
+    for n in names:
+        if n == "dp":
+            parts.append(_DP)
+        elif n in _AXES if n is not None else False:
+            parts.append(n)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))

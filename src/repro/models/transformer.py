@@ -1,0 +1,339 @@
+"""Decoder-only LM stack covering dense / MoE / Griffin / RWKV-6 families.
+
+Layer patterns (``cfg.pattern``) cycle through block kinds; the stack is
+compiled as a ``lax.scan`` over *superblocks* (one pattern period each) with
+stacked parameters — compile time is O(pattern period), not O(n_layers),
+which is what makes the 512-device dry-run of 40+-layer models tractable
+(and is the standard MaxText-style production trick).  Remainder layers
+(n_layers % period) are unrolled.
+
+``remat``: the scan body is wrapped in ``jax.checkpoint`` for training so
+activation memory is O(1) in depth (recomputed in backward).
+
+Public surface (consumed by model.py / launch):
+  init(rng, cfg)                      -> (params, axes)
+  forward(params, cfg, tokens, ...)   -> logits (train/prefill path)
+  train_loss(params, cfg, batch)      -> scalar loss
+  init_cache(cfg, B, S_max)           -> cache pytree
+  decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import recurrent as R
+from .shardctx import hint
+
+__all__ = ["init", "forward", "train_loss", "init_cache", "decode_step",
+           "prefill"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(rng, cfg: ModelConfig, kind: str):
+    D = cfg.d_model
+    r = jax.random.split(rng, 3)
+    p: dict = {"ln1": jnp.zeros((D,), jnp.float32),
+               "ln2": jnp.zeros((D,), jnp.float32)}
+    a: dict = {"ln1": (None,), "ln2": (None,)}
+    if kind in ("global", "local", "bidir"):
+        p["attn"], a["attn"] = L.init_attention(r[0], cfg)
+    elif kind == "rec":
+        p["rec"], a["rec"] = R.init_rglru_block(r[0], cfg)
+    elif kind == "rwkv":
+        p["mix"], a["mix"] = R.init_rwkv_mix(r[0], cfg)
+    else:  # pragma: no cover
+        raise KeyError(kind)
+
+    if kind == "rwkv":
+        p["chan"], a["chan"] = R.init_rwkv_channel(r[1], cfg)
+    elif cfg.is_moe:
+        p["moe"], a["moe"] = L.init_moe(r[1], cfg)
+    else:
+        p["mlp"], a["mlp"] = L.init_mlp(r[1], cfg)
+
+    if cfg.softcap_attn:  # gemma2 sandwich norms
+        p["ln1_post"] = jnp.zeros((D,), jnp.float32)
+        p["ln2_post"] = jnp.zeros((D,), jnp.float32)
+        a["ln1_post"] = (None,)
+        a["ln2_post"] = (None,)
+    return p, a
+
+
+def _block(p, x, cfg: ModelConfig, kind: str, pos, state):
+    """One block. state: kind-specific decode state or None. Returns
+    (x, new_state, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.seq_parallel:
+        # residual stream sharded over (dp, model-on-T): norms run local,
+        # attention/MLP boundaries become all-gather / reduce-scatter pairs
+        # instead of full activation all-reduces (Megatron-SP recast)
+        x = hint(x, "dp", "model", None)
+    h = L.rms_norm(x, p["ln1"])
+    if kind in ("global", "local", "bidir"):
+        h, new_state = L.attention(p["attn"], h, cfg, kind, pos, cache=state)
+    elif kind == "rec":
+        h, new_state = R.rglru_block(p["rec"], h, cfg, state)
+    else:  # rwkv
+        h, new_state = R.rwkv_mix(p["mix"], h, cfg, state)
+    if cfg.softcap_attn:
+        h = L.rms_norm(h, p["ln1_post"])
+    x = x + h
+
+    h = L.rms_norm(x, p["ln2"])
+    if kind == "rwkv":
+        h, cstate = R.rwkv_channel(p["chan"], h, cfg, state)
+        if new_state is not None:
+            new_state = {**new_state, **cstate}
+    elif cfg.is_moe:
+        h, aux = L.moe_ffn(p["moe"], h, cfg)
+    else:
+        h = L.mlp(p["mlp"], h, cfg)
+    if cfg.softcap_attn:
+        h = L.rms_norm(h, p["ln2_post"])
+    return x + h, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# stack planning: scan superblocks + unrolled remainder
+# ---------------------------------------------------------------------------
+
+def _map_axes(fn, tree):
+    """Map over an axes tree (dicts of tuple leaves — tuples are leaves
+    here, unlike in jax.tree_util)."""
+    if isinstance(tree, dict):
+        return {k: _map_axes(fn, v) for k, v in tree.items()}
+    return fn(tree)
+
+
+def _plan(cfg: ModelConfig):
+    P = len(cfg.pattern)
+    n_sb = cfg.n_layers // P if cfg.scan_layers else 0
+    if n_sb < 2:  # not worth scanning
+        n_sb = 0
+    rest = cfg.n_layers - n_sb * P
+    rest_kinds = tuple(cfg.pattern[(n_sb * P + i) % P] for i in range(rest))
+    return P, n_sb, rest_kinds
+
+
+def init(rng, cfg: ModelConfig):
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    P, n_sb, rest_kinds = _plan(cfg)
+    r = jax.random.split(rng, 4 + len(rest_kinds))
+
+    params: dict = {}
+    axes: dict = {}
+
+    params["embed"] = L._init(r[0], (Vp, D), D ** -0.5,
+                              jnp.dtype(cfg.param_dtype))
+    axes["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        params["head"] = L._init(r[1], (D, Vp), D ** -0.5,
+                                 jnp.dtype(cfg.param_dtype))
+        axes["head"] = ("embed", "vocab")
+    params["ln_f"] = jnp.zeros((D,), jnp.float32)
+    axes["ln_f"] = (None,)
+
+    if n_sb:
+        def init_sb(rr):
+            ps, as_ = {}, {}
+            rs = jax.random.split(rr, P)
+            for i, kind in enumerate(cfg.pattern):
+                ps[f"b{i}"], as_[f"b{i}"] = _init_block(rs[i], cfg, kind)
+            return ps, as_
+
+        sb_rngs = jax.random.split(r[2], n_sb)
+        stacked = [init_sb(rr)[0] for rr in sb_rngs]
+        params["scan"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *stacked)
+        _, sb_axes = init_sb(sb_rngs[0])
+        axes["scan"] = _map_axes(lambda ax: ("layers",) + ax, sb_axes)
+    rest_rngs = r[4:]
+    for i, kind in enumerate(rest_kinds):
+        params[f"rest{i}"], axes[f"rest{i}"] = _init_block(
+            rest_rngs[i], cfg, kind)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return hint(x, "dp", None, None)
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    x = L.rms_norm(x, params["ln_f"])
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+    logits = hint(logits.astype(jnp.float32), "dp", None, "model")
+    if cfg.softcap_final:
+        c = cfg.softcap_final
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens, caches=None, pos0=None):
+    """Full forward.  tokens (B, T).  caches/pos0 given → decode/prefill
+    with state.  Returns (logits, new_caches, aux)."""
+    B, T = tokens.shape
+    P, n_sb, rest_kinds = _plan(cfg)
+    if pos0 is None:
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    else:
+        pos = pos0 + jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                      (B, T))
+    x = _embed(params, cfg, tokens)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict = {}
+
+    if n_sb:
+        def body(carry, xs):
+            xc, auxc = carry
+            ps, st = xs
+            new_st = {}
+            for i, kind in enumerate(cfg.pattern):
+                s_i = st[f"b{i}"] if st is not None else None
+                xc, ns, aux = _block(ps[f"b{i}"], xc, cfg, kind, pos, s_i)
+                new_st[f"b{i}"] = ns if ns is not None else 0
+                auxc = auxc + aux
+            return (xc, auxc), new_st
+
+        if cfg.remat and caches is None:
+            body = jax.checkpoint(body)
+        st = caches["scan"] if caches is not None else None
+        if st is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, p_: (body(c, (p_, None))[0], None),
+                (x, aux_total), params["scan"])
+        else:
+            (x, aux_total), new_scan_st = jax.lax.scan(
+                body, (x, aux_total), (params["scan"], st))
+            new_caches["scan"] = new_scan_st
+
+    for i, kind in enumerate(rest_kinds):
+        st = caches[f"rest{i}"] if caches is not None else None
+        x, ns, aux = _block(params[f"rest{i}"], x, cfg, kind, pos, st)
+        aux_total = aux_total + aux
+        if ns is not None:
+            new_caches[f"rest{i}"] = ns
+
+    logits = _unembed(params, cfg, x)
+    return logits, (new_caches if caches is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# training loss
+# ---------------------------------------------------------------------------
+
+def train_loss(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """Causal LM cross-entropy + MoE aux loss.  batch: tokens/labels (B,S)."""
+    logits, _, aux = forward(params, cfg, batch["tokens"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # label pick via masked reduce (NOT take_along_axis): the gather would
+    # force GSPMD to all-gather the vocab-sharded logits; the iota-compare
+    # fuses into the reduction and keeps every buffer sharded.
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == batch["labels"][..., None], logits,
+                             0.0), axis=-1)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _init_block_state(cfg: ModelConfig, kind: str, B: int, S_max: int):
+    N, K = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    if kind == "global":
+        return L.KVCache(jnp.zeros((B, S_max, N, K), dt),
+                         jnp.zeros((B, S_max, N, K), dt),
+                         jnp.zeros((), jnp.int32), 0)
+    if kind == "local":
+        W = min(cfg.window, S_max)
+        return L.KVCache(jnp.zeros((B, W, N, K), dt),
+                         jnp.zeros((B, W, N, K), dt),
+                         jnp.zeros((), jnp.int32), W)
+    if kind == "rec":
+        return R.init_rglru_state(cfg, B)
+    if kind == "rwkv":
+        return R.init_rwkv_state(cfg, B)
+    raise KeyError(kind)  # pragma: no cover
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    P, n_sb, rest_kinds = _plan(cfg)
+    caches: dict = {}
+    if n_sb:
+        def one_sb():
+            return {f"b{i}": _init_block_state(cfg, kind, B, S_max)
+                    for i, kind in enumerate(cfg.pattern)}
+        caches["scan"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_sb,) + x.shape),
+            one_sb())
+    for i, kind in enumerate(rest_kinds):
+        caches[f"rest{i}"] = _init_block_state(cfg, kind, B, S_max)
+    return caches
+
+
+def _block_state_axes(cfg: ModelConfig, kind: str, S_max: int):
+    """Logical axes for decode state, as comma-joined strings (leaves).
+    The KVCache ``window`` aux must match init_cache's (pytree metadata)."""
+    if kind in ("global", "local"):
+        kv = "batch,time,kv_heads,none"
+        w = min(cfg.window, S_max) if kind == "local" else 0
+        return L.KVCache(kv, kv, "scalar", w)
+    if kind == "rec":
+        return {"h": "batch,lru", "conv": "batch,none,lru"}
+    if kind == "rwkv":
+        return {"S": "batch,heads,none,none", "x_tail": "batch,none",
+                "c_tail": "batch,none"}
+    raise KeyError(kind)  # pragma: no cover
+
+
+def cache_axes(cfg: ModelConfig, S_max: int):
+    """Mirror of init_cache carrying logical-axis strings — consumed by
+    launch/sharding.cache_shardings for decode-cell in_shardings."""
+    P, n_sb, rest_kinds = _plan(cfg)
+    axes: dict = {}
+    if n_sb:
+        one = {f"b{i}": _block_state_axes(cfg, kind, S_max)
+               for i, kind in enumerate(cfg.pattern)}
+        axes["scan"] = jax.tree_util.tree_map(lambda s: "layers," + s, one)
+    for i, kind in enumerate(rest_kinds):
+        axes[f"rest{i}"] = _block_state_axes(cfg, kind, S_max)
+    return axes
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos):
+    """One decode step.  tokens (B, 1); pos int32 scalar (context length so
+    far).  Returns (logits (B,1,V), new_caches)."""
+    logits, new_caches, _ = forward(params, cfg, tokens, caches=caches,
+                                    pos0=pos)
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int = None):
+    """Prefill: run the full prompt through the model building caches sized
+    for ``max_len`` total tokens (prompt + decode budget)."""
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, max_len or S)
+    logits, new_caches, _ = forward(params, cfg, tokens, caches=caches,
+                                    pos0=jnp.zeros((), jnp.int32))
+    return logits[:, -1:], new_caches

@@ -1,0 +1,260 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, all in seconds-per-step on the
+TARGET hardware (TPU v5e-like constants; this container is CPU-only so the
+terms are *derived from the compiled HLO*, not measured):
+
+    compute    = HLO_FLOPs / (peak_FLOP/s)           [per device]
+    memory     = HLO_bytes / HBM_bw                  [per device]
+    collective = Σ collective bytes-on-wire / link_bw [per device]
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes accessed of the
+per-device SPMD module.  Collective bytes are NOT in cost_analysis — we
+parse the optimized HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converted to
+bytes-on-wire with the standard ring-algorithm factors:
+
+    all-gather      out × (g-1)/g        reduce-scatter  in × (g-1)/g
+    all-reduce      2 × size × (g-1)/g   all-to-all      size × (g-1)/g
+    collective-permute  size
+
+The dominant term is the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-flavored target constants (per chip)."""
+
+    peak_flops: float = 197e12     # bf16
+    hbm_bw: float = 819e9          # B/s
+    link_bw: float = 50e9          # B/s per ICI link (per the assignment)
+    hbm_bytes: float = 16e9
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape or tuple-of-shapes string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", re.M)
+_REF_RE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TC_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """name -> (body text, is_entry). HLO printer emits one computation per
+    top-level ``name (...) -> ... { ... }`` block."""
+    comps = {}
+    entry = None
+    pos = 0
+    for m in _COMP_HDR_RE.finditer(hlo_text):
+        start = m.end()
+        # find matching closing brace at column 0
+        end = hlo_text.find("\n}", start)
+        if end < 0:
+            end = len(hlo_text)
+        name = m.group(1)
+        comps[name] = hlo_text[start:end]
+        if m.group(0).startswith("ENTRY"):
+            entry = name
+        pos = end
+    return comps, entry
+
+
+def _line_collectives(body: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(body):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in m.group(0):
+            continue  # async pairs counted at -start
+        size = _shape_bytes(shape_str)
+        line_end = body.find("\n", m.start())
+        line = body[m.start():line_end if line_end > 0 else None]
+        g = None
+        mv2 = _GROUPS_V2_RE.search(line)
+        if mv2:
+            g = int(mv2.group(2))
+        else:
+            mg = _GROUPS_RE.search(line)
+            if mg:
+                g = len([x for x in mg.group(1).split(",") if x.strip()])
+        if g is None or g <= 1:
+            g = 2  # conservative: at least a pair
+        frac = (g - 1) / g
+        if kind == "all-gather":
+            wire = size * frac            # size == gathered output
+        elif kind == "all-reduce":
+            wire = 2 * size * frac
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)         # size == scattered output (in/g)
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:  # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+def _trip_count(cond_body: str) -> int:
+    """Scan-style loop condition: iteration counter compared to a constant.
+    Heuristic: the largest s32 scalar constant in the condition."""
+    consts = [int(c) for c in _TC_CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes-on-wire by collective kind (ring-algorithm model).
+
+    While-loop aware: collectives inside a ``lax.scan``/``while`` body are
+    multiplied by the loop trip count (XLA's cost_analysis does NOT do this
+    — bodies are counted once — so neither would a naive text scrape)."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return {"total": 0.0, **_line_collectives(hlo_text)} | {
+            "total": sum(_line_collectives(hlo_text).values())}
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def cost(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        body = comps[name]
+        total = dict(_line_collectives(body))
+
+        # while ops: condition=%c, body=%b → multiply body cost by trips
+        for wm in re.finditer(
+                r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*"
+                r"body=%?([\w.\-]+)", body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            sub = cost(wbody, stack + (name,))
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + trips * v
+
+        # calls / fusions / appliers: multiplier 1
+        seen_refs = set()
+        for rm in _REF_RE.finditer(body):
+            ref = rm.group(1)
+            # body/condition already handled above
+            if f"body=%{ref}" in body or f"body={ref}" in body:
+                continue
+            if f"condition=%{ref}" in body or f"condition={ref}" in body:
+                continue
+            if ref in seen_refs:
+                continue
+            seen_refs.add(ref)
+            sub = cost(ref, stack + (name,))
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + v
+        for bm in _BRANCH_RE.finditer(body):
+            for ref in bm.group(1).replace("%", "").split(","):
+                ref = ref.strip()
+                sub = cost(ref, stack + (name,))
+                for k, v in sub.items():
+                    total[k] = total.get(k, 0.0) + v
+        memo[name] = total
+        return total
+
+    out = cost(entry)
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device bytes on wire
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float           # 6·N·D useful flops (per device)
+    hw: HW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achievable if the step runs at
+        the dominant-term time: useful_compute_time / bound_time."""
+        useful_s = self.model_flops / self.hw.peak_flops
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(cost: dict, hlo_text: str, model_flops_per_device: float,
+             hw: Optional[HW] = None) -> RooflineReport:
+    hw = hw or HW()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll["total"],
+        coll_breakdown={k: v for k, v in coll.items() if k != "total"},
+        compute_s=flops / hw.peak_flops,
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=coll["total"] / hw.link_bw,
+        model_flops=model_flops_per_device, hw=hw)

@@ -1,0 +1,41 @@
+"""Re-derive roofline terms from saved dry-run HLO (no recompilation).
+
+Parser improvements (while-trip multipliers, ring factors) can be replayed
+over out/hlo/*.hlo; cost_analysis flops/bytes are taken from the cell JSON.
+
+Usage: PYTHONPATH=src python -m repro.roofline.recompute out/dryrun out/hlo
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from .analysis import roofline
+
+
+def main(out_dir: str = "out/dryrun", hlo_dir: str = "out/hlo"):
+    for jpath in sorted(glob.glob(os.path.join(out_dir, "*_single.json"))):
+        with open(jpath) as f:
+            d = json.load(f)
+        if not d.get("ok") or "roofline" not in d:
+            continue
+        hpath = os.path.join(
+            hlo_dir, f"{d['arch']}_{d['shape']}_{d['mesh']}.hlo")
+        if not os.path.exists(hpath):
+            continue
+        with open(hpath) as f:
+            hlo = f.read()
+        rep = roofline(d["cost"] | {"bytes accessed":
+                                    d["cost"].get("bytes accessed", 0.0)},
+                       hlo, d["roofline"]["model_flops"])
+        d["roofline"] = rep.to_dict()
+        with open(jpath, "w") as f:
+            json.dump(d, f, indent=1)
+        print(f"recomputed {os.path.basename(jpath)}: "
+              f"dom={rep.dominant} rf={rep.roofline_fraction:.4f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

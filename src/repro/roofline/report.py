@@ -1,0 +1,96 @@
+"""Render the dry-run/roofline markdown tables into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [out/dryrun]
+Replaces the <!-- DRYRUN_SUMMARY --> and <!-- ROOFLINE_TABLE --> markers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HBM = 16e9
+
+
+def load(out_dir):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def dryrun_summary(cells):
+    ok = [c for c in cells if c.get("ok")]
+    fail = [c for c in cells if not c.get("ok")]
+    single = [c for c in ok if c["mesh"] == "single"]
+    multi = [c for c in ok if c["mesh"] == "multi"]
+    fits = [c for c in ok if c.get("per_device_bytes", 0) <= HBM]
+    lines = [
+        f"Compiled OK: **{len(ok)}/{len(cells)}** runs "
+        f"({len(single)} single-pod + {len(multi)} multi-pod); "
+        f"{len(fits)}/{len(ok)} fit in 16 GB HBM per device.",
+        "",
+        "| arch | shape | mesh | devices | GB/device | fits | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in ok:
+        gb = c.get("per_device_bytes", 0) / 1e9
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['devices']} "
+            f"| {gb:.2f} | {'✓' if gb * 1e9 <= HBM else '✗'} "
+            f"| {c.get('compile_s', 0)}"
+            f"{'+' + str(c['unrolled_compile_s']) if 'unrolled_compile_s' in c else ''} |")
+    for c in fail:
+        lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | - | "
+                     f"FAIL: {c.get('error', '?')[:60]} | - |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    rows = [c for c in cells if c.get("ok") and c.get("roofline")]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | roofline frac | one-line next step |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+
+    def nextstep(c):
+        r = c["roofline"]
+        d = r["dominant"]
+        if d == "collective":
+            kinds = r.get("coll_breakdown", {})
+            top = max(kinds, key=kinds.get) if kinds else "?"
+            return (f"cut {top} bytes (seq-parallel/RS+AG or wider TP "
+                    f"divisibility)")
+        if d == "memory":
+            if c["shape"].startswith("decode") or c["shape"].startswith(
+                    "long"):
+                return "quantize KV cache (cache_dtype=f8) / fuse reads"
+            return "fewer materializations: fused attention kernel, narrower dtypes"
+        return "MXU-align tiles; raise arithmetic intensity per pass"
+
+    for c in rows:
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.4f} | {nextstep(c)} |")
+    return "\n".join(lines)
+
+
+def main(out_dir="out/dryrun", exp="EXPERIMENTS.md"):
+    cells = load(out_dir)
+    with open(exp) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_SUMMARY -->", dryrun_summary(cells))
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(cells))
+    with open(exp, "w") as f:
+        f.write(text)
+    print(f"updated {exp} with {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

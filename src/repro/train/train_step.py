@@ -1,0 +1,93 @@
+"""The production train/serve step functions that get pjit-compiled.
+
+Distributed-optimization notes (DESIGN.md §4):
+
+* **Gradient compression**: parameters are bf16, so the DP gradient
+  all-reduce XLA inserts is a *bf16* collective — half the cross-pod bytes
+  of f32 master-grad training.  Optimizer state stays f32 (m/v), sharded.
+* **Compute/comm overlap**: FSDP all-gathers and grad reduce-scatters are
+  scheduled by XLA's latency-hiding scheduler inside the layer scan; the
+  dry-run HLO is checked for the expected schedule (roofline/analysis.py).
+* **Microbatching**: optional gradient accumulation via ``lax.scan`` over
+  microbatches (activation memory ∝ 1/n_micro at constant global batch).
+* **Donation**: params/opt-state buffers are donated so the update is
+  in-place (no 2× parameter peak).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..models.shardctx import hint
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["make_train_step", "make_serve_steps"]
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None,
+                    n_micro: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` leaves are (B, ...); with n_micro > 1 they are reshaped to
+    (n_micro, B/n_micro, ...) and grad-accumulated.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def to_micro(x):
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                # keep the BATCH axis on the dp mesh axes — without this,
+                # GSPMD may shard the microbatch axis instead (catastrophic:
+                # devices would own different accumulation steps)
+                return hint(y, None, "dp", *([None] * (y.ndim - 2)))
+
+            mb = jax.tree_util.tree_map(to_micro, batch)
+
+            def acc(carry, micro):
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                return (carry[0] + l,
+                        jax.tree_util.tree_map(jnp.add, carry[1], g)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_steps(model: Model):
+    """Returns (prefill_fn, decode_fn) matching the model family's
+    signatures (see models/model.py input_specs)."""
+    cfg = model.cfg
+
+    if cfg.family == "encdec":
+        def prefill_fn(params, tokens, frames):
+            return model.prefill(params, tokens, frames)
+
+        def decode_fn(params, caches, tokens, pos, enc_out):
+            return model.decode_step(params, caches, tokens, pos, enc_out)
+        return prefill_fn, decode_fn
+
+    def prefill_fn(params, tokens):
+        return model.prefill(params, tokens)
+
+    def decode_fn(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return prefill_fn, decode_fn

@@ -1,0 +1,120 @@
+"""Cross-engine equivalence: every benchmark app must produce the same
+stream from the TiLT compiler and from the event-centric EventSPE baseline.
+
+This is the strongest correctness check in the suite: two independent
+implementations (time-centric JAX vs event-centric numpy) of the paper's
+eight applications + YSB + the four primitive ops.
+
+Comparison semantics: outputs are compared as event sets (timestamp, value)
+on the common timestamp domain.  f32-vs-f64 predicate-boundary flips (a
+``Where`` whose operand is within tolerance of the threshold) are excluded
+by a margin rule rather than counted as mismatches.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compile as qc
+from repro.core.parallel import partition_run
+from repro.core.stream import SnapshotGrid
+from repro.data import apps as A
+from repro.spe import eventspe as es
+
+N = 3000
+BATCH = 500
+REL_TOL = 2e-3          # value agreement
+MARGIN = 1e-2           # |predicate operand| below this → flip excused
+
+
+def _grids(data):
+    out = {}
+    for name, d in data.items():
+        val = d["value"]
+        v = ({k: jnp.asarray(a, jnp.float32) for k, a in val.items()}
+             if isinstance(val, dict) else jnp.asarray(val, jnp.float32))
+        out[name] = SnapshotGrid(value=v, valid=jnp.asarray(d["valid"]),
+                                 t0=0, prec=1)
+    return out
+
+
+def _batches(data):
+    for i in range(0, N, BATCH):
+        sl = slice(i, i + BATCH)
+        env = {}
+        for nm, dd in data.items():
+            v = dd["value"]
+            v = ({k: a[sl] for k, a in v.items()} if isinstance(v, dict)
+                 else v[sl])
+            env[nm] = es.Batch(dd["ts"][sl], v, dd["valid"][sl])
+        yield env
+
+
+def _vals(v, i):
+    if isinstance(v, dict):
+        return {k: float(np.asarray(a)[i]) for k, a in v.items()}
+    return float(np.asarray(v)[i])
+
+
+def _compare(app):
+    data = app.make_input(N, 42)
+    exe = qc.compile_query(app.query.node, out_len=N // app.query.prec,
+                           pallas=False)
+    out = partition_run(exe, _grids(data), 0, 1)
+    m = np.asarray(out.valid)
+    t_ts = out.t0 + (np.arange(len(m)) + 1) * out.prec
+    tilt_idx = {int(ts): i for i, ts in enumerate(t_ts)}
+
+    spe_outs = app.spe.run(_batches(data))
+
+    flips, checked, max_err = 0, 0, 0.0
+    for o in spe_outs:
+        for j in range(len(o.ts)):
+            i = tilt_idx.get(int(o.ts[j]))
+            if i is None:
+                assert not o.valid[j], f"SPE event at {o.ts[j]} outside TiLT domain"
+                continue
+            if bool(m[i]) != bool(o.valid[j]):
+                # predicate-boundary flip: excused when the visible value is
+                # within MARGIN of zero (Where thresholds compare against 0
+                # in every app; f32-vs-f64 rounding flips only those)
+                tv, sv = _vals(out.value, i), _vals(o.value, j)
+                mag = min(abs(v) for v in
+                          ([sv] if not isinstance(sv, dict) else
+                           list(sv.values()))
+                          + ([tv] if not isinstance(tv, dict) else
+                             list(tv.values())))
+                if mag >= MARGIN:
+                    flips += 1
+                continue
+            if not m[i]:
+                continue
+            checked += 1
+            tv, sv = _vals(out.value, i), _vals(o.value, j)
+            if isinstance(tv, dict):
+                err = max(abs(tv[k] - sv[k]) / max(abs(sv[k]), 1.0)
+                          for k in tv)
+            else:
+                err = abs(tv - sv) / max(abs(sv), 1.0)
+            max_err = max(max_err, err)
+    return flips, checked, max_err
+
+
+@pytest.mark.parametrize("name", sorted(A.APPS))
+def test_app_equivalence(name):
+    app = A.make_app(name)
+    flips, checked, max_err = _compare(app)
+    assert checked > 10, f"{name}: only {checked} comparable events"
+    # predicate-boundary flips: allow a small fraction (f32 vs f64 at the
+    # Where threshold); everything else must agree.
+    assert flips <= max(3, checked // 200), (
+        f"{name}: {flips} validity mismatches over {checked} events")
+    assert max_err < REL_TOL, f"{name}: max rel err {max_err:.2e}"
+
+
+@pytest.mark.parametrize("op", A.TEMPORAL_OPS)
+def test_temporal_op_equivalence(op):
+    app = A.temporal_op(op)
+    flips, checked, max_err = _compare(app)
+    assert checked > 10
+    assert flips == 0, f"{op}: {flips} validity mismatches"
+    assert max_err < 1e-5, f"{op}: max rel err {max_err:.2e}"

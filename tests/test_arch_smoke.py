@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + one prefill/decode consistency check on CPU.
+
+The FULL assigned configs are exercised only via the dry-run (lowering on
+ShapeDtypeStructs, no allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import registry
+from repro.models.model import build_model
+
+ARCHS = sorted(registry())
+
+
+def _smoke_cfg(arch):
+    return registry()[arch][1]
+
+
+def _batch(cfg, rng, B=2, S=32):
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = _smoke_cfg(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params, axes = model.init(rng)
+    # axes tree mirrors params tree
+    p_leaves = jax.tree_util.tree_leaves(params)
+    batch = _batch(cfg, rng)
+
+    loss, grads = jax.jit(jax.value_and_grad(model.train_loss))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss {loss}"
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Decoding token-by-token must match the full parallel forward."""
+    cfg = _smoke_cfg(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params, _ = model.init(rng)
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (B, cfg.enc_seq, cfg.d_model),
+                                   jnp.float32)
+        from repro.models import encdec
+        enc = encdec.forward_encoder(params, cfg, frames)
+        full_logits, _ = encdec._decoder(params, cfg, tokens, enc)
+        # prefill on the first half, decode the second half step by step
+        half = S // 2
+        logits_p, caches, enc_out = model.prefill(
+            params, tokens[:, :half], frames, max_len=S)
+        np.testing.assert_allclose(
+            np.asarray(logits_p[:, -1]), np.asarray(full_logits[:, half - 1]),
+            rtol=2e-2, atol=2e-2)
+        for t in range(half, S):
+            logits_d, caches = model.decode_step(
+                params, caches, tokens[:, t:t + 1], jnp.int32(t), enc_out)
+            np.testing.assert_allclose(
+                np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, t]),
+                rtol=2e-2, atol=2e-2,
+                err_msg=f"{arch}: decode step {t}")
+        return
+
+    from repro.models import transformer
+    full_logits, _, _ = transformer.forward(params, cfg, tokens)
+    half = S // 2
+    logits_p, caches = model.prefill(params, tokens[:, :half], max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, -1]), np.asarray(full_logits[:, half - 1]),
+        rtol=2e-2, atol=2e-2, err_msg=f"{arch}: prefill tail")
+    for t in range(half, S):
+        logits_d, caches = model.decode_step(
+            params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=2e-2, atol=2e-2, err_msg=f"{arch}: decode step {t}")
+
+
+def test_rwkv_chunked_matches_stepwise():
+    """The chunk-parallel RWKV-6 form (EXPERIMENTS §Perf c.1) must be exact
+    against the token-by-token recurrence, including the carried state."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.models.recurrent import _rwkv_chunked
+
+    rng = np.random.default_rng(0)
+    B, T, H, K, L = 2, 96, 3, 8, 32
+    mk = lambda: jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    logw = jnp.asarray(-np.exp(rng.normal(-1.5, 1.0, (B, T, H, K))),
+                       jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    S0 = jnp.asarray(rng.normal(size=(B, H, K, K)), jnp.float32) * 0.3
+
+    S = S0
+    outs = []
+    for t in range(T):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(logw[:, t])
+        kv = kt[..., :, None] * vt[..., None, :]
+        outs.append(jnp.einsum("bhk,bhkv->bhv", rt,
+                               S + u[None, :, :, None] * kv))
+        S = wt[..., :, None] * S + kv
+    o_ref = jnp.stack(outs, 1)
+
+    S_c, o_c = _rwkv_chunked(r, k, v, logw, S0, u, L)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_seq_parallel_and_cache_dtype_smoke():
+    """The §Perf levers must not change semantics (1-device mesh: hints are
+    no-ops numerically; f8 cache quantization stays within tolerance)."""
+    import dataclasses
+    cfg0 = registry()["qwen3-1.7b"][1]
+    model0 = build_model(cfg0)
+    rng = jax.random.PRNGKey(0)
+    params, _ = model0.init(rng)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg0.vocab)
+    from repro.models import transformer
+    base, _, _ = transformer.forward(params, cfg0, tokens)
+
+    cfg_sp = dataclasses.replace(cfg0, seq_parallel=True)
+    sp, _, _ = transformer.forward(params, cfg_sp, tokens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(sp),
+                               rtol=1e-5, atol=1e-5)
+
+    cfg_f8 = dataclasses.replace(cfg0, cache_dtype="float8_e4m3fn")
+    model8 = build_model(cfg_f8)
+    logits_p, caches = model8.prefill(params, tokens[:, :8], max_len=16)
+    l8, caches = model8.decode_step(params, caches, tokens[:, 8:9],
+                                    jnp.int32(8))
+    # f8 cache: same argmax direction, looser numeric agreement
+    lb, _, _ = transformer.forward(params, cfg0, tokens[:, :9])
+    corr = np.corrcoef(np.asarray(l8[:, 0]).ravel(),
+                       np.asarray(lb[:, -1]).ravel())[0, 1]
+    assert corr > 0.98, corr

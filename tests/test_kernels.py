@@ -1,0 +1,90 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle
+across a shape/dtype/window sweep, plus the fast jnp block fallback."""
+import os
+
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import window_reduce as wr
+
+SHAPES = [(64, 1, 8), (257, 2, 16), (533, 3, 37), (1024, 4, 128),
+          (100, 1, 100), (96, 2, 256)]  # window > T included
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("T,C,W", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_prefix_scan_kernel(T, C, W, dtype):
+    rng = np.random.default_rng(T + C)
+    x = jnp.asarray(rng.normal(size=(C, T)), dtype)
+    out = wr.prefix_scan(x, block=64, interpret=True)
+    want = np.cumsum(np.asarray(x, np.float32), axis=-1)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("T,C,W", SHAPES)
+def test_vanherk_kernel_max_min(T, C, W):
+    rng = np.random.default_rng(T * 7 + W)
+    x = jnp.asarray(rng.normal(size=(C, T)).astype(np.float32))
+    valid = jnp.asarray(rng.random(T) > 0.3)
+    for op, comb, ident in (("max", jnp.maximum, -jnp.inf),
+                            ("min", jnp.minimum, jnp.inf)):
+        v, a = ops.sliding_assoc(x, valid, W, op, pallas=True)
+        xm = jnp.where(valid[None], x, ident)
+        vr, ar = ref.sliding_assoc_ref(xm, valid, W, comb, ident)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-6)
+        assert np.array_equal(np.asarray(a), np.asarray(ar)), op
+
+
+@pytest.mark.parametrize("T,C,W", SHAPES)
+@pytest.mark.parametrize("algo", ["block", "soe"])
+@pytest.mark.parametrize("pallas", [True, False])
+def test_sliding_sum(T, C, W, algo, pallas):
+    rng = np.random.default_rng(T + W)
+    x = jnp.asarray(rng.normal(size=(C, T)).astype(np.float32))
+    valid = jnp.asarray(rng.random(T) > 0.2)
+    s, n = ops.sliding_sum(x, valid, W, pallas=pallas, algo=algo)
+    sr, nr = ref.sliding_sum_ref(x, valid, W)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(nr), atol=0.5)
+
+
+def test_block_beats_soe_numerics():
+    """The beyond-paper block algorithm must bound error by window content;
+    SoE error grows with stream length (DESIGN.md §2)."""
+    T, W = 200_000, 64
+    rng = np.random.default_rng(0)
+    xs = (rng.normal(1000.0, 1.0, T)).astype(np.float32)  # large DC offset
+    x = jnp.asarray(xs)[None, :]
+    valid = jnp.ones((T,), bool)
+    want = ref.sliding_sum_ref(x, valid, W)[0]
+    # float64 oracle
+    c = np.concatenate([[0], np.cumsum(xs.astype(np.float64))])
+    exact = c[W:] - c[:-W]
+    s_block, _ = ops.sliding_sum(x, valid, W, pallas=False, algo="block")
+    s_soe, _ = ops.sliding_sum(x, valid, W, pallas=False, algo="soe")
+    err_block = np.abs(np.asarray(s_block)[0, W:] - exact[:-1 or None][:len(exact)])
+    err_block = np.abs(np.asarray(s_block)[0, W - 1:] - exact).max()
+    err_soe = np.abs(np.asarray(s_soe)[0, W - 1:] - exact).max()
+    assert err_block < 0.5, err_block
+    assert err_soe > err_block * 10, (err_soe, err_block)
+
+
+def test_vanherk_block_ref_matches_reduce_window():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 300)).astype(np.float32))
+    for W in (8, 33, 128):
+        got = ref.sliding_assoc_block_ref(x, W, jnp.maximum, -jnp.inf)
+        want = jnp.stack([ref.sliding_reduce_window_ref(
+            x[c], W, -jnp.inf, jax_max) for c in range(2)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def jax_max(a, b):
+    import jax.numpy as j
+    return j.maximum(a, b)

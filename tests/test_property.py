@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The central invariant of the paper: *partitioned execution over resolved
+boundaries equals unpartitioned execution* — for arbitrary queries, data,
+partition sizes.  Hypothesis generates random query DAGs and random
+streams; we assert bit-level mask equality and tolerance-level value
+equality between 1-partition and n-partition runs, and between optimized
+and unoptimized IR.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile as qc, fusion
+from repro.core.frontend import TStream
+from repro.core.parallel import partition_run
+from repro.core.stream import SnapshotGrid
+
+MAX_EXAMPLES = 25
+
+
+def _grid(vals, valid):
+    return SnapshotGrid(value=jnp.asarray(vals, jnp.float32),
+                        valid=jnp.asarray(valid), t0=0, prec=1)
+
+
+@st.composite
+def random_query(draw):
+    """A random TiLT query over one input stream, depth ≤ 4."""
+    s = TStream.source("in", prec=1)
+    q = s
+    depth = draw(st.integers(1, 4))
+    for _ in range(depth):
+        kind = draw(st.sampled_from(
+            ["select", "where", "shift", "wsum", "wmean", "wmax", "join"]))
+        if kind == "select":
+            c = draw(st.floats(-2, 2, allow_nan=False))
+            q = q.select(lambda v, c=c: v * c + 1.0)
+        elif kind == "where":
+            thr = draw(st.floats(-1, 1, allow_nan=False))
+            q = q.where(lambda v, t=thr: v > t)
+        elif kind == "shift":
+            d = draw(st.integers(0, 7))
+            q = q.shift(d)
+        elif kind == "wsum":
+            w = draw(st.integers(2, 24))
+            q = q.window(w).sum()
+        elif kind == "wmean":
+            w = draw(st.integers(2, 24))
+            q = q.window(w).mean()
+        elif kind == "wmax":
+            w = draw(st.integers(2, 24))
+            q = q.window(w).max()
+        else:  # join with a shifted copy of itself
+            d = draw(st.integers(1, 5))
+            q = q.join(s.shift(d), lambda a, b: a - b)
+    return q
+
+
+@st.composite
+def random_stream(draw, n):
+    vals = draw(st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    return np.asarray(vals, np.float32), np.asarray(valid)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(q=random_query(), data=random_stream(n=96),
+       n_parts=st.sampled_from([2, 3, 4, 8]))
+def test_partition_invariance(q, data, n_parts):
+    """paper §5.1/§6.2: partitioning at resolved boundaries is exact."""
+    vals, valid = data
+    N = 96
+    g = {"in": _grid(vals, valid)}
+    full = partition_run(qc.compile_query(q.node, out_len=N, pallas=False),
+                        g, 0, 1)
+    part = partition_run(
+        qc.compile_query(q.node, out_len=N // n_parts, pallas=False),
+        g, 0, n_parts)
+    m1, m2 = np.asarray(full.valid), np.asarray(part.valid)
+    assert np.array_equal(m1, m2)
+    v1, v2 = np.asarray(full.value), np.asarray(part.value)
+    np.testing.assert_allclose(v1[m1], v2[m1], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(q=random_query(), data=random_stream(n=64))
+def test_fusion_invariance(q, data):
+    """§5.2 IR transformations are semantics-preserving."""
+    vals, valid = data
+    g = {"in": _grid(vals, valid)}
+    o1 = partition_run(
+        qc.compile_query(q.node, out_len=64, pallas=False, opt=False),
+        g, 0, 1)
+    o2 = partition_run(
+        qc.compile_query(q.node, out_len=64, pallas=False, opt=True),
+        g, 0, 1)
+    assert np.array_equal(np.asarray(o1.valid), np.asarray(o2.valid))
+    m = np.asarray(o1.valid)
+    np.testing.assert_allclose(np.asarray(o1.value)[m],
+                               np.asarray(o2.value)[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(data=random_stream(n=128), w=st.integers(2, 32))
+def test_sliding_sum_matches_convolve(data, w):
+    vals, valid = data
+    g = {"in": _grid(vals, valid)}
+    q = TStream.source("in").window(w).sum()
+    out = partition_run(qc.compile_query(q.node, out_len=128, pallas=False),
+                        g, 0, 1)
+    masked = np.where(valid, vals.astype(np.float64), 0.0)
+    want = np.convolve(masked, np.ones(w))[:128]
+    cnt = np.convolve(valid.astype(np.float64), np.ones(w))[:128]
+    m = np.asarray(out.valid)
+    assert np.array_equal(m, cnt > 0)
+    np.testing.assert_allclose(np.asarray(out.value)[m], want[m],
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(data=random_stream(n=64), d=st.integers(0, 10))
+def test_shift_identity(data, d):
+    """shift(d) then compare against numpy roll with φ fill."""
+    vals, valid = data
+    g = {"in": _grid(vals, valid)}
+    q = TStream.source("in").shift(d)
+    out = partition_run(qc.compile_query(q.node, out_len=64, pallas=False),
+                        g, 0, 1)
+    m = np.asarray(out.valid)
+    want_m = np.concatenate([np.zeros(d, bool), valid])[:64]
+    assert np.array_equal(m, want_m)
+    want_v = np.concatenate([np.zeros(d, np.float32), vals])[:64]
+    np.testing.assert_allclose(np.asarray(out.value)[m], want_v[m])

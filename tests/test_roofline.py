@@ -1,0 +1,75 @@
+"""Unit tests for the HLO collective-bytes parser and roofline math."""
+import numpy as np
+
+from repro.roofline.analysis import (HW, RooflineReport, collective_bytes,
+                                     roofline, _shape_bytes)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("f32[16]") == 64
+    assert _shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+    assert _shape_bytes("pred[8]") == 8
+
+
+HLO_FLAT = """
+HloModule m
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %ag = f32[1024]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_ring_factors():
+    out = collective_bytes(HLO_FLAT)
+    # all-reduce: 2 * 4096B * 15/16 ; all-gather: 4096B * 3/4
+    assert abs(out["all-reduce"] - 2 * 4096 * 15 / 16) < 1
+    assert abs(out["all-gather"] - 4096 * 3 / 4) < 1
+
+
+HLO_WHILE = """
+HloModule m
+
+%body (x: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %x = (s32[], f32[64]) parameter(0)
+  %g = f32[64]{0} get-tuple-element(%x), index=1
+  %ar = f32[64]{0} all-reduce(%g), replica_groups=[2,8]<=[16], to_apply=%add
+  ROOT %t = (s32[], f32[64]) tuple(%c, %ar)
+}
+
+%cond (x: (s32[], f32[64])) -> pred[] {
+  %x = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%x), index=0
+  %n = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_while_multiplier():
+    """Collectives inside a scan body count trip_count times — the fix for
+    XLA cost_analysis counting while bodies once."""
+    out = collective_bytes(HLO_WHILE)
+    per_iter = 2 * 256 * 7 / 8
+    assert abs(out["all-reduce"] - 12 * per_iter) < 1
+
+
+def test_roofline_terms_and_dominant():
+    hw = HW()
+    rep = roofline({"flops": 197e12, "bytes accessed": 819e9 * 2},
+                   HLO_FLAT, model_flops_per_device=98.5e12, hw=hw)
+    assert abs(rep.compute_s - 1.0) < 1e-6
+    assert abs(rep.memory_s - 2.0) < 1e-6
+    assert rep.dominant == "memory"
+    assert abs(rep.useful_ratio - 0.5) < 1e-6
+    # roofline fraction = (model/peak) / bound = 0.5s / 2.0s
+    assert abs(rep.roofline_fraction - 0.25) < 1e-6

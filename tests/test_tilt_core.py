@@ -1,0 +1,229 @@
+"""TiLT core unit tests: IR semantics, boundary resolution, fusion
+equivalence, grid conversions, continuous StreamRunner operation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boundary, compile as qc, fusion, ir
+from repro.core.frontend import TStream
+from repro.core.parallel import StreamRunner, partition_run
+from repro.core.stream import (Event, EventStream, SnapshotGrid,
+                               events_to_grid, grid_to_events)
+
+
+def _grid(vals, valid=None, prec=1):
+    v = jnp.asarray(vals, jnp.float32)
+    m = jnp.ones(v.shape[0], bool) if valid is None else jnp.asarray(valid)
+    return SnapshotGrid(value=v, valid=m, t0=0, prec=prec)
+
+
+def _run(q, grids, out_len, **kw):
+    exe = qc.compile_query(q.node, out_len=out_len, pallas=False, **kw)
+    return partition_run(exe, grids, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# stream conversions
+# ---------------------------------------------------------------------------
+
+def test_events_to_grid_interval_semantics():
+    # event (2, 5] is active at ticks 3,4,5 (prec 1)
+    es = EventStream([Event(2, 5, 7.0)])
+    g = events_to_grid(es, 0, 8, 1)
+    assert np.asarray(g.valid).tolist() == [
+        False, False, True, True, True, False, False, False]
+
+
+def test_grid_roundtrip():
+    es = EventStream([Event(0, 3, 1.0), Event(5, 6, 2.0), Event(6, 9, 3.0)])
+    g = events_to_grid(es, 0, 10, 1)
+    back = grid_to_events(g)
+    assert [(e.start, e.end, e.payload) for e in back] == [
+        (0, 3, 1.0), (5, 6, 2.0), (6, 9, 3.0)]
+
+
+def test_overlapping_events_latest_wins():
+    es = EventStream([Event(0, 10, 1.0), Event(3, 6, 2.0)])
+    g = events_to_grid(es, 0, 10, 1)
+    v = np.asarray(g.value)
+    assert v[2] == 1.0 and v[4] == 2.0 and v[8] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# boundary resolution (§5.1)
+# ---------------------------------------------------------------------------
+
+def test_boundary_trend_query():
+    s = TStream.source("s", prec=1)
+    q = (s.window(10).mean().join(s.window(20).mean(), lambda a, b: a - b)
+         .where(lambda d: d > 0))
+    b = boundary.resolve(q.node)
+    assert b["s"].lookback == 20  # paper Fig. 3b: (Ts-20, Te]
+    assert b["s"].lookahead == 0
+
+
+def test_boundary_shift_and_lookahead():
+    s = TStream.source("s", prec=1)
+    q = s.shift(-5).join(s.shift(3), lambda a, b: a + b)
+    b = boundary.resolve(q.node)
+    assert b["s"].lookahead == 5
+    assert b["s"].lookback == 3
+
+
+def test_boundary_nested_windows_accumulate():
+    s = TStream.source("s", prec=1)
+    q = s.window(16).mean().window(32).max()
+    b = boundary.resolve(q.node)
+    assert b["s"].lookback == 48
+
+
+# ---------------------------------------------------------------------------
+# φ-semantics
+# ---------------------------------------------------------------------------
+
+def test_join_strict_overlap():
+    a = _grid([1, 2, 3, 4], valid=[True, False, True, True])
+    b = _grid([10, 20, 30, 40], valid=[True, True, False, True])
+    q = TStream.source("a").join(TStream.source("b"), lambda x, y: x + y)
+    out = _run(q, {"a": a, "b": b}, 4)
+    assert np.asarray(out.valid).tolist() == [True, False, False, True]
+    assert np.asarray(out.value)[[0, 3]].tolist() == [11.0, 44.0]
+
+
+def test_where_nulls_not_filters_timeline():
+    a = _grid([1, 2, 3, 4])
+    q = TStream.source("a").where(lambda v: v % 2 == 0)
+    out = _run(q, {"a": a}, 4)
+    assert np.asarray(out.valid).tolist() == [False, True, False, True]
+
+
+def test_reduce_empty_window_is_phi():
+    a = _grid([1, 2, 3, 4], valid=[False, False, True, True])
+    q = TStream.source("a").window(2).sum()
+    out = _run(q, {"a": a}, 4)
+    assert np.asarray(out.valid).tolist() == [False, False, True, True]
+    assert np.asarray(out.value)[2] == 3.0   # only tick 3 valid in (1,3]
+    assert np.asarray(out.value)[3] == 7.0
+
+
+def test_coalesce_phi_aware():
+    a = _grid([1, 2, 3, 4], valid=[True, False, True, False])
+    b = _grid([9, 9, 9, 9])
+    q = TStream.source("a").coalesce(TStream.source("b"))
+    out = _run(q, {"a": a, "b": b}, 4)
+    assert np.asarray(out.valid).all()
+    assert np.asarray(out.value).tolist() == [1, 9, 3, 9]
+
+
+# ---------------------------------------------------------------------------
+# fusion (§5.2)
+# ---------------------------------------------------------------------------
+
+def test_fusion_preserves_semantics():
+    rng = np.random.default_rng(5)
+    a = _grid(rng.normal(size=64))
+    s = TStream.source("a")
+    q = (s.select(lambda v: v * 2).select(lambda v: v + 1)
+         .where(lambda v: v > 0).select(lambda v: v * v))
+    o1 = _run(q, {"a": a}, 64, opt=False)
+    o2 = _run(q, {"a": a}, 64, opt=True)
+    assert np.array_equal(np.asarray(o1.valid), np.asarray(o2.valid))
+    np.testing.assert_allclose(
+        np.asarray(o1.value)[np.asarray(o1.valid)],
+        np.asarray(o2.value)[np.asarray(o2.valid)], rtol=1e-6)
+
+
+def test_fusion_collapses_elemwise_chain():
+    s = TStream.source("a")
+    q = s.select(lambda v: v * 2).select(lambda v: v + 1).select(
+        lambda v: -v)
+    opt = fusion.optimize(q.node)
+    maps = [n for n in ir.topo_order(opt) if isinstance(n, ir.Map)]
+    assert len(maps) == 1, fusion.fusion_report(q.node, opt)
+
+
+def test_cse_dedupes_shared_window():
+    s = TStream.source("a")
+    q1 = s.window(16).sum()
+    q2 = s.window(16).sum()
+    j = q1.join(q2, lambda x, y: x + y)
+    opt = fusion.cse(j.node)
+    reduces = [n for n in ir.topo_order(opt) if isinstance(n, ir.Reduce)]
+    assert len(reduces) == 1
+
+
+# ---------------------------------------------------------------------------
+# continuous operation
+# ---------------------------------------------------------------------------
+
+def test_stream_runner_matches_batch():
+    rng = np.random.default_rng(9)
+    vals = rng.normal(size=256).astype(np.float32)
+    s = TStream.source("a")
+    q = s.window(20).mean().join(s.window(40).mean(), lambda x, y: x - y)
+
+    exe_b = qc.compile_query(q.node, out_len=256, pallas=False)
+    full = partition_run(exe_b, {"a": _grid(vals)}, 0, 1)
+
+    exe_s = qc.compile_query(q.node, out_len=64, pallas=False)
+    runner = StreamRunner(exe_s)
+    outs = []
+    for k in range(4):
+        chunk = _grid(vals[k * 64:(k + 1) * 64])
+        outs.append(runner.step({"a": chunk}))
+    got_v = np.concatenate([np.asarray(o.value) for o in outs])
+    got_m = np.concatenate([np.asarray(o.valid) for o in outs])
+    assert np.array_equal(got_m, np.asarray(full.valid))
+    np.testing.assert_allclose(got_v[got_m],
+                               np.asarray(full.value)[np.asarray(full.valid)],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stream_runner_checkpoint_resume():
+    rng = np.random.default_rng(11)
+    vals = rng.normal(size=128).astype(np.float32)
+    s = TStream.source("a")
+    q = s.window(16).sum()
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+
+    r1 = StreamRunner(exe)
+    outs = [r1.step({"a": _grid(vals[:32])}),
+            r1.step({"a": _grid(vals[32:64])})]
+    state = r1.state()
+
+    r2 = StreamRunner(exe)
+    r2.restore(state)
+    o_resumed = r2.step({"a": _grid(vals[64:96])})
+
+    r3 = StreamRunner(exe)
+    for k in range(3):
+        o_straight = r3.step({"a": _grid(vals[k * 32:(k + 1) * 32])})
+    np.testing.assert_allclose(np.asarray(o_resumed.value),
+                               np.asarray(o_straight.value), rtol=1e-5)
+
+
+def test_batch_run_multikey():
+    """Per-key query execution (fraud per-user / YSB per-campaign): vmapped
+    compiled query == per-key loop."""
+    from repro.core.parallel import batch_run
+    rng = np.random.default_rng(21)
+    K, T = 5, 128
+    vals = rng.normal(size=(K, T)).astype(np.float32)
+    s = TStream.source("a")
+    q = s.window(16).mean().join(s, lambda m, x: x - m).where(
+        lambda d: d > 0)
+    exe = qc.compile_query(q.node, out_len=T, pallas=False)
+
+    g = {"a": SnapshotGrid(value=jnp.asarray(vals),
+                           valid=jnp.ones((K, T), bool), t0=0, prec=1)}
+    out = batch_run(exe, g)
+    assert out.valid.shape == (K, T)
+
+    for k in range(K):
+        single = partition_run(
+            exe, {"a": _grid(vals[k])}, 0, 1)
+        assert np.array_equal(np.asarray(out.valid[k]),
+                              np.asarray(single.valid)), k
+        m = np.asarray(single.valid)
+        np.testing.assert_allclose(np.asarray(out.value[k])[m],
+                                   np.asarray(single.value)[m], rtol=1e-5)
