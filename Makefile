@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast test-slow bench
+
+# tier-1: the full suite (what the driver runs)
+test:
+	$(PYTHON) -m pytest -q
+
+# fast split for CI runners with tight timeouts (~2 min on 1 core):
+# excludes the multi-device subprocess tests and heavy arch smoke suites
+test-fast:
+	$(PYTHON) -m pytest -q -m "not slow"
+
+test-slow:
+	$(PYTHON) -m pytest -q -m slow
+
+bench:
+	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,78 @@
+"""Fig. 8 companion: keyed-stream scaling (the paper's *other* parallel axis).
+
+The paper scales YSB by partitioning time across worker threads; production
+streaming workloads scale first by *key* (users, campaigns, symbols) — the
+"Scaling Ordered Stream Processing on Shared-Memory Multicores" scenario.
+This benchmark drives :class:`repro.engine.KeyedEngine` over the keyed app
+variants (trend / fraud / ysb) and reports:
+
+* throughput vs. key count at fixed total work (K × T × parts constant in
+  events) — flat means the vmapped key axis adds no per-key dispatch cost,
+  i.e. scaling to more keys is purely a memory/parallelism question;
+* throughput vs. time-partition count at fixed K — the carried-halo chunked
+  execution overhead (continuous-operation cost).
+
+On multi-device hosts the key axis shards over the mesh with no collectives
+at all (keys never communicate); here (1 core) the structural numbers are
+what transfer.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import compile as qc
+from repro.data import apps as A
+from repro.engine import KeyedEngine, keyed_grid
+
+from .common import row
+
+APP_PARAMS = {"trend": {}, "fraud": {"win": 200}, "ysb": {}}
+
+
+def _time_keyed(app, n_keys, n_ticks, n_parts, repeats=3):
+    data = app.make_keyed_input(n_keys, n_ticks, 11)
+    grids = {name: keyed_grid(
+        {k: np.asarray(v, np.float32) for k, v in d["value"].items()}
+        if isinstance(d["value"], dict) else np.asarray(d["value"], np.float32),
+        d["valid"]) for name, d in data.items()}
+    out_len = (n_ticks // n_parts) // app.query.prec
+    exe = qc.compile_query(app.query.node, out_len=out_len, pallas=False)
+
+    def one_run():
+        eng = KeyedEngine(exe, n_keys=n_keys)
+        out = eng.run(grids, n_parts)
+        jax.block_until_ready(out.valid)
+        return out
+
+    one_run()  # warmup (compile)
+    best = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        one_run()
+        best.append(time.perf_counter() - t0)
+    dt = min(best)
+    return n_keys * n_ticks / dt, dt
+
+
+def run(n_events: int = 2_000_000):
+    for name in A.KEYED_APPS:
+        app = A.make_keyed_app(name, **APP_PARAMS[name])
+        # scale keys at fixed total events (K·T constant), 4 time partitions
+        q = max(4 * app.query.prec, 4)
+        for n_keys in (16, 64, 256):
+            n_ticks = max(n_events // n_keys // q * q, q)
+            tps, dt = _time_keyed(app, n_keys, n_ticks, 4)
+            row(f"fig8k_{name}_k{n_keys}", dt * 1e6, f"{tps/1e6:.1f}Mev/s")
+        # scale time partitions at fixed K=64
+        q = max(16 * app.query.prec, 16)
+        n_ticks = max(n_events // 64 // q * q, q)
+        for n_parts in (1, 4, 16):
+            tps, dt = _time_keyed(app, 64, n_ticks, n_parts)
+            row(f"fig8k_{name}_p{n_parts}", dt * 1e6, f"{tps/1e6:.1f}Mev/s")
+
+
+if __name__ == "__main__":
+    run()

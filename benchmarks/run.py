@@ -14,12 +14,13 @@ def main() -> None:
     n = int(os.environ.get("REPRO_BENCH_EVENTS", 2_000_000))
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
-    from . import (fig7_throughput, fig8_ysb_scaling, fig9_latency,
-                   fig10_fusion, roofline_table)
+    from . import (fig7_throughput, fig8_keyed_scaling, fig8_ysb_scaling,
+                   fig9_latency, fig10_fusion, roofline_table)
 
     sections = {
         "fig7": lambda: fig7_throughput.run(n),
         "fig8": lambda: fig8_ysb_scaling.run(n),
+        "fig8k": lambda: fig8_keyed_scaling.run(min(n, 1_000_000)),
         "fig9": lambda: fig9_latency.run(min(n, 1_000_000)),
         "fig10": lambda: fig10_fusion.run(n),
         "roofline": roofline_table.run,

@@ -1,4 +1,4 @@
-"""TiLT codegen: IR → staged JAX computation (paper §6).
+"""TiLT codegen: planned IR → staged JAX computation (paper §6).
 
 The paper lowers TiLT IR to LLVM loops whose counters skip redundant work
 (change-driven iteration).  On TPU we instead *vectorize over the time grid*
@@ -7,18 +7,17 @@ on its own statically-planned grid, and the whole query stages into a single
 XLA computation (fused mode) or into one computation per operator
 (interpreted mode — the event-centric operator-at-a-time baseline).
 
-Static planning:  given the output partition length ``out_len`` (in output
-ticks), boundary resolution (boundary.py) fixes, for every node, the grid
-extent ``(t0_rel, length)`` *relative to the partition start*.  All alignment
-index maps are therefore trace-time numpy constants, and the common cases
-(same precision, integer down-sampling) lower to strided slices, not gathers.
+Layering: planning lives in plan.py (grid extents, alignment index maps,
+halo contracts — all trace-time constants); this module is pure codegen over
+a :class:`plan.QueryPlan`.  Both execution modes share the single node
+evaluator :func:`_eval_op` — the fused trace calls it recursively over the
+DAG, the interpreted program jits one ``functools.partial`` of it per node.
 
-Execution contract (used by parallel.py):
+Execution contract (used by parallel.py and engine/):
 
-* ``input_specs[name] = InputSpec(t0, length, prec)``: the caller must supply
-  a grid covering ``(P₀ + t0, P₀ + t0 + length·prec]`` for a partition whose
-  output covers ``(P₀, P₀ + out_len·out_prec]``.  ``-t0`` is the lookback
-  halo (paper Fig. 6 shaded region).
+* ``input_specs[name]`` is the :class:`plan.InputSpec` halo contract: the
+  caller must supply a grid covering ``(P₀ + t0, P₀ + t0 + length·prec]``
+  for a partition whose output covers ``(P₀, P₀ + out_len·out_prec]``.
 * Ticks before the global stream start are supplied as ``valid=False`` —
   φ-semantics make partial leading windows exact.
 """
@@ -26,96 +25,72 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import boundary, fusion, ir
+from . import fusion, ir
+from .plan import InputSpec, QueryPlan, plan_query
 from .reduction import get_reduction
 from ..kernels import ops as kops
 
 __all__ = ["InputSpec", "CompiledQuery", "compile_query"]
 
 
-@dataclasses.dataclass(frozen=True)
-class InputSpec:
-    t0: int       # grid start relative to partition start (≤ 0: lookback halo)
-    length: int   # ticks
-    prec: int
-
-    @property
-    def left_halo(self) -> int:
-        """Lookback ticks before the partition start."""
-        return -self.t0 // self.prec
-
-    @property
-    def right_halo_ticks(self) -> int:
-        return 0  # populated by planner when lookahead > 0
-
-
-@dataclasses.dataclass(frozen=True)
-class _NodePlan:
-    t0: int
-    length: int
-    prec: int
-
-
-def _ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
 # ---------------------------------------------------------------------------
-# alignment
+# the node evaluator (shared by fused and interpreted modes)
 # ---------------------------------------------------------------------------
 
-def _take(value, idx_np: np.ndarray):
-    """Gather leaves of a value pytree along axis 0 with static indices,
-    lowering to a strided slice when the index map is affine."""
-    n = idx_np.shape[0]
-    if n > 1:
-        d = np.diff(idx_np)
-        affine = bool(np.all(d == d[0])) and d[0] > 0
-    else:
-        affine = True
-        d = np.array([1])
-    start, step = int(idx_np[0]), int(d[0]) if n > 1 else 1
+def _eval_op(n: ir.Node, qp: QueryPlan, pallas: Optional[bool],
+             sum_algo: str, *args):
+    """Evaluate one node given its arguments' ``(value, valid)`` grids.
 
-    def one(leaf):
-        if affine and start >= 0:
-            lim = start + (n - 1) * step + 1
-            if lim <= leaf.shape[0]:
-                return jax.lax.slice_in_dim(leaf, start, lim, stride=step)
-        return jnp.take(leaf, jnp.asarray(np.clip(idx_np, 0, leaf.shape[0] - 1)),
-                        axis=0)
+    This is the *only* node-evaluation implementation: the fused trace and
+    the interpreted operator-at-a-time program both execute queries through
+    it.  ``args`` are the argument grids in ``n.args`` order (for ``Input``,
+    the single caller-supplied NAME grid).
+    """
+    out_plan = qp.plan_of(n)
+    if isinstance(n, ir.Input):
+        ((gv, gm),) = args
+        return qp.input_align(n).apply(gv, gm)
+    if isinstance(n, ir.Const):
+        val = jax.tree_util.tree_map(
+            lambda c: jnp.full((out_plan.length,), c), n.value)
+        return val, jnp.ones((out_plan.length,), bool)
+    if isinstance(n, ir.Map):
+        vs, oks = [], []
+        for a, (av, aok) in zip(n.args, args):
+            av, aok = qp.align(a, n).apply(av, aok)
+            vs.append(av)
+            oks.append(aok)
+        if n.phi_aware:
+            return n.fn(*zip(vs, oks))
+        return n.fn(*vs), functools.reduce(jnp.logical_and, oks)
+    if isinstance(n, ir.Where):
+        ((av, aok),) = args
+        av, aok = qp.align(n.args[0], n).apply(av, aok)
+        return av, aok & n.pred(av)
+    if isinstance(n, ir.Shift):
+        ((av, aok),) = args
+        return qp.align(n.args[0], n, delta=n.delta).apply(av, aok)
+    if isinstance(n, ir.Reduce):
+        ((av, aok),) = args
+        return _eval_reduce(n, av, aok, qp, pallas, sum_algo)
+    if isinstance(n, ir.Interp):
+        ((av, aok),) = args
+        return _eval_interp(n, av, aok, qp)
+    raise TypeError(type(n))  # pragma: no cover
 
-    return jax.tree_util.tree_map(one, value)
 
-
-def _align(value, valid, arg_plan: _NodePlan, out_plan: _NodePlan,
-           delta: int = 0):
-    """Read argument grid at output tick times τ_j − delta (hold rule)."""
-    q, p = out_plan.prec, arg_plan.prec
-    j = np.arange(out_plan.length, dtype=np.int64)
-    tau = out_plan.t0 + (j + 1) * q - delta
-    idx = (tau - arg_plan.t0) // p - 1
-    in_range = (idx >= 0) & (idx < arg_plan.length)
-    v = _take(value, idx)
-    ok = _take(valid, idx)
-    if not bool(np.all(in_range)):
-        ok = ok & jnp.asarray(in_range)
-    return v, ok
-
-
-# ---------------------------------------------------------------------------
-# per-node evaluation
-# ---------------------------------------------------------------------------
-
-def _eval_reduce(n: ir.Reduce, aval, avalid, aplan: _NodePlan,
-                 oplan: _NodePlan, pallas: Optional[bool],
-                 sum_algo: str = "block"):
+def _eval_reduce(n: ir.Reduce, aval, avalid, qp: QueryPlan,
+                 pallas: Optional[bool], sum_algo: str = "block"):
     red = get_reduction(n.op)
+    (arg,) = n.args
+    aplan = qp.plan_of(arg)
+    spec = qp.align(arg, n)  # window-end gather at output tick times
     payload = aval[n.field] if n.field is not None else aval
     w_ticks = n.window // aplan.prec
 
@@ -126,31 +101,19 @@ def _eval_reduce(n: ir.Reduce, aval, avalid, aplan: _NodePlan,
             stacked, avalid, w_ticks, algo=sum_algo,
             pallas=kops.use_pallas() if pallas is None else pallas)
         # gather at output ticks, then apply post (cheaper after striding)
-        j = np.arange(oplan.length, dtype=np.int64)
-        tau = oplan.t0 + (j + 1) * oplan.prec
-        idx = (tau - aplan.t0) // aplan.prec - 1
-        sums_g = _take(sums.T, idx).T  # (C, out_len)
-        count_g = _take(count, idx)
+        sums_g = spec.take(sums.T).T  # (C, out_len)
+        count_g = spec.take(count)
         val = red.post(tuple(sums_g), count_g)
         ok = count_g > 0 if not red.empty_valid else jnp.ones_like(count_g, bool)
-        in_range = (idx >= 0) & (idx < aplan.length)
-        if not bool(np.all(in_range)):
-            ok = ok & jnp.asarray(in_range)
-        return val, ok
+        return val, spec.mask(ok)
 
     if red.kind == "assoc":
         x = red.pre(payload)[0] if red.pre else payload
         vals, anyv = kops.sliding_assoc(
             x[None, :], avalid, w_ticks, red.name,
             pallas=kops.use_pallas() if pallas is None else pallas)
-        j = np.arange(oplan.length, dtype=np.int64)
-        tau = oplan.t0 + (j + 1) * oplan.prec
-        idx = (tau - aplan.t0) // aplan.prec - 1
-        val = _take(vals[0], idx)
-        ok = _take(anyv, idx)
-        in_range = (idx >= 0) & (idx < aplan.length)
-        if not bool(np.all(in_range)):
-            ok = ok & jnp.asarray(in_range)
+        val = spec.take(vals[0])
+        ok = spec.mask(spec.take(anyv))
         return val, ok
 
     # generic template (paper §6.1.2): associative two-level fold via
@@ -165,33 +128,30 @@ def _eval_reduce(n: ir.Reduce, aval, avalid, aplan: _NodePlan,
         window_strides=(1,), padding=((w_ticks - 1, 0),))
     _, count = kops.sliding_sum(jnp.zeros((1, avalid.shape[0]), jnp.float32),
                                 avalid, w_ticks, pallas=False)
-    j = np.arange(oplan.length, dtype=np.int64)
-    tau = oplan.t0 + (j + 1) * oplan.prec
-    idx = (tau - aplan.t0) // aplan.prec - 1
-    val = jax.vmap(result)(_take(folded, idx))
-    ok = _take(count, idx) > 0
+    val = jax.vmap(result)(spec.take(folded))
+    ok = spec.mask(spec.take(count) > 0)
     return val, ok
 
 
-def _eval_interp(n: ir.Interp, aval, avalid, aplan: _NodePlan,
-                 oplan: _NodePlan):
+def _eval_interp(n: ir.Interp, aval, avalid, qp: QueryPlan):
+    (arg,) = n.args
+    aplan = qp.plan_of(arg)
+    spec = qp.align(arg, n)
     Ta = aplan.length
-    p, q = aplan.prec, oplan.prec
     ar = jnp.arange(Ta)
     last_idx = jax.lax.cummax(jnp.where(avalid, ar, -1))
     next_idx = Ta - 1 - jax.lax.cummax(
         jnp.where(avalid[::-1], ar, -1))[::-1]
     nxt_valid = jax.lax.cummax(jnp.where(avalid[::-1], ar, -1))[::-1] >= 0
 
-    j = np.arange(oplan.length, dtype=np.int64)
-    tau = oplan.t0 + (j + 1) * q                       # output tick times
-    ib = np.clip((tau - aplan.t0) // p - 1, 0, Ta - 1)  # latest tick ≤ τ
-    ia = np.clip(_ceil_div_np(tau - aplan.t0, p) - 1, 0, Ta - 1)  # earliest ≥ τ
-    ib_ok = ((tau - aplan.t0) // p - 1) >= 0
+    tau = spec.tau                                    # output tick times
+    ib = np.clip(spec.idx, 0, Ta - 1)                 # latest tick ≤ τ
+    ia = np.clip(spec.ceil_idx, 0, Ta - 1)            # earliest tick ≥ τ
+    ib_ok = spec.idx >= 0
 
     i0 = jnp.take(last_idx, jnp.asarray(ib))
     e0 = (i0 >= 0) & jnp.asarray(ib_ok)
-    t0v = aplan.t0 + (i0 + 1) * p
+    t0v = aplan.tick_time(i0)
     v0 = jax.tree_util.tree_map(
         lambda leaf: jnp.take(leaf, jnp.clip(i0, 0, Ta - 1)), aval)
     gap0 = jnp.asarray(tau) - t0v
@@ -201,7 +161,7 @@ def _eval_interp(n: ir.Interp, aval, avalid, aplan: _NodePlan,
 
     i1 = jnp.take(next_idx, jnp.asarray(ia))
     e1 = jnp.take(nxt_valid, jnp.asarray(ia))
-    t1v = aplan.t0 + (i1 + 1) * p
+    t1v = aplan.tick_time(i1)
     v1 = jax.tree_util.tree_map(
         lambda leaf: jnp.take(leaf, jnp.clip(i1, 0, Ta - 1)), aval)
     gap1 = t1v - jnp.asarray(tau)
@@ -210,10 +170,6 @@ def _eval_interp(n: ir.Interp, aval, avalid, aplan: _NodePlan,
     out = jax.tree_util.tree_map(lambda a, b: a * (1 - w) + b * w, v0, v1)
     ok = e0 & e1 & (gap0 <= n.max_gap) & (gap1 <= n.max_gap)
     return out, ok
-
-
-def _ceil_div_np(a, b):
-    return -(-a // b)
 
 
 # ---------------------------------------------------------------------------
@@ -225,19 +181,29 @@ class CompiledQuery:
     """A TiLT query compiled for a fixed partition size.
 
     ``fn(inputs)`` is the fused jitted executable; ``trace_fn`` the unjitted
-    traceable body (used inside shard_map); ``run_interpreted`` evaluates
-    operator-at-a-time with per-node jits and host round-trips (the
-    event-centric execution model, for the Fig. 10 ablation).
+    traceable body (used inside shard_map and under vmap in the keyed
+    engine); ``run_interpreted`` evaluates operator-at-a-time with per-node
+    jits and host round-trips (the event-centric execution model, for the
+    Fig. 10 ablation).  ``plan`` is the static artifact everything shares.
     """
 
     root: ir.Node
-    out_len: int
-    out_prec: int
-    input_specs: Dict[str, InputSpec]
+    plan: QueryPlan
     trace_fn: Callable[[Dict[str, tuple]], tuple]
     fn: Callable[[Dict[str, tuple]], tuple]
-    _node_fns: list  # [(name, jitted fn, arg node ids)] for interpreted mode
-    _plans: Dict[int, _NodePlan]
+    _node_fns: list  # [(name, jitted fn, arg node ids, node)]
+
+    @property
+    def out_len(self) -> int:
+        return self.plan.out_len
+
+    @property
+    def out_prec(self) -> int:
+        return self.plan.out_prec
+
+    @property
+    def input_specs(self) -> Dict[str, InputSpec]:
+        return self.plan.input_specs
 
     def run_interpreted(self, inputs: Dict[str, tuple]) -> tuple:
         env: Dict[int, tuple] = {}
@@ -260,76 +226,16 @@ def compile_query(root: ir.Node, out_len: int, *, opt: bool = True,
     if opt:
         root = fusion.optimize(root)
     ir.validate(root)
-
-    nb = boundary.node_bounds(root)
-    out_prec = root.prec
-    span = out_len * out_prec  # output window (0, span]
-
-    plans: Dict[int, _NodePlan] = {}
-    for n in ir.topo_order(root):
-        b = nb[id(n)]
-        t0 = -_ceil_div(b.lookback, n.prec) * n.prec
-        t_hi = span + _ceil_div(b.lookahead, n.prec) * n.prec
-        plans[id(n)] = _NodePlan(t0=t0, length=(t_hi - t0) // n.prec,
-                                 prec=n.prec)
-
-    # per-NAME input grids (union over Input nodes sharing the name)
-    name_bounds = boundary.resolve(root)
-    name_prec = {n.name: n.prec for n in ir.free_inputs(root)}
-    input_specs: Dict[str, InputSpec] = {}
-    name_plans: Dict[str, _NodePlan] = {}
-    for name, b in name_bounds.items():
-        p = name_prec[name]
-        t0 = -_ceil_div(b.lookback, p) * p
-        t_hi = span + _ceil_div(b.lookahead, p) * p
-        spec = InputSpec(t0=t0, length=(t_hi - t0) // p, prec=p)
-        input_specs[name] = spec
-        name_plans[name] = _NodePlan(t0=t0, length=spec.length, prec=p)
+    qp = plan_query(root, out_len)
 
     def eval_node(n: ir.Node, env_vals, memo):
         if id(n) in memo:
             return memo[id(n)]
-        plan = plans[id(n)]
         if isinstance(n, ir.Input):
-            gv, gm = env_vals[n.name]
-            out = _align(gv, gm, name_plans[n.name], plan)
-        elif isinstance(n, ir.Const):
-            val = jax.tree_util.tree_map(
-                lambda c: jnp.full((plan.length,), c), n.value)
-            out = (val, jnp.ones((plan.length,), bool))
-        elif isinstance(n, ir.Map):
-            vs, oks = [], []
-            for a in n.args:
-                av, aok = eval_node(a, env_vals, memo)
-                av, aok = _align(av, aok, plans[id(a)], plan)
-                vs.append(av)
-                oks.append(aok)
-            if n.phi_aware:
-                out = n.fn(*zip(vs, oks))
-            else:
-                val = n.fn(*vs)
-                ok = functools.reduce(jnp.logical_and, oks)
-                out = (val, ok)
-        elif isinstance(n, ir.Where):
-            (a,) = n.args
-            av, aok = eval_node(a, env_vals, memo)
-            av, aok = _align(av, aok, plans[id(a)], plan)
-            out = (av, aok & n.pred(av))
-        elif isinstance(n, ir.Shift):
-            (a,) = n.args
-            av, aok = eval_node(a, env_vals, memo)
-            out = _align(av, aok, plans[id(a)], plan, delta=n.delta)
-        elif isinstance(n, ir.Reduce):
-            (a,) = n.args
-            av, aok = eval_node(a, env_vals, memo)
-            out = _eval_reduce(n, av, aok, plans[id(a)], plan, pallas,
-                               sum_algo)
-        elif isinstance(n, ir.Interp):
-            (a,) = n.args
-            av, aok = eval_node(a, env_vals, memo)
-            out = _eval_interp(n, av, aok, plans[id(a)], plan)
-        else:  # pragma: no cover
-            raise TypeError(type(n))
+            args = ((env_vals[n.name]),)
+        else:
+            args = tuple(eval_node(a, env_vals, memo) for a in n.args)
+        out = _eval_op(n, qp, pallas, sum_algo, *args)
         memo[id(n)] = out
         return out
 
@@ -338,50 +244,14 @@ def compile_query(root: ir.Node, out_len: int, *, opt: bool = True,
 
     fn = jax.jit(trace_fn) if jit else trace_fn
 
-    # -- interpreted (operator-at-a-time) program ---------------------------
+    # -- interpreted (operator-at-a-time) program: one jit per node, same
+    #    evaluator ---------------------------------------------------------
     node_fns = []
     for n in ir.topo_order(root):
-        plan = plans[id(n)]
-        if isinstance(n, ir.Input):
-            node_fns.append((n.name, jax.jit(functools.partial(
-                _input_op, name_plans[n.name], plan)), (), n))
-        else:
-            arg_plans = [plans[id(a)] for a in n.args]
-            node_fns.append((n.name, jax.jit(functools.partial(
-                _node_op, n, tuple(arg_plans), plan, pallas, sum_algo)),
-                tuple(id(a) for a in n.args), n))
+        node_fns.append((
+            n.name,
+            jax.jit(functools.partial(_eval_op, n, qp, pallas, sum_algo)),
+            tuple(id(a) for a in n.args), n))
 
-    return CompiledQuery(root=root, out_len=out_len, out_prec=out_prec,
-                         input_specs=input_specs, trace_fn=trace_fn, fn=fn,
-                         _node_fns=node_fns, _plans=plans)
-
-
-def _input_op(name_plan, plan, grid):
-    gv, gm = grid
-    return _align(gv, gm, name_plan, plan)
-
-
-def _node_op(n, arg_plans, plan, pallas, sum_algo, *args):
-    if isinstance(n, ir.Map):
-        vs, oks = [], []
-        for (av, aok), ap in zip(args, arg_plans):
-            av, aok = _align(av, aok, ap, plan)
-            vs.append(av)
-            oks.append(aok)
-        if n.phi_aware:
-            return n.fn(*zip(vs, oks))
-        return n.fn(*vs), functools.reduce(jnp.logical_and, oks)
-    if isinstance(n, ir.Where):
-        ((av, aok),) = args
-        av, aok = _align(av, aok, arg_plans[0], plan)
-        return av, aok & n.pred(av)
-    if isinstance(n, ir.Shift):
-        ((av, aok),) = args
-        return _align(av, aok, arg_plans[0], plan, delta=n.delta)
-    if isinstance(n, ir.Reduce):
-        ((av, aok),) = args
-        return _eval_reduce(n, av, aok, arg_plans[0], plan, pallas, sum_algo)
-    if isinstance(n, ir.Interp):
-        ((av, aok),) = args
-        return _eval_interp(n, av, aok, arg_plans[0], plan)
-    raise TypeError(type(n))  # pragma: no cover
+    return CompiledQuery(root=root, plan=qp, trace_fn=trace_fn, fn=fn,
+                         _node_fns=node_fns)

@@ -31,9 +31,13 @@ class TStream:
 
     # -- sources ------------------------------------------------------------
     @staticmethod
-    def source(name: str, prec: int = 1,
-               fields: Sequence[str] = ()) -> "TStream":
-        return TStream(ir.Input.make(name, prec=prec, fields=tuple(fields)))
+    def source(name: str, prec: int = 1, fields: Sequence[str] = (),
+               keyed: bool = False) -> "TStream":
+        """Declare a source stream.  ``keyed=True`` marks a partitioned
+        stream of independent per-key sub-streams (fraud per-user, YSB
+        per-campaign); execute it with :class:`repro.engine.KeyedEngine`."""
+        return TStream(ir.Input.make(name, prec=prec, fields=tuple(fields),
+                                     keyed=keyed))
 
     @staticmethod
     def const(value: Any, prec: int = 1) -> "TStream":

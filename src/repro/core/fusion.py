@@ -45,7 +45,7 @@ __all__ = ["cse", "fuse_elemwise", "optimize", "fusion_report"]
 
 def _structural_key(n: ir.Node, arg_keys: tuple) -> tuple:
     if isinstance(n, ir.Input):
-        return ("input", n.name, n.prec)
+        return ("input", n.name, n.prec, n.keyed)
     if isinstance(n, ir.Const):
         return ("const", repr(n.value), n.prec)
     if isinstance(n, ir.Map):

@@ -70,13 +70,21 @@ def _mk_name(prefix: str) -> str:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Input(Node):
-    """Source temporal object.  ``fields`` documents payload structure."""
+    """Source temporal object.  ``fields`` documents payload structure.
+
+    ``keyed=True`` declares a *partitioned* stream (one independent
+    sub-stream per key — user / stock symbol / campaign).  The time-centric
+    semantics are per-key; the keyed engine (engine/) vectorizes execution
+    over the key axis and shards it across devices.
+    """
 
     fields: tuple[str, ...] = ()
+    keyed: bool = False
 
     @staticmethod
-    def make(name: str, prec: int = 1, fields: tuple[str, ...] = ()) -> "Input":
-        return Input(prec=prec, name=name, fields=fields)
+    def make(name: str, prec: int = 1, fields: tuple[str, ...] = (),
+             keyed: bool = False) -> "Input":
+        return Input(prec=prec, name=name, fields=fields, keyed=keyed)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -108,29 +108,26 @@ def shard_map_run(exe: qcompile.CompiledQuery,
     ``out_len == global_out_len // mesh.shape[axis]``.
     """
     n = mesh.shape[axis]
-    span = exe.out_len * exe.out_prec  # per-shard output span
 
     specs = exe.input_specs
-    core_len = {name: span * n // s.prec for name, s in specs.items()}
-    halo_l = {name: -s.t0 // s.prec for name, s in specs.items()}
-    halo_r = {name: s.length - (-s.t0 // s.prec) - span // s.prec
-              for name, s in specs.items()}
+    core_len = {name: s.core * n for name, s in specs.items()}
+    for name, s in specs.items():
+        if n > 1 and (s.left_halo > s.core or s.right_halo > s.core):
+            raise NotImplementedError(
+                f"input {name}: halo ({s.left_halo}/{s.right_halo} ticks) "
+                f"exceeds the per-shard span ({s.core} ticks); the "
+                "single-hop ppermute exchange would return wrong leading "
+                "ticks — use fewer/larger shards (multi-hop exchange is a "
+                "ROADMAP item)")
 
     def local_body(*flat):
         local = dict(zip(sorted(specs), flat))
         full = {}
         for name in sorted(specs):
             v, m = local[name]
-            hl, hr = halo_l[name], halo_r[name]
+            hl, hr = specs[name].left_halo, specs[name].right_halo
             right_perm = [(i, i + 1) for i in range(n - 1)]
             left_perm = [(i + 1, i) for i in range(n - 1)]
-
-            def xch(leaf, cnt, perm, take_tail):
-                if cnt == 0 or n == 1:
-                    shp = (0,) + leaf.shape[1:]
-                    return jnp.zeros(shp, leaf.dtype)
-                part = leaf[-cnt:] if take_tail else leaf[:cnt]
-                return jax.lax.ppermute(part, axis, perm)
 
             if hl:
                 lv = jax.tree_util.tree_map(
@@ -197,9 +194,7 @@ def batch_run(exe: qcompile.CompiledQuery,
     for n in names:
         spec = exe.input_specs[n]
         g = inputs[n]
-        hl = -spec.t0 // spec.prec            # lookback ticks (φ-padded)
-        core = (exe.out_len * exe.out_prec) // spec.prec
-        hr = spec.length - hl - core          # lookahead ticks
+        hl, hr = spec.left_halo, spec.right_halo   # φ-padded halo ticks
         v = jax.tree_util.tree_map(
             lambda x: jnp.pad(x, [(0, 0), (hl, hr)]
                               + [(0, 0)] * (x.ndim - 2)), g.value)
@@ -225,9 +220,7 @@ class StreamRunner:
 
     def __post_init__(self):
         for name, s in self.exe.input_specs.items():
-            hr = s.length - (-s.t0 // s.prec) - (
-                self.exe.out_len * self.exe.out_prec) // s.prec
-            if hr > 0:
+            if s.right_halo > 0:
                 raise NotImplementedError(
                     "StreamRunner supports lookback-only queries "
                     f"(input {name} has lookahead)")
@@ -237,8 +230,7 @@ class StreamRunner:
         part_in = {}
         for name, spec in self.exe.input_specs.items():
             g = chunks[name]
-            hl = -spec.t0 // spec.prec
-            core = (self.exe.out_len * self.exe.out_prec) // spec.prec
+            hl, core = spec.left_halo, spec.core
             assert g.valid.shape[0] == core, (name, g.valid.shape, core)
             if name in self._tails:
                 tv, tm = self._tails[name]
@@ -264,6 +256,7 @@ class StreamRunner:
                 for k, v in self._tails.items()} | {"__t": self._t}
 
     def restore(self, state: Dict) -> None:
+        state = dict(state)  # don't consume the caller's checkpoint
         self._t = state.pop("__t")
         self._tails = {k: jax.tree_util.tree_map(jnp.asarray, v)
                        for k, v in state.items()}

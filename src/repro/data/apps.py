@@ -23,7 +23,8 @@ import numpy as np
 from ..core.frontend import TStream
 from ..spe import eventspe as es
 
-__all__ = ["App", "APPS", "make_app", "temporal_op", "TEMPORAL_OPS"]
+__all__ = ["App", "APPS", "KEYED_APPS", "make_app", "make_keyed_app",
+           "temporal_op", "TEMPORAL_OPS"]
 
 
 @dataclasses.dataclass
@@ -34,6 +35,10 @@ class App:
     make_input: Callable[[int, int], dict]   # (n_events, seed) -> {name: np arrays}
     input_prec: int = 1
     description: str = ""
+    # keyed variant: (n_keys, n_ticks, seed) -> {name: {"value": (K,T[,...]),
+    # "valid": (K,T)}} — the per-key sub-stream scenario (engine/keyed.py);
+    # query sources then carry keyed=True.
+    make_keyed_input: Optional[Callable[[int, int, int], dict]] = None
 
 
 def _randwalk(n, seed, mu=100.0, sigma=0.05):
@@ -59,8 +64,8 @@ def _dense_input(x, valid=None):
 # 1. Trend-based trading (Fig. 2a): Avg(2), Join, Where
 # ---------------------------------------------------------------------------
 
-def trend_app(short: int = 20, long: int = 50) -> App:
-    s = TStream.source("in", prec=1)
+def trend_app(short: int = 20, long: int = 50, keyed: bool = False) -> App:
+    s = TStream.source("in", prec=1, keyed=keyed)
     q = (s.window(short).mean()
          .join(s.window(long).mean(), lambda a, b: a - b, name="diff")
          .where(lambda d: d > 0, name="uptrend"))
@@ -71,9 +76,18 @@ def trend_app(short: int = 20, long: int = 50) -> App:
         (es.Join(lambda a, b: a - b), ("a_s", "a_l"), "diff"),
         (es.Where(lambda d: d > 0), ("diff",), "out"),
     ])
+
+    def mk_keyed(n_keys, n_ticks, seed):
+        rng = np.random.default_rng(seed)
+        walks = 100.0 + np.cumsum(
+            rng.normal(0, 0.05, (n_keys, n_ticks)), axis=1)
+        return {"in": {"value": walks.astype(np.float64),
+                       "valid": np.ones((n_keys, n_ticks), bool)}}
+
     return App("trend", q, spe,
                lambda n, seed: {"in": _dense_input(_randwalk(n, seed))},
-               description="moving-average trend, NYSE-style prices")
+               description="moving-average trend, NYSE-style prices",
+               make_keyed_input=mk_keyed)
 
 
 # ---------------------------------------------------------------------------
@@ -297,10 +311,10 @@ class _SpeZip3(es.Operator):
                         kb.valid & rb.valid & cb.valid)
 
 
-def fraud_app(win: int = 1000) -> App:
+def fraud_app(win: int = 1000, keyed: bool = False) -> App:
     """Flag transactions above μ+3σ of the *trailing* window (shifted one
     tick so current transactions don't mask themselves)."""
-    s = TStream.source("in", prec=1)
+    s = TStream.source("in", prec=1, keyed=keyed)
     mu = s.window(win).mean().shift(1)
     sd = s.window(win).stddev().shift(1)
     thr = mu.join(sd, lambda m, d: m + 3.0 * d, name="thr")
@@ -323,16 +337,25 @@ def fraud_app(win: int = 1000) -> App:
         amt[rng.random(n) < 0.002] *= 50.0  # injected fraud
         return {"in": _dense_input(amt)}
 
+    def mk_keyed(n_keys, n_ticks, seed):
+        rng = np.random.default_rng(seed)
+        amt = rng.lognormal(3.0, 1.0, (n_keys, n_ticks))
+        amt[rng.random((n_keys, n_ticks)) < 0.002] *= 50.0  # per-user fraud
+        # sparse per-user activity: not every user transacts every tick
+        valid = rng.random((n_keys, n_ticks)) > 0.3
+        return {"in": {"value": amt, "valid": valid}}
+
     return App("fraud", q, spe, mk,
-               description="credit-card anomaly flagging (Kaggle-style)")
+               description="credit-card anomaly flagging (Kaggle-style)",
+               make_keyed_input=mk_keyed)
 
 
 # ---------------------------------------------------------------------------
 # Yahoo Streaming Benchmark: Select, Where, tumbling-window count
 # ---------------------------------------------------------------------------
 
-def ysb_app(win: int = 10) -> App:
-    s = TStream.source("in", prec=1)
+def ysb_app(win: int = 10, keyed: bool = False) -> App:
+    s = TStream.source("in", prec=1, keyed=keyed)
     views = s.where(lambda v: v["etype"] == 1.0, name="views")
     q = views.window(win, stride=win).count(field="etype", name="cnt")
 
@@ -349,8 +372,19 @@ def ysb_app(win: int = 10) -> App:
                        "value": {"etype": etype, "camp": camp},
                        "valid": np.ones(n, bool)}}
 
+    def mk_keyed(n_keys, n_ticks, seed):
+        # one sub-stream per ad campaign (the benchmark's natural key)
+        rng = np.random.default_rng(seed)
+        sh = (n_keys, n_ticks)
+        etype = (rng.integers(0, 3, sh) == 1).astype(np.float64)
+        camp = np.broadcast_to(
+            np.arange(n_keys, dtype=np.float64)[:, None], sh).copy()
+        return {"in": {"value": {"etype": etype, "camp": camp},
+                       "valid": np.ones(sh, bool)}}
+
     return App("ysb", q, spe, mk,
-               description="Yahoo streaming benchmark (filter+project+count)")
+               description="Yahoo streaming benchmark (filter+project+count)",
+               make_keyed_input=mk_keyed)
 
 
 class _SpeDictCount(es.Operator):
@@ -379,6 +413,17 @@ APPS = {
 
 def make_app(name: str, **kw) -> App:
     return APPS[name](**kw)
+
+
+# apps with a keyed (partitioned-stream) variant: engine/keyed.py scenario
+KEYED_APPS = ("trend", "fraud", "ysb")
+
+
+def make_keyed_app(name: str, **kw) -> App:
+    """App with sources marked keyed=True and a (K, T) input generator."""
+    if name not in KEYED_APPS:
+        raise KeyError(f"{name} has no keyed variant (have {KEYED_APPS})")
+    return APPS[name](keyed=True, **kw)
 
 
 # ---------------------------------------------------------------------------

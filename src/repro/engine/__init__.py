@@ -1,0 +1,11 @@
+"""Keyed multi-stream execution engine.
+
+The third layer of the query pipeline (frontend/IR → plan → codegen →
+**engine**): runs a compiled TiLT query over *K keyed sub-streams ×
+time partitions* — millions of independent per-key timelines (users,
+stock symbols, ad campaigns) advancing chunk by chunk with carried halo
+state, vectorized over the key axis and sharded across a device mesh.
+"""
+from .keyed import KeyedEngine, keyed_grid
+
+__all__ = ["KeyedEngine", "keyed_grid"]

@@ -12,6 +12,8 @@ import pytest
 from repro.configs.base import registry
 from repro.models.model import build_model
 
+pytestmark = pytest.mark.slow  # ~2 min on 1 CPU core (all archs × steps)
+
 ARCHS = sorted(registry())
 
 

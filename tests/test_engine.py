@@ -1,0 +1,150 @@
+"""KeyedEngine tests: K keyed sub-streams × time partitions must equal
+per-key reference execution tick-for-tick (values and φ-validity), carry
+halo state across partitions, and checkpoint/restore bit-identically."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.parallel import batch_run, partition_run
+from repro.core.stream import SnapshotGrid
+from repro.data import apps as A
+from repro.engine import KeyedEngine, keyed_grid
+
+K, T, N_PARTS = 64, 256, 4
+
+# keyed app variants sized so windows span partition boundaries (halo carry
+# is actually exercised) and ysb's tumbling stride divides the part span
+APP_PARAMS = {"trend": {}, "fraud": {"win": 60}, "ysb": {"win": 8}}
+
+
+def _keyed_grids(app, seed=7):
+    data = app.make_keyed_input(K, T, seed)
+    out = {}
+    for name, d in data.items():
+        val = d["value"]
+        v = ({k: jnp.asarray(a, jnp.float32) for k, a in val.items()}
+             if isinstance(val, dict) else jnp.asarray(val, jnp.float32))
+        out[name] = keyed_grid(v, d["valid"])
+    return out
+
+
+def _key_slice(grids, k):
+    out = {}
+    for name, g in grids.items():
+        v = ({kk: vv[k] for kk, vv in g.value.items()}
+             if isinstance(g.value, dict) else g.value[k])
+        out[name] = SnapshotGrid(value=v, valid=g.valid[k], t0=g.t0,
+                                 prec=g.prec)
+    return out
+
+
+@pytest.mark.parametrize("name", A.KEYED_APPS)
+def test_keyed_engine_matches_per_key_partition_run(name):
+    app = A.make_keyed_app(name, **APP_PARAMS[name])
+    grids = _keyed_grids(app)
+    out_len = (T // N_PARTS) // app.query.prec
+    exe = qc.compile_query(app.query.node, out_len=out_len, pallas=False)
+
+    eng = KeyedEngine(exe, n_keys=K)
+    out = eng.run(grids, N_PARTS)
+    assert out.valid.shape == (K, out_len * N_PARTS)
+
+    for k in range(0, K, 7):  # spot-check keys across the range
+        ref = partition_run(exe, _key_slice(grids, k), 0, N_PARTS)
+        assert np.array_equal(np.asarray(out.valid[k]),
+                              np.asarray(ref.valid)), (name, k)
+        m = np.asarray(ref.valid)
+        if isinstance(ref.value, dict):
+            for kk in ref.value:
+                np.testing.assert_allclose(
+                    np.asarray(out.value[kk][k])[m],
+                    np.asarray(ref.value[kk])[m], rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_allclose(np.asarray(out.value[k])[m],
+                                       np.asarray(ref.value)[m],
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_keyed_engine_carries_halo_across_partitions():
+    """Chunked keyed output must equal one-shot keyed output — only true
+    when the per-key halo tails are carried correctly."""
+    app = A.make_keyed_app("trend")
+    grids = _keyed_grids(app)
+    exe_chunk = qc.compile_query(app.query.node, out_len=T // N_PARTS,
+                                 pallas=False)
+    chunked = KeyedEngine(exe_chunk, n_keys=K).run(grids, N_PARTS)
+
+    exe_full = qc.compile_query(app.query.node, out_len=T, pallas=False)
+    oneshot = KeyedEngine(exe_full, n_keys=K).run(grids, 1)
+    assert np.array_equal(np.asarray(chunked.valid), np.asarray(oneshot.valid))
+    m = np.asarray(oneshot.valid)
+    # float32 window sums over ~100-valued walks differ in association
+    # between chunk sizes; the diff-of-means output cancels to ~1e-2, so
+    # tolerance is absolute (exactness vs. the same-partitioning reference
+    # is asserted tick-for-tick in the per-key test above)
+    np.testing.assert_allclose(np.asarray(chunked.value)[m],
+                               np.asarray(oneshot.value)[m],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_keyed_engine_checkpoint_restore_bit_identical():
+    app = A.make_keyed_app("fraud", win=60)
+    grids = _keyed_grids(app)
+    core = T // N_PARTS
+    exe = qc.compile_query(app.query.node, out_len=core, pallas=False)
+
+    def chunk(j):
+        return {name: SnapshotGrid(
+            value=g.value[:, j * core:(j + 1) * core],
+            valid=g.valid[:, j * core:(j + 1) * core],
+            t0=j * core, prec=1) for name, g in grids.items()}
+
+    r1 = KeyedEngine(exe, n_keys=K)
+    r1.step(chunk(0))
+    r1.step(chunk(1))
+    state = r1.state()  # mid-stream checkpoint (host arrays)
+
+    r2 = KeyedEngine(exe, n_keys=K)
+    r2.restore(state)
+    o_resumed = r2.step(chunk(2))
+    o_straight = r1.step(chunk(2))
+    assert o_resumed.t0 == o_straight.t0
+    assert np.array_equal(np.asarray(o_resumed.valid),
+                          np.asarray(o_straight.valid))
+    assert np.array_equal(np.asarray(o_resumed.value),
+                          np.asarray(o_straight.value))
+
+
+def test_keyed_engine_matches_batch_run_single_partition():
+    """One partition with zero carried state == the vmapped batch_run."""
+    rng = np.random.default_rng(2)
+    vals = rng.normal(size=(K, T)).astype(np.float32)
+    s = TStream.source("a", keyed=True)
+    q = s.window(16).mean().join(s, lambda m, x: x - m).where(lambda d: d > 0)
+    exe = qc.compile_query(q.node, out_len=T, pallas=False)
+    g = {"a": keyed_grid(vals, np.ones((K, T), bool))}
+    out_e = KeyedEngine(exe, n_keys=K).run(g, 1)
+    out_b = batch_run(exe, g)
+    assert np.array_equal(np.asarray(out_e.valid), np.asarray(out_b.valid))
+    m = np.asarray(out_b.valid)
+    np.testing.assert_allclose(np.asarray(out_e.value)[m],
+                               np.asarray(out_b.value)[m], rtol=1e-6)
+
+
+def test_keyed_engine_rejects_mixed_keyed_unkeyed():
+    a = TStream.source("a", keyed=True)
+    b = TStream.source("b")  # unkeyed
+    q = a.join(b, lambda x, y: x + y)
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+    with pytest.raises(ValueError, match="keyed"):
+        KeyedEngine(exe, n_keys=8)
+
+
+def test_keyed_engine_rejects_lookahead():
+    s = TStream.source("a", keyed=True)
+    q = s.shift(-4)  # lookahead
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+    with pytest.raises(NotImplementedError, match="lookahead"):
+        KeyedEngine(exe, n_keys=8)

@@ -1,22 +1,28 @@
 """Multi-device tests via subprocess (the main pytest process must keep the
 default 1-device CPU config; these spawn fresh interpreters with
 ``--xla_force_host_platform_device_count=8``)."""
-import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 TIMEOUT = 420
 
 
 def _run(script: str) -> str:
     code = textwrap.dedent(script)
+    # JAX_PLATFORMS must survive into the stripped env: without it jax
+    # probes for a TPU backend and hangs until TIMEOUT on isolated hosts.
     p = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=TIMEOUT,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+                            "JAX_PLATFORMS":
+                                os.environ.get("JAX_PLATFORMS", "cpu")})
     assert p.returncode == 0, f"stdout={p.stdout}\nstderr={p.stderr[-3000:]}"
     return p.stdout
 

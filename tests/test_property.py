@@ -9,6 +9,9 @@ and unoptimized IR.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compile as qc, fusion

@@ -180,6 +180,9 @@ def test_stream_runner_matches_batch():
 
 
 def test_stream_runner_checkpoint_resume():
+    """Checkpoint a chunked run mid-stream, restore into a fresh runner:
+    the continuation must be bit-identical (same jitted fn, same carried
+    tail state — the host round-trip through state() must be lossless)."""
     rng = np.random.default_rng(11)
     vals = rng.normal(size=128).astype(np.float32)
     s = TStream.source("a")
@@ -198,8 +201,17 @@ def test_stream_runner_checkpoint_resume():
     r3 = StreamRunner(exe)
     for k in range(3):
         o_straight = r3.step({"a": _grid(vals[k * 32:(k + 1) * 32])})
-    np.testing.assert_allclose(np.asarray(o_resumed.value),
-                               np.asarray(o_straight.value), rtol=1e-5)
+    assert o_resumed.t0 == o_straight.t0 == 64
+    assert np.array_equal(np.asarray(o_resumed.valid),
+                          np.asarray(o_straight.valid))
+    assert np.array_equal(np.asarray(o_resumed.value),
+                          np.asarray(o_straight.value))
+
+    # restored runner keeps advancing identically past the checkpoint
+    o4_resumed = r2.step({"a": _grid(vals[96:128])})
+    o4_straight = r3.step({"a": _grid(vals[96:128])})
+    assert np.array_equal(np.asarray(o4_resumed.value),
+                          np.asarray(o4_straight.value))
 
 
 def test_batch_run_multikey():
