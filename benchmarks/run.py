@@ -15,7 +15,8 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
     from . import (fig7_throughput, fig8_keyed_scaling, fig8_ysb_scaling,
-                   fig9_latency, fig10_fusion, roofline_table)
+                   fig9_latency, fig10_fusion, fig_multiquery_sharing,
+                   roofline_table)
 
     sections = {
         "fig7": lambda: fig7_throughput.run(n),
@@ -23,6 +24,7 @@ def main() -> None:
         "fig8k": lambda: fig8_keyed_scaling.run(min(n, 1_000_000)),
         "fig9": lambda: fig9_latency.run(min(n, 1_000_000)),
         "fig10": lambda: fig10_fusion.run(n),
+        "figmq": lambda: fig_multiquery_sharing.run(min(n, 1_000_000)),
         "roofline": roofline_table.run,
     }
     for name, fn in sections.items():

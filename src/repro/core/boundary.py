@@ -30,7 +30,8 @@ from typing import Dict
 
 from . import ir
 
-__all__ = ["Bounds", "node_bounds", "resolve", "halo_ticks"]
+__all__ = ["Bounds", "node_bounds", "node_bounds_multi", "resolve",
+           "halo_ticks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,13 +70,23 @@ def _edge(n: ir.Node, a: ir.Node, b: Bounds) -> Bounds:
 
 
 def node_bounds(root: ir.Node) -> Dict[int, Bounds]:
-    """Bounds for every node in the DAG, keyed by ``id(node)``.
+    """Bounds for every node in the DAG, keyed by ``id(node)``."""
+    return node_bounds_multi([root])
+
+
+def node_bounds_multi(roots) -> Dict[int, Bounds]:
+    """Bounds over the *union* DAG of several query roots.
+
+    Each root anchors ``Bounds()`` at the shared output domain; a node used
+    by several queries (or that is one query's output and another's interior
+    expression) accumulates the union of every consumer's demand — the halo
+    contract of the multi-query shared plan.
 
     Reverse post-order guarantees every consumer is finalized before its
     arguments are visited, so a single pass suffices.
     """
-    order = ir.topo_order(root)
-    bounds: Dict[int, Bounds] = {id(root): Bounds()}
+    order = ir.topo_order_multi(list(roots))
+    bounds: Dict[int, Bounds] = {id(r): Bounds() for r in roots}
     for n in reversed(order):
         b = bounds[id(n)]
         for a in n.args:

@@ -36,7 +36,7 @@ from .plan import InputSpec, QueryPlan, plan_query
 from .reduction import get_reduction
 from ..kernels import ops as kops
 
-__all__ = ["InputSpec", "CompiledQuery", "compile_query"]
+__all__ = ["InputSpec", "CompiledQuery", "compile_query", "eval_op"]
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +83,12 @@ def _eval_op(n: ir.Node, qp: QueryPlan, pallas: Optional[bool],
         ((av, aok),) = args
         return _eval_interp(n, av, aok, qp)
     raise TypeError(type(n))  # pragma: no cover
+
+
+# public alias: the multi-query shared-plan executor (repro.multiquery)
+# evaluates the union DAG through the same single node evaluator, passing a
+# plan.UnionPlan in place of the per-query QueryPlan.
+eval_op = _eval_op
 
 
 def _eval_reduce(n: ir.Reduce, aval, avalid, qp: QueryPlan,

@@ -37,12 +37,17 @@ paper's Fig. 3(a→b) pipeline.
 from __future__ import annotations
 
 import dataclasses
+import dis
+import functools
+import hashlib
 import itertools
+import types
 from typing import Any, Callable, Optional, Sequence
 
 __all__ = [
     "Node", "Input", "Const", "Map", "Where", "Shift", "Reduce", "Interp",
-    "topo_order", "free_inputs", "validate",
+    "topo_order", "topo_order_multi", "free_inputs", "validate",
+    "fingerprint",
 ]
 
 _ids = itertools.count()
@@ -250,6 +255,16 @@ class Interp(Node):
 
 def topo_order(root: Node) -> list[Node]:
     """Post-order (deps first) topological order of the expression DAG."""
+    return topo_order_multi([root])
+
+
+def topo_order_multi(roots: Sequence[Node]) -> list[Node]:
+    """Post-order over the *union* DAG of several roots (shared nodes once).
+
+    Within each root's subtree, and across roots, every node appears after
+    all of its arguments — the property the multi-query planner and the
+    boundary-resolution reverse pass rely on.
+    """
     seen: dict[int, Node] = {}
     order: list[Node] = []
 
@@ -261,7 +276,8 @@ def topo_order(root: Node) -> list[Node]:
             visit(a)
         order.append(n)
 
-    visit(root)
+    for r in roots:
+        visit(r)
     return order
 
 
@@ -280,3 +296,183 @@ def validate(root: Node) -> None:
         for a in n.args:
             assert (n.prec % a.prec == 0) or (a.prec % n.prec == 0), (
                 f"{n.name}: unalignable precisions {n.prec} vs {a.prec}")
+
+
+# ---------------------------------------------------------------------------
+# canonical structural fingerprints (multi-query sharing)
+# ---------------------------------------------------------------------------
+#
+# Two sub-DAGs may be evaluated once and shared between concurrent queries
+# iff they are *structurally* identical: same node kinds, same static
+# parameters, same user functions, same inputs.  ``fingerprint`` hashes
+# exactly that — a hash-consing key over (op, params, argument fingerprints),
+# with source nodes keyed by (name, prec, keyed), i.e. by their grid.
+#
+# The digest must be stable across processes (a plan cache keyed by it may
+# outlive one interpreter), so the encoding never uses ``id()`` or Python's
+# randomized ``hash()``: callables are tokenized by their bytecode, constants,
+# names, defaults and closure *values* (not cells), and everything is folded
+# through sha256.  Auto-generated node names (``map_17``) carry a global
+# counter and are deliberately excluded — only ``Input`` names are identity.
+
+def _value_token(v, seen=None) -> tuple:
+    """Deterministic, process-stable token for a Python value."""
+    if seen is None:
+        seen = set()
+    if v is None or isinstance(v, (bool, int, str, bytes)):
+        return ("prim", type(v).__name__, repr(v))
+    if isinstance(v, float):
+        return ("float", repr(v))  # repr distinguishes -0.0, round-trips
+    if isinstance(v, (tuple, list)):
+        return ("seq", type(v).__name__,
+                tuple(_value_token(x, seen) for x in v))
+    if isinstance(v, dict):
+        return ("dict", tuple(sorted(
+            (_value_token(k, seen), _value_token(x, seen))
+            for k, x in v.items())))
+    if isinstance(v, types.ModuleType):
+        return ("module", v.__name__)
+    if isinstance(v, types.CodeType):
+        return _code_token(v, seen)
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return ("dataclass", type(v).__qualname__, tuple(
+            (f.name, _value_token(getattr(v, f.name), seen))
+            for f in dataclasses.fields(v)))
+    # numpy scalars / small arrays (window params, thresholds)
+    tobytes = getattr(v, "tobytes", None)
+    dtype = getattr(v, "dtype", None)
+    if tobytes is not None and dtype is not None:
+        return ("ndarray", str(dtype), tuple(getattr(v, "shape", ())),
+                v.tobytes())
+    if callable(v):
+        return _callable_token(v, seen)
+    # generic parameter object: identity is its type + attribute state
+    state = getattr(v, "__dict__", None)
+    if state is not None:
+        if id(v) in seen:
+            return ("cycle",)
+        seen.add(id(v))
+        return ("obj", type(v).__qualname__, tuple(sorted(
+            (k, _value_token(x, seen)) for k, x in state.items())))
+    raise ValueError(
+        f"cannot fingerprint value of type {type(v).__name__} ({v!r}); "
+        "query closures must hold primitives, arrays or functions")
+
+
+def _code_token(code: types.CodeType, seen) -> tuple:
+    # co_filename / lineno / varnames excluded: renaming locals or moving a
+    # lambda between files does not change what it computes.
+    return ("code", code.co_code,
+            tuple(_value_token(c, seen) for c in code.co_consts),
+            code.co_names, code.co_argcount, code.co_kwonlyargcount,
+            code.co_flags & 0x0c)  # *args / **kwargs flags only
+
+
+def _referenced_names(code: types.CodeType) -> set:
+    """Global names a code object (or its nested lambdas) actually loads.
+
+    Only LOAD_GLOBAL/LOAD_NAME targets count — ``co_names`` also holds
+    attribute/method names (``v.mean()``), which must not be resolved
+    against the defining module's namespace.
+    """
+    names = {ins.argval for ins in dis.get_instructions(code)
+             if ins.opname in ("LOAD_GLOBAL", "LOAD_NAME")}
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            names |= _referenced_names(c)
+    return names
+
+
+def _callable_token(fn, seen=None) -> tuple:
+    if seen is None:
+        seen = set()
+    if id(fn) in seen:
+        # back-edge (mutually recursive helpers) or re-reference: traversal
+        # order is deterministic, so the marker is too
+        return ("cycle",)
+    seen.add(id(fn))
+    # bound method: the receiver's state is part of what it computes
+    # (Thresh(1.0).pred vs Thresh(5.0).pred share bytecode, not behaviour)
+    self_obj = getattr(fn, "__self__", None)
+    func = getattr(fn, "__func__", None)
+    if self_obj is not None and func is not None:
+        return ("bound", _callable_token(func, seen),
+                _value_token(self_obj, seen))
+    if isinstance(fn, functools.partial):
+        return ("partial", _callable_token(fn.func, seen),
+                tuple(_value_token(a, seen) for a in fn.args),
+                tuple(sorted((k, _value_token(v, seen))
+                             for k, v in fn.keywords.items())))
+    code = getattr(fn, "__code__", None)
+    if code is not None:
+        defaults = tuple(_value_token(d, seen)
+                         for d in (fn.__defaults__ or ()))
+        kwdefaults = tuple(sorted(
+            (k, _value_token(v, seen))
+            for k, v in (fn.__kwdefaults__ or {}).items()))
+        cells = fn.__closure__ or ()
+        closure = tuple(_value_token(c.cell_contents, seen) for c in cells)
+        # captured globals: a lambda reading module-level state by name
+        # computes different things in different namespaces even with equal
+        # bytecode, so the referenced values are part of the structure
+        glob = getattr(fn, "__globals__", None) or {}
+        gtoks = tuple((nm, _value_token(glob[nm], seen))
+                      for nm in sorted(_referenced_names(code))
+                      if nm in glob)
+        return ("fn", _code_token(code, seen), defaults, kwdefaults,
+                closure, gtoks)
+    # builtins / ufuncs / C functions: identified by qualified name
+    name = getattr(fn, "__qualname__", None) or getattr(fn, "__name__", None)
+    if name is not None:
+        return ("named_callable", getattr(fn, "__module__", None), name)
+    call = getattr(type(fn), "__call__", None)
+    if call is not None and getattr(call, "__code__", None) is not None:
+        state = getattr(fn, "__dict__", {})
+        return ("obj_call", type(fn).__qualname__, _callable_token(call, seen),
+                tuple(sorted((k, _value_token(v, seen))
+                             for k, v in state.items())))
+    raise ValueError(f"cannot fingerprint callable {fn!r}")
+
+
+def _node_token(n: Node, arg_fps: tuple) -> tuple:
+    if isinstance(n, Input):
+        return ("input", n.name, n.prec, n.keyed, n.fields)
+    if isinstance(n, Const):
+        return ("const", _value_token(n.value), n.prec)
+    if isinstance(n, Map):
+        return ("map", _callable_token(n.fn), n.prec, n.phi_aware, arg_fps)
+    if isinstance(n, Where):
+        return ("where", _callable_token(n.pred), n.prec, arg_fps)
+    if isinstance(n, Shift):
+        return ("shift", n.delta, n.prec, arg_fps)
+    if isinstance(n, Reduce):
+        op = n.op if isinstance(n.op, str) else _value_token(n.op)
+        return ("reduce", op, n.window, n.prec, n.field, arg_fps)
+    if isinstance(n, Interp):
+        return ("interp", n.mode, n.max_gap, n.prec, arg_fps)
+    raise TypeError(type(n))  # pragma: no cover
+
+
+def fingerprint(root: Node) -> str:
+    """Canonical structural fingerprint (sha256 hex) of a node's sub-DAG.
+
+    ``fingerprint(a) == fingerprint(b)`` iff ``a`` and ``b`` are
+    structurally equal: same DAG shape, node kinds, static parameters and
+    user functions (compared by bytecode + captured values).  Stable across
+    processes and hash seeds; cached on the node.
+    """
+    memo: dict[int, str] = {}
+
+    def fp(n: Node) -> str:
+        cached = n.__dict__.get("_fingerprint")
+        if cached is not None:
+            return cached
+        if id(n) in memo:
+            return memo[id(n)]
+        token = _node_token(n, tuple(fp(a) for a in n.args))
+        digest = hashlib.sha256(repr(token).encode()).hexdigest()
+        memo[id(n)] = digest
+        object.__setattr__(n, "_fingerprint", digest)
+        return digest
+
+    return fp(root)

@@ -35,7 +35,7 @@ from . import compile as qcompile
 from .stream import SnapshotGrid
 
 __all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
-           "slice_grid"]
+           "slice_grid", "check_single_hop_halo"]
 
 
 def _slice_pad(value, valid, lo: int, hi: int):
@@ -98,6 +98,32 @@ def _grid_window(g: SnapshotGrid, t0: int, length: int):
     return _slice_pad(g.value, g.valid, lo, lo + length)
 
 
+def check_single_hop_halo(specs: Dict[str, "qcompile.InputSpec"],
+                          out_prec: int, n: int) -> None:
+    """Validate the single-hop ppermute contract for ``n`` time shards.
+
+    Each shard fetches its halo from its *immediate* neighbours only, so a
+    halo larger than the per-shard core span would need multi-hop exchange
+    (ROADMAP item) and currently returns wrong leading ticks.  Rather than
+    just rejecting, report the minimum viable partition length for the
+    offending input so callers know how to re-compile.
+    """
+    if n <= 1:
+        return
+    for name, s in specs.items():
+        halo = max(s.left_halo, s.right_halo)
+        if halo > s.core:
+            # need core = out_len*out_prec // s.prec >= halo ticks
+            min_out_len = -(-halo * s.prec // out_prec)
+            raise NotImplementedError(
+                f"input {name}: halo ({s.left_halo}/{s.right_halo} ticks) "
+                f"exceeds the per-shard span ({s.core} ticks); the "
+                "single-hop ppermute exchange would return wrong leading "
+                f"ticks — recompile with out_len >= {min_out_len} output "
+                f"ticks per shard ({min_out_len * out_prec} time units), "
+                "or use fewer shards (multi-hop exchange is a ROADMAP item)")
+
+
 def shard_map_run(exe: qcompile.CompiledQuery,
                   inputs: Dict[str, SnapshotGrid],
                   mesh: Mesh, axis: str = "data") -> SnapshotGrid:
@@ -111,14 +137,7 @@ def shard_map_run(exe: qcompile.CompiledQuery,
 
     specs = exe.input_specs
     core_len = {name: s.core * n for name, s in specs.items()}
-    for name, s in specs.items():
-        if n > 1 and (s.left_halo > s.core or s.right_halo > s.core):
-            raise NotImplementedError(
-                f"input {name}: halo ({s.left_halo}/{s.right_halo} ticks) "
-                f"exceeds the per-shard span ({s.core} ticks); the "
-                "single-hop ppermute exchange would return wrong leading "
-                "ticks — use fewer/larger shards (multi-hop exchange is a "
-                "ROADMAP item)")
+    check_single_hop_halo(specs, exe.out_prec, n)
 
     def local_body(*flat):
         local = dict(zip(sorted(specs), flat))

@@ -40,7 +40,8 @@ import numpy as np
 
 from . import boundary, ir
 
-__all__ = ["GridPlan", "AlignSpec", "InputSpec", "QueryPlan", "plan_query"]
+__all__ = ["GridPlan", "AlignSpec", "InputSpec", "QueryPlan", "UnionPlan",
+           "plan_query", "plan_union"]
 
 
 def _ceil_div(a, b):
@@ -210,24 +211,81 @@ class QueryPlan:
         return self._aligns[key]
 
 
+@dataclasses.dataclass
+class UnionPlan(QueryPlan):
+    """A :class:`QueryPlan` over the *union* DAG of several query roots.
+
+    One shared static artifact serves N concurrent queries: every node of
+    every query gets a grid sized for the union of all consumers' demands
+    (:func:`boundary.node_bounds_multi`), and ``input_specs`` is the merged
+    per-source halo contract.  ``root``/``out_len``/``out_prec`` describe
+    the first root only; per-query output extents come from each root's own
+    :class:`GridPlan` (see :mod:`repro.multiquery`).
+    """
+
+    roots: tuple = ()
+    span: int = 0  # shared output span (0, span] in time units per chunk
+
+
 def plan_query(root: ir.Node, out_len: int) -> QueryPlan:
     """Resolve every grid extent, alignment map and halo for one partition
     size.  Pure planning — no jax tracing happens here."""
     out_prec = root.prec
     span = out_len * out_prec  # output window (0, span]
+    node_plans, input_specs = _plan_grids([root], span)
+    return QueryPlan(root=root, out_len=out_len, out_prec=out_prec,
+                     node_plans=node_plans, input_specs=input_specs)
 
-    nb = boundary.node_bounds(root)
+
+def plan_union(roots, span: int) -> UnionPlan:
+    """Plan the union DAG of several queries over one shared output span.
+
+    All queries advance in lockstep: each chunk produces the output window
+    ``(0, span]`` of every root (``span // root.prec`` ticks each), so
+    ``span`` must be a multiple of every root's precision.  Shared nodes get
+    a single grid covering every consumer; per-source contracts merge across
+    queries.  Sources reached under the same name must agree on their grid
+    declaration (prec / keyed).
+    """
+    roots = tuple(roots)
+    if not roots:
+        raise ValueError("plan_union needs at least one query root")
+    for r in roots:
+        if span % r.prec:
+            raise ValueError(
+                f"span {span} not a multiple of root {r.name} prec {r.prec}")
+    decl: Dict[str, ir.Input] = {}
+    for n in ir.topo_order_multi(list(roots)):
+        if isinstance(n, ir.Input):
+            prev = decl.get(n.name)
+            if prev is not None and (prev.prec, prev.keyed) != (n.prec, n.keyed):
+                raise ValueError(
+                    f"source {n.name!r} declared with conflicting grids: "
+                    f"prec={prev.prec}/keyed={prev.keyed} vs "
+                    f"prec={n.prec}/keyed={n.keyed}")
+            decl[n.name] = n
+    node_plans, input_specs = _plan_grids(roots, span)
+    return UnionPlan(root=roots[0], out_len=span // roots[0].prec,
+                     out_prec=roots[0].prec, node_plans=node_plans,
+                     input_specs=input_specs, roots=roots, span=span)
+
+
+def _plan_grids(roots, span: int):
+    """Grid extents + merged per-NAME input contracts for a (multi-)root DAG."""
+    nb = boundary.node_bounds_multi(list(roots))
     node_plans: Dict[int, GridPlan] = {}
-    for n in ir.topo_order(root):
+    name_bounds: Dict[str, boundary.Bounds] = {}
+    name_prec: Dict[str, int] = {}
+    for n in ir.topo_order_multi(list(roots)):
         b = nb[id(n)]
         t0 = -_ceil_div(b.lookback, n.prec) * n.prec
         t_hi = span + _ceil_div(b.lookahead, n.prec) * n.prec
         node_plans[id(n)] = GridPlan(t0=t0, length=(t_hi - t0) // n.prec,
                                      prec=n.prec)
-
-    # per-NAME input contract (union over Input nodes sharing the name)
-    name_bounds = boundary.resolve(root)
-    name_prec = {n.name: n.prec for n in ir.free_inputs(root)}
+        if isinstance(n, ir.Input):
+            name_prec[n.name] = n.prec
+            name_bounds[n.name] = (name_bounds[n.name].union(b)
+                                   if n.name in name_bounds else b)
     input_specs: Dict[str, InputSpec] = {}
     for name, b in name_bounds.items():
         p = name_prec[name]
@@ -235,6 +293,4 @@ def plan_query(root: ir.Node, out_len: int) -> QueryPlan:
         t_hi = span + _ceil_div(b.lookahead, p) * p
         input_specs[name] = InputSpec(t0=t0, length=(t_hi - t0) // p, prec=p,
                                       core=span // p)
-
-    return QueryPlan(root=root, out_len=out_len, out_prec=out_prec,
-                     node_plans=node_plans, input_specs=input_specs)
+    return node_plans, input_specs

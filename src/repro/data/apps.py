@@ -24,7 +24,8 @@ from ..core.frontend import TStream
 from ..spe import eventspe as es
 
 __all__ = ["App", "APPS", "KEYED_APPS", "make_app", "make_keyed_app",
-           "temporal_op", "TEMPORAL_OPS"]
+           "temporal_op", "TEMPORAL_OPS", "dashboard_queries",
+           "dashboard_input", "dashboard_keyed_input"]
 
 
 @dataclasses.dataclass
@@ -424,6 +425,84 @@ def make_keyed_app(name: str, **kw) -> App:
     if name not in KEYED_APPS:
         raise KeyError(f"{name} has no keyed variant (have {KEYED_APPS})")
     return APPS[name](keyed=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# dashboard fan-out: N query variants over shared windowed aggregates
+# (the multi-query sharing workload — repro.multiquery)
+# ---------------------------------------------------------------------------
+
+def _dash_trend_up(fast, slow, thr):
+    return (fast.join(slow, lambda a, b: a - b, name="dash_diff")
+            .where(lambda d, t=thr: d > t, name=f"up_{thr}"))
+
+
+def _dash_trend_down(fast, slow, thr):
+    return (fast.join(slow, lambda a, b: a - b, name="dash_diff")
+            .where(lambda d, t=thr: d < -t, name=f"down_{thr}"))
+
+
+def _dash_breakout(s, slow, vol, k):
+    """Fraud-style band breakout: price above μ_long + k·σ_long."""
+    return (TStream.zip([s, slow, vol],
+                        lambda x, m, v, k=k: x - (m + k * v),
+                        name=f"excess_{k}")
+            .where(lambda e: e > 0, name="breakout"))
+
+
+def _dash_momentum(fast, slow, vol, scale):
+    """Projection head: volatility-normalized momentum (no threshold)."""
+    return TStream.zip([fast, slow, vol],
+                       lambda a, b, v, s=scale: s * (a - b)
+                       / jnp.maximum(v, 1e-6),
+                       name=f"momentum_{scale}")
+
+
+def dashboard_queries(n: int = 16, short: int = 20, long: int = 50,
+                      keyed: bool = False) -> dict:
+    """``n`` concurrent dashboard variants over one source: every query
+    reads the same short/long sliding means and long sliding stddev and
+    differs only in its final threshold / projection head — the
+    serving-layer fan-out scenario where multi-query sharing collapses N
+    passes over the stream into one.
+
+    Returns ``{query_name: TStream}``.  Note the aggregates are deliberately
+    rebuilt *per query* — structural fingerprinting (ir.fingerprint), not
+    object sharing, is what the session relies on to deduplicate them.
+    """
+    out = {}
+    for i in range(n):
+        # fresh sub-expressions per query: sharing must be discovered
+        s = TStream.source("in", prec=1, keyed=keyed)
+        fast = s.window(short).mean()
+        slow = s.window(long).mean()
+        vol = s.window(long).stddev()
+        thr = 0.05 * (i // 4)
+        kind = i % 4
+        if kind == 0:
+            q = _dash_trend_up(fast, slow, thr)
+        elif kind == 1:
+            q = _dash_trend_down(fast, slow, thr)
+        elif kind == 2:
+            q = _dash_breakout(s, slow, vol, 1.0 + thr)
+        else:
+            q = _dash_momentum(fast, slow, vol, 1.0 + thr)
+        out[f"q{i:02d}"] = q
+    return out
+
+
+def dashboard_input(n_ticks: int, seed: int) -> dict:
+    """Random-walk price stream for the dashboard fan-out (unkeyed)."""
+    return {"in": _dense_input(_randwalk(n_ticks, seed))}
+
+
+def dashboard_keyed_input(n_keys: int, n_ticks: int, seed: int) -> dict:
+    """Per-symbol random walks, (K, T) — the keyed dashboard scenario."""
+    rng = np.random.default_rng(seed)
+    walks = 100.0 + np.cumsum(
+        rng.normal(0, 0.05, (n_keys, n_ticks)), axis=1)
+    return {"in": {"value": walks.astype(np.float64),
+                   "valid": np.ones((n_keys, n_ticks), bool)}}
 
 
 # ---------------------------------------------------------------------------

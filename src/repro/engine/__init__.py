@@ -6,6 +6,6 @@ time partitions* — millions of independent per-key timelines (users,
 stock symbols, ad campaigns) advancing chunk by chunk with carried halo
 state, vectorized over the key axis and sharded across a device mesh.
 """
-from .keyed import KeyedEngine, keyed_grid
+from .keyed import KeyedEngine, keyed_grid, wrap_keyed_step
 
-__all__ = ["KeyedEngine", "keyed_grid"]
+__all__ = ["KeyedEngine", "keyed_grid", "wrap_keyed_step"]

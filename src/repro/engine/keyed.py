@@ -35,13 +35,29 @@ from ..core import compile as qcompile
 from ..core import ir
 from ..core.stream import SnapshotGrid
 
-__all__ = ["KeyedEngine", "keyed_grid"]
+__all__ = ["KeyedEngine", "keyed_grid", "wrap_keyed_step"]
 
 
 def keyed_grid(value, valid, t0: int = 0, prec: int = 1) -> SnapshotGrid:
     """Build a keyed SnapshotGrid from ``(K, T, ...)`` arrays."""
     v = jax.tree_util.tree_map(jnp.asarray, value)
     return SnapshotGrid(value=v, valid=jnp.asarray(valid), t0=t0, prec=prec)
+
+
+def wrap_keyed_step(step, mesh: Optional[Mesh], axis: str = "data"):
+    """Stage a ``(tails, chunks) -> (out, new_tails)`` step for keyed
+    execution: shard the leading key axis along ``axis`` when a mesh is
+    given (keys never communicate, so the SPMD body needs no collectives),
+    then jit.  Shared by :class:`KeyedEngine` and the multi-query session
+    (repro.multiquery), so both layers stage their chunk step identically.
+    """
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        step = shard_map(step, mesh=mesh,
+                         in_specs=(P(axis), P(axis)),
+                         out_specs=(P(axis), P(axis)),
+                         check_rep=False)
+    return jax.jit(step)
 
 
 @dataclasses.dataclass
@@ -119,13 +135,7 @@ class KeyedEngine:
                                          axis=1))
             return out, new_tails
 
-        if self.mesh is not None:
-            from jax.experimental.shard_map import shard_map
-            step = shard_map(step, mesh=self.mesh,
-                             in_specs=(P(self.axis), P(self.axis)),
-                             out_specs=(P(self.axis), P(self.axis)),
-                             check_rep=False)
-        return jax.jit(step)
+        return wrap_keyed_step(step, self.mesh, self.axis)
 
     def _init_tails(self, chunks: Dict[str, SnapshotGrid]):
         for name, spec in self.exe.input_specs.items():

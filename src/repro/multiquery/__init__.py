@@ -1,0 +1,45 @@
+"""Multi-query sharing: serve N concurrent queries from one stream pass.
+
+TiLT's planner (plan.py) makes a query's grids, alignments and halos a
+*static artifact*; this package exploits the consequence the per-query
+layers cannot: two sub-DAGs from *different* queries are interchangeable
+iff their structural fingerprints match — same ops, same static parameters,
+same sources-by-grid (ir.fingerprint).  The serving scenario (thousands of
+dashboards watching the same sources) then reduces to classic shared-
+operator execution, resolved entirely at plan time.  The subsystem owns, in
+exactly one place:
+
+* :class:`~repro.multiquery.shared.SharedPlanCache` — cross-query CSE by
+  hash-consing: interned queries share IR node objects for structurally
+  equal sub-plans, and the union DAG of N roots partitions into *shared
+  interior nodes* (reachable from ≥ 2 queries; evaluated once per chunk)
+  and *per-query heads* (final thresholds / projections).
+* :func:`repro.core.plan.plan_union` — one static plan for the union DAG:
+  every node's grid covers the union of all consumers' demands, and the
+  per-source halo contracts merge across queries into a single partition
+  contract.
+* :class:`~repro.multiquery.session.MultiQuerySession` — the runner: one
+  staged step per chunk evaluates the whole union DAG through the same node
+  evaluator the per-query executors use (compile.eval_op), carries one
+  merged halo-state dict as the only cross-chunk state, supports
+  attach/detach of queries between chunks (carried halos re-fit to the new
+  contract deterministically), and composes with the keyed engine — K keyed
+  sub-streams × N queries advance as a single vmapped, optionally
+  mesh-sharded XLA computation.
+
+Sharing model in one line: *fingerprint-equal ⇒ plan-equal ⇒ evaluate
+once* — correctness rests on fingerprints implying structural equality
+(property-tested), and on the union plan widening grids only conservatively
+(extra φ-padded halo ticks are semantically invisible).  Numerically,
+widening is exact for φ-masking, alignment and associative-exact reductions
+(max/min, integer-valued sums); for inexact float reductions the blocked
+sliding-sum may associate differently on a union-widened grid than on the
+query's solo grid, so shared-vs-independent agreement is bitwise for
+exactly-representable data and within the kernel's documented
+window-bounded error otherwise (see kernels/ops.py; offset-invariant
+blocking is a ROADMAP follow-on).
+"""
+from .session import MultiQuerySession
+from .shared import SharedPlanCache, SharingReport
+
+__all__ = ["MultiQuerySession", "SharedPlanCache", "SharingReport"]

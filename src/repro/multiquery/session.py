@@ -1,0 +1,375 @@
+"""Multi-query session: N concurrent queries, one pass over the stream.
+
+:class:`MultiQuerySession` is the serving-layer counterpart of
+:class:`repro.core.parallel.StreamRunner` / :class:`repro.engine.KeyedEngine`
+for *many* queries at once: registered queries are interned into a
+:class:`repro.multiquery.shared.SharedPlanCache`, planned together as one
+union DAG (:func:`repro.core.plan.plan_union`), and advanced chunk by chunk
+through a single staged step — every shared interior node is evaluated once
+per chunk regardless of how many queries read it.
+
+Cross-chunk state is one *merged* halo dict: per source name, the trailing
+``left_halo`` ticks demanded by the union contract (the per-input halo
+contract of plan.py, generalized to the union of all attached queries).
+Queries may attach/detach between chunks; the carried halo is re-fitted to
+the new merged contract deterministically (crop from the left when it
+shrinks, φ-pad on the left when it grows), so a session that changes its
+query set stays bit-identical to a fresh session restored from the same
+checkpoint.
+
+Keyed sources compose exactly as in the keyed engine: chunks carry a leading
+key axis, the union step is vmapped over it, and an optional mesh shards the
+key axis via :func:`repro.engine.wrap_keyed_step` — K keyed sub-streams ×
+N queries advance as a single XLA computation per chunk.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import boundary, compile as qcompile, ir
+from ..core.plan import plan_union
+from ..core.stream import SnapshotGrid
+from ..engine import wrap_keyed_step
+from .shared import SharedPlanCache, SharingReport
+
+__all__ = ["MultiQuerySession"]
+
+
+class MultiQuerySession:
+    """Serve N concurrent queries from one pass over shared sources.
+
+    Parameters
+    ----------
+    span:
+        Output time units per chunk, shared by all queries (each query
+        emits ``span // root.prec`` ticks per step).
+    n_keys / mesh / axis:
+        Keyed execution: required key count when sources are ``keyed=True``;
+        optional mesh shards the key axis (as in KeyedEngine).
+    pallas / sum_algo:
+        Kernel knobs, passed through to the node evaluator.
+    jit:
+        Stage the union step with ``jax.jit`` (default).  Forced off by
+        ``instrument=True``, which counts per-chunk node evaluations in
+        ``node_eval_counts`` (keyed by structural fingerprint) — the sharing
+        test hook.
+    cache:
+        A shared :class:`SharedPlanCache`; sessions may share one so interned
+        plans persist across sessions.  A private cache by default.
+    """
+
+    def __init__(self, span: int, *, n_keys: Optional[int] = None,
+                 mesh: Optional[Mesh] = None, axis: str = "data",
+                 pallas: Optional[bool] = None, sum_algo: str = "block",
+                 jit: bool = True, instrument: bool = False,
+                 cache: Optional[SharedPlanCache] = None):
+        self.span = span
+        self.n_keys = n_keys
+        self.mesh = mesh
+        self.axis = axis
+        self.pallas = pallas
+        self.sum_algo = sum_algo
+        self.jit = jit and not instrument
+        self.instrument = instrument
+        self.cache = cache if cache is not None else SharedPlanCache()
+        self.node_eval_counts: Dict[str, int] = {}
+        self._queries: Dict[str, ir.Node] = {}   # name -> interned root
+        self._plan = None
+        self._order: list = []
+        self._step_fn = None
+        self._dirty = True
+        self._keyed: Optional[bool] = None
+        self._tails: Dict[str, tuple] = {}
+        self._t = 0  # absolute time of the next chunk's output start
+
+    # -- query registry ------------------------------------------------------
+    def attach(self, name: str, query) -> ir.Node:
+        """Register a query (TStream or IR node) under ``name``; takes
+        effect at the next chunk.  Returns the interned canonical root."""
+        root = getattr(query, "node", query)
+        if name in self._queries:
+            raise ValueError(f"query {name!r} already attached")
+        ir.validate(root)
+        if self.span % root.prec:
+            raise ValueError(
+                f"query {name!r}: span {self.span} not a multiple of "
+                f"output precision {root.prec}")
+        for src, b in boundary.resolve(root).items():
+            if b.lookahead > 0:
+                raise NotImplementedError(
+                    f"query {name!r}: MultiQuerySession supports "
+                    f"lookback-only queries (input {src} has lookahead)")
+        keyed_flags = {n.keyed for n in ir.free_inputs(root)}
+        if len(keyed_flags) > 1:
+            raise ValueError(
+                f"query {name!r} mixes keyed and unkeyed sources")
+        q_keyed = keyed_flags.pop() if keyed_flags else None
+        if q_keyed is not None:
+            if self._keyed is not None and q_keyed != self._keyed:
+                raise ValueError(
+                    f"query {name!r}: keyed={q_keyed} conflicts with "
+                    f"already-attached queries (keyed={self._keyed})")
+            self._keyed = q_keyed
+        if self._keyed and self.n_keys is None:
+            raise ValueError("keyed sources need n_keys")
+        if self.mesh is not None and not self._keyed:
+            raise ValueError("mesh sharding requires keyed sources")
+        canon = self.cache.intern(root)
+        self._queries[name] = canon
+        self._dirty = True
+        return canon
+
+    def detach(self, name: str) -> None:
+        """Drop a query; unaffected shared nodes keep their cached plans and
+        the merged halo state is re-fitted at the next chunk."""
+        if name not in self._queries:
+            raise ValueError(f"no query {name!r} attached "
+                             f"(have {sorted(self._queries)})")
+        del self._queries[name]
+        # recompute keyedness from what's left so a session that empties
+        # out can be repopulated with either kind
+        flags = {n.keyed for root in self._queries.values()
+                 for n in ir.free_inputs(root)}
+        self._keyed = flags.pop() if len(flags) == 1 else None
+        self._dirty = True
+
+    @property
+    def queries(self) -> Dict[str, ir.Node]:
+        return dict(self._queries)
+
+    def sharing_report(self) -> SharingReport:
+        return self.cache.report(self._queries)
+
+    def eval_count(self, query_or_node) -> int:
+        """Instrumented evaluation count of a node (by structural
+        fingerprint) accumulated since session creation or the last
+        ``reset()``; requires ``instrument=True``.  A shared node evaluates
+        once per chunk however many queries read it."""
+        node = getattr(query_or_node, "node", query_or_node)
+        return self.node_eval_counts.get(ir.fingerprint(node), 0)
+
+    # -- planning / staging --------------------------------------------------
+    def _rebuild(self) -> None:
+        if not self._queries:
+            raise ValueError("no queries attached")
+        roots = list(self._queries.values())
+        plan = plan_union(roots, self.span)
+        for name, s in plan.input_specs.items():
+            if s.right_halo > 0:  # pragma: no cover - guarded per-attach
+                raise NotImplementedError(
+                    f"input {name} has lookahead; lookback-only sessions")
+        self._plan = plan
+        self._order = ir.topo_order_multi(roots)
+        self._step_fn = self._build_step()
+        self._dirty = False
+
+    @property
+    def _taxis(self) -> int:
+        return 1 if self._keyed else 0
+
+    def _build_step(self):
+        plan = self._plan
+        names = sorted(plan.input_specs)
+        specs = plan.input_specs
+        order = list(self._order)
+        queries = dict(self._queries)
+        fps = {id(n): ir.fingerprint(n) for n in order} if self.instrument \
+            else {}
+        pallas, sum_algo, span = self.pallas, self.sum_algo, self.span
+        taxis = self._taxis
+        counts = self.node_eval_counts
+
+        def body(full: Dict[str, tuple]) -> Dict[str, tuple]:
+            """Evaluate the union DAG once (single-key view, time axis 0)."""
+            env: Dict[int, tuple] = {}
+            for n in order:
+                if isinstance(n, ir.Input):
+                    args = (full[n.name],)
+                else:
+                    args = tuple(env[id(a)] for a in n.args)
+                if fps:
+                    counts[fps[id(n)]] = counts.get(fps[id(n)], 0) + 1
+                env[id(n)] = qcompile.eval_op(n, plan, pallas, sum_algo,
+                                              *args)
+            outs = {}
+            for qname, root in queries.items():
+                gp = plan.plan_of(root)
+                lo = -gp.t0 // gp.prec        # skip any union-widened halo
+                out_len = span // gp.prec
+                v, m = env[id(root)]
+                outs[qname] = (
+                    jax.tree_util.tree_map(
+                        lambda x: jax.lax.slice_in_dim(
+                            x, lo, lo + out_len, axis=0), v),
+                    jax.lax.slice_in_dim(m, lo, lo + out_len, axis=0))
+            return outs
+
+        def step(tails, chunks):
+            full = {}
+            for name in names:
+                tv, tm = tails[name]
+                cv, cm = chunks[name]
+                full[name] = (
+                    jax.tree_util.tree_map(
+                        lambda a, b: jnp.concatenate([a, b], axis=taxis),
+                        tv, cv),
+                    jnp.concatenate([tm, cm], axis=taxis))
+            if taxis:
+                flat = [full[name] for name in names]
+                outs = jax.vmap(
+                    lambda *f: body(dict(zip(names, f))))(*flat)
+            else:
+                outs = body(full)
+            new_tails = {}
+            for name in names:
+                s = specs[name]
+                fv, fm = full[name]
+                new_tails[name] = (
+                    jax.tree_util.tree_map(
+                        lambda x: jax.lax.slice_in_dim(
+                            x, s.core, s.core + s.left_halo, axis=taxis), fv),
+                    jax.lax.slice_in_dim(fm, s.core, s.core + s.left_halo,
+                                         axis=taxis))
+            return outs, new_tails
+
+        if not self.jit:
+            return step
+        return wrap_keyed_step(step, self.mesh if self._keyed else None,
+                               self.axis)
+
+    # -- halo-state plumbing -------------------------------------------------
+    def _fit_tail(self, tail, hl: int):
+        """Re-fit a carried tail to the current merged contract: keep the
+        trailing ``hl`` ticks, φ-padding on the left when history is short.
+        The rule is deterministic, so a live session whose contract changed
+        and a fresh session restored from the same checkpoint agree."""
+        tv, tm = tail
+        taxis = self._taxis
+        cur = tm.shape[taxis]
+        if cur == hl:
+            return tail
+        if cur > hl:
+            lo = cur - hl
+            return (jax.tree_util.tree_map(
+                lambda x: jax.lax.slice_in_dim(x, lo, cur, axis=taxis), tv),
+                jax.lax.slice_in_dim(tm, lo, cur, axis=taxis))
+        pad = hl - cur
+        cfg_m = [(0, 0)] * taxis + [(pad, 0)]
+
+        def one(x):
+            cfg = cfg_m + [(0, 0)] * (x.ndim - taxis - 1)
+            return jnp.pad(x, cfg)
+
+        return (jax.tree_util.tree_map(one, tv), one(tm))
+
+    def _blank_tail(self, hl: int, proto):
+        pv, pm = proto
+        taxis = self._taxis
+        lead = (self.n_keys, hl) if taxis else (hl,)
+
+        def one(x):
+            return jnp.zeros(lead + x.shape[taxis + 1:], x.dtype)
+
+        return (jax.tree_util.tree_map(one, pv),
+                jnp.zeros(lead, bool))
+
+    def _place(self, tree):
+        if self.mesh is None:
+            return tree
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+    # -- execution -----------------------------------------------------------
+    def step(self, chunks: Dict[str, SnapshotGrid]
+             ) -> Dict[str, SnapshotGrid]:
+        """Advance every attached query by one chunk of ``span`` time units.
+
+        Each chunk grid supplies exactly ``spec.core`` fresh ticks per source
+        (leading key axis first when keyed).  Returns one output grid per
+        query name."""
+        if self._dirty:
+            self._rebuild()
+        specs = self._plan.input_specs
+        taxis = self._taxis
+        chunk_in, tails = {}, {}
+        for name, spec in specs.items():
+            g = chunks[name]
+            want = ((self.n_keys, spec.core) if taxis else (spec.core,))
+            assert tuple(g.valid.shape) == want, (name, g.valid.shape, want)
+            chunk_in[name] = self._place((g.value, g.valid))
+            if name in self._tails:
+                tails[name] = self._fit_tail(self._tails[name],
+                                             spec.left_halo)
+            else:
+                tails[name] = self._place(
+                    self._blank_tail(spec.left_halo, chunk_in[name]))
+        outs, new_tails = self._step_fn(tails, chunk_in)
+        self._tails = new_tails
+        results = {}
+        for qname, (v, m) in outs.items():
+            results[qname] = SnapshotGrid(
+                value=v, valid=m, t0=self._t,
+                prec=self._queries[qname].prec)
+        self._t += self.span
+        return results
+
+    def run(self, inputs: Dict[str, SnapshotGrid], n_chunks: int
+            ) -> Dict[str, SnapshotGrid]:
+        """Slice ``n_chunks`` chunks from full streams, step through them and
+        stitch each query's outputs along time."""
+        if self._dirty:
+            self._rebuild()
+        specs = self._plan.input_specs
+        taxis = self._taxis
+        outs: Dict[str, list] = {}
+        for k in range(n_chunks):
+            chunk = {}
+            for name, spec in specs.items():
+                g = inputs[name]
+                lo = k * spec.core
+                chunk[name] = SnapshotGrid(
+                    value=jax.tree_util.tree_map(
+                        lambda x: jax.lax.slice_in_dim(
+                            x, lo, lo + spec.core, axis=taxis), g.value),
+                    valid=jax.lax.slice_in_dim(
+                        g.valid, lo, lo + spec.core, axis=taxis),
+                    t0=g.t0 + lo * spec.prec, prec=spec.prec)
+            for qname, out in self.step(chunk).items():
+                outs.setdefault(qname, []).append(out)
+        stitched = {}
+        for qname, parts in outs.items():
+            value = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=taxis),
+                *[p.value for p in parts])
+            valid = jnp.concatenate([p.valid for p in parts], axis=taxis)
+            stitched[qname] = SnapshotGrid(value=value, valid=valid,
+                                           t0=parts[0].t0,
+                                           prec=parts[0].prec)
+        return stitched
+
+    def reset(self) -> None:
+        """Drop carried state (and instrumentation counters); the next
+        chunk starts a fresh stream at t=0."""
+        self._tails = {}
+        self._t = 0
+        self.node_eval_counts.clear()
+
+    # -- checkpointing -------------------------------------------------------
+    def state(self) -> Dict:
+        """Checkpointable session state (host arrays): the merged halo dict
+        plus the stream clock.  Restoring into a session with a different
+        query set is well-defined — tails re-fit to the new contract."""
+        return {k: jax.tree_util.tree_map(np.asarray, v)
+                for k, v in self._tails.items()} | {"__t": self._t}
+
+    def restore(self, state: Dict) -> None:
+        state = dict(state)
+        self._t = state.pop("__t")
+        self._tails = {k: self._place(
+            jax.tree_util.tree_map(jnp.asarray, v))
+            for k, v in state.items()}

@@ -1,0 +1,110 @@
+"""Shared-plan cache: structural interning + union-DAG sharing analysis.
+
+The multi-query layer's CSE happens here, *across* queries: every node of
+every registered query is interned by its canonical structural fingerprint
+(:func:`repro.core.ir.fingerprint`), so two dashboards that each build
+``source.window(50).mean()`` from scratch end up holding the *same* IR node
+object.  The union DAG of N query roots then partitions into
+
+* **shared interior nodes** — reachable from ≥ 2 query roots; evaluated
+  exactly once per chunk and fanned out to every consumer, and
+* **per-query heads** — nodes private to one query (final thresholds,
+  projections); evaluated per query.
+
+The cache also memoizes per-``(fingerprint, span)`` planning artifacts so
+attaching a query whose sub-plans are already resident costs no planning
+work for the shared prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set
+
+from ..core import ir
+
+__all__ = ["SharedPlanCache", "SharingReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SharingReport:
+    """How much work the union DAG saves over independent execution."""
+
+    n_queries: int
+    union_nodes: int          # nodes evaluated once per chunk, total
+    independent_nodes: int    # sum of per-query DAG sizes (no sharing)
+    shared_nodes: int         # union nodes reachable from >= 2 queries
+    head_nodes: Dict[str, int]  # per query: nodes private to it
+
+    @property
+    def sharing_ratio(self) -> float:
+        """independent / union node evaluations (1.0 = nothing shared)."""
+        return self.independent_nodes / max(self.union_nodes, 1)
+
+
+class SharedPlanCache:
+    """Interns query IR by structural fingerprint (cross-query hash-consing).
+
+    ``intern`` rebuilds a query bottom-up, replacing every sub-DAG whose
+    fingerprint is already resident with the cached canonical node — after
+    which structural identity *is* object identity, and the union DAG of any
+    set of interned roots shares sub-plans maximally.  A cache instance may
+    serve many sessions; it only ever grows.
+    """
+
+    def __init__(self):
+        self._canon: Dict[str, ir.Node] = {}   # fingerprint -> canonical node
+
+    def __len__(self) -> int:
+        return len(self._canon)
+
+    def intern(self, root: ir.Node) -> ir.Node:
+        """Canonical (interned) equivalent of ``root``; subsumes per-query
+        CSE and deduplicates against every previously interned query."""
+        out: Dict[int, ir.Node] = {}
+        for n in ir.topo_order(root):
+            args = tuple(out[id(a)] for a in n.args)
+            m = n._replace_args(args) if n.args else n
+            fp = ir.fingerprint(m)
+            if fp not in self._canon:
+                self._canon[fp] = m
+            out[id(n)] = self._canon[fp]
+        return out[id(root)]
+
+    def node_for(self, fp: str) -> ir.Node:
+        return self._canon[fp]
+
+    # -- union-DAG analysis --------------------------------------------------
+    @staticmethod
+    def reachable(root: ir.Node) -> Set[int]:
+        return {id(n) for n in ir.topo_order(root)}
+
+    @classmethod
+    def partition(cls, roots: Dict[str, ir.Node]
+                  ) -> tuple[List[ir.Node], Dict[str, List[ir.Node]]]:
+        """Split the union DAG into (shared interior nodes, per-query heads).
+
+        ``roots`` maps query name -> interned root.  A node is *shared* when
+        it is reachable from at least two roots; every other node belongs to
+        exactly one query's head.  Returns nodes in union topo order.
+        """
+        reach = {q: cls.reachable(r) for q, r in roots.items()}
+        order = ir.topo_order_multi(list(roots.values()))
+        shared: List[ir.Node] = []
+        heads: Dict[str, List[ir.Node]] = {q: [] for q in roots}
+        for n in order:
+            owners = [q for q, ids in reach.items() if id(n) in ids]
+            if len(owners) >= 2:
+                shared.append(n)
+            else:
+                heads[owners[0]].append(n)
+        return shared, heads
+
+    @classmethod
+    def report(cls, roots: Dict[str, ir.Node]) -> SharingReport:
+        shared, heads = cls.partition(roots)
+        union = len(ir.topo_order_multi(list(roots.values())))
+        indep = sum(len(ir.topo_order(r)) for r in roots.values())
+        return SharingReport(
+            n_queries=len(roots), union_nodes=union,
+            independent_nodes=indep, shared_nodes=len(shared),
+            head_nodes={q: len(h) for q, h in heads.items()})

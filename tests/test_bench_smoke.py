@@ -1,0 +1,45 @@
+"""Benchmark smoke tests (slow CI job): drive registered benchmark sections
+through ``benchmarks/run.py`` at 1-chunk scale so they can't silently rot.
+
+Runs exactly the entry point a user would (``python -m benchmarks.run
+<section>``) with REPRO_BENCH_EVENTS shrunk to a few thousand events — a
+compile-and-one-chunk pass, not a measurement.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_section(section: str) -> str:
+    env = dict(os.environ,
+               REPRO_BENCH_EVENTS="4096",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH="src" + (
+                   os.pathsep + os.environ["PYTHONPATH"]
+                   if os.environ.get("PYTHONPATH") else ""))
+    out = subprocess.run([sys.executable, "-m", "benchmarks.run", section],
+                         cwd=REPO, env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, (section, out.stderr[-2000:])
+    assert f"## section {section}" in out.stdout, out.stdout
+    return out.stdout
+
+
+def test_fig_multiquery_sharing_smoke():
+    out = _run_section("figmq")
+    # all three N points reported, shared and independent
+    for n in (1, 4, 16):
+        assert f"figmq_shared_n{n}," in out
+        assert f"figmq_indep_n{n}," in out
+
+
+def test_fig8_keyed_scaling_smoke():
+    out = _run_section("fig8k")
+    assert "fig8k_trend_k16," in out
+    assert "fig8k_ysb_p4," in out

@@ -1,0 +1,405 @@
+"""Multi-query sharing tests (repro/multiquery).
+
+The contract under test: a MultiQuerySession serving N queries from one
+pass is *bit-identical* to running each query independently through the
+per-query executors (StreamRunner unkeyed, KeyedEngine keyed), across
+chunk boundaries; sharing is real (shared interior nodes evaluate once per
+chunk); and attach/detach mid-run preserves the merged halo state exactly.
+
+Test data is integer-valued (floor of uniforms): float32 window sums over
+small integers are exact, so bit-identity is insensitive to the association
+differences a wider union grid could otherwise introduce.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compile as qc, ir, plan as qplan
+from repro.core.frontend import TStream
+from repro.core.parallel import StreamRunner, check_single_hop_halo
+from repro.core.stream import SnapshotGrid
+from repro.data import apps as A
+from repro.engine import KeyedEngine, keyed_grid
+from repro.multiquery import MultiQuerySession, SharedPlanCache
+
+SPAN, N_CHUNKS = 64, 3     # 3 chunks => 2 chunk boundaries
+K = 8
+N_DASH = 16
+
+
+def _int_stream(shape, seed, p_valid=1.0):
+    rng = np.random.default_rng(seed)
+    vals = np.floor(rng.random(shape) * 100).astype(np.float32)
+    valid = (rng.random(shape) < p_valid) if p_valid < 1.0 \
+        else np.ones(shape, bool)
+    return vals, valid
+
+
+def _dash(keyed=False, n=N_DASH):
+    # window sizes < SPAN so halo carry across chunks is exercised, and
+    # windows span chunk boundaries
+    return A.dashboard_queries(n, short=12, long=40, keyed=keyed)
+
+
+def _assert_bit_identical(got: SnapshotGrid, want: SnapshotGrid, ctx):
+    assert np.array_equal(np.asarray(got.valid), np.asarray(want.valid)), ctx
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=str(ctx)),
+        got.value, want.value)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: shared == independent, unkeyed and keyed
+# ---------------------------------------------------------------------------
+
+def test_session_matches_independent_streamrunner_unkeyed():
+    queries = _dash(n=6)
+    vals, valid = _int_stream(SPAN * N_CHUNKS, seed=3, p_valid=0.9)
+    full = SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                        t0=0, prec=1)
+
+    sess = MultiQuerySession(SPAN, pallas=False)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    outs = sess.run({"in": full}, N_CHUNKS)
+
+    for name, q in queries.items():
+        runner = StreamRunner(qc.compile_query(q.node, out_len=SPAN,
+                                               pallas=False))
+        ref_v, ref_m = [], []
+        for k in range(N_CHUNKS):
+            chunk = {"in": SnapshotGrid(
+                value=full.value[k * SPAN:(k + 1) * SPAN],
+                valid=full.valid[k * SPAN:(k + 1) * SPAN],
+                t0=k * SPAN, prec=1)}
+            o = runner.step(chunk)
+            ref_v.append(np.asarray(o.value))
+            ref_m.append(np.asarray(o.valid))
+        want = SnapshotGrid(value=np.concatenate(ref_v),
+                            valid=np.concatenate(ref_m), t0=0, prec=1)
+        _assert_bit_identical(outs[name], want, name)
+
+
+def test_session_matches_independent_keyed_engine():
+    queries = _dash(keyed=True, n=6)
+    vals, valid = _int_stream((K, SPAN * N_CHUNKS), seed=4, p_valid=0.85)
+    grids = {"in": keyed_grid(vals, valid)}
+
+    sess = MultiQuerySession(SPAN, n_keys=K, pallas=False)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    outs = sess.run(grids, N_CHUNKS)
+
+    for name, q in queries.items():
+        exe = qc.compile_query(q.node, out_len=SPAN, pallas=False)
+        want = KeyedEngine(exe, n_keys=K).run(grids, N_CHUNKS)
+        _assert_bit_identical(outs[name], want, name)
+
+
+def test_session_equivalence_with_mixed_windows():
+    """Queries with *different* lookbacks share a source whose union grid is
+    wider than any single query's plan; outputs must still match the
+    per-query baselines exactly."""
+    def variant(w, thr):
+        s = TStream.source("in", prec=1)
+        return (s.window(w).mean().join(s, lambda m, x: x - m)
+                .where(lambda d, t=thr: d > t))
+
+    queries = {"w16": variant(16, 0.0), "w48": variant(48, 1.0),
+               "w24": variant(24, 2.0)}
+    vals, valid = _int_stream(SPAN * N_CHUNKS, seed=9, p_valid=0.9)
+    full = SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                        t0=0, prec=1)
+    sess = MultiQuerySession(SPAN, pallas=False)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    outs = sess.run({"in": full}, N_CHUNKS)
+    for name, q in queries.items():
+        runner = StreamRunner(qc.compile_query(q.node, out_len=SPAN,
+                                               pallas=False))
+        ref_v, ref_m = [], []
+        for k in range(N_CHUNKS):
+            o = runner.step({"in": SnapshotGrid(
+                value=full.value[k * SPAN:(k + 1) * SPAN],
+                valid=full.valid[k * SPAN:(k + 1) * SPAN],
+                t0=k * SPAN, prec=1)})
+            ref_v.append(np.asarray(o.value))
+            ref_m.append(np.asarray(o.valid))
+        want = SnapshotGrid(value=np.concatenate(ref_v),
+                            valid=np.concatenate(ref_m), t0=0, prec=1)
+        _assert_bit_identical(outs[name], want, name)
+
+
+# ---------------------------------------------------------------------------
+# sharing is real
+# ---------------------------------------------------------------------------
+
+def test_shared_aggregate_evaluates_once_per_chunk():
+    """16 dashboard queries all read the same window aggregates; the
+    instrumented evaluator must run each shared node once per chunk."""
+    queries = _dash(n=N_DASH)
+    vals, valid = _int_stream(SPAN * N_CHUNKS, seed=5)
+    full = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                               valid=jnp.asarray(valid), t0=0, prec=1)}
+    sess = MultiQuerySession(SPAN, pallas=False, instrument=True)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    sess.run(full, N_CHUNKS)
+
+    s = TStream.source("in", prec=1)
+    shared_fast = s.window(12).mean()
+    shared_slow = s.window(40).mean()
+    assert sess.eval_count(shared_fast) == N_CHUNKS
+    assert sess.eval_count(shared_slow) == N_CHUNKS
+    assert sess.eval_count(s) == N_CHUNKS  # the source read itself
+
+    rep = sess.sharing_report()
+    assert rep.n_queries == N_DASH
+    assert rep.shared_nodes >= 4           # source + fast/slow mean + stddev
+    assert rep.union_nodes < rep.independent_nodes
+    assert rep.sharing_ratio > 2.0
+
+
+def test_cache_interns_across_independently_built_queries():
+    cache = SharedPlanCache()
+    q1 = _dash(n=4)
+    q2 = _dash(n=4)  # rebuilt from scratch: distinct objects, same structure
+    r1 = {k: cache.intern(v.node) for k, v in q1.items()}
+    r2 = {k: cache.intern(v.node) for k, v in q2.items()}
+    for k in r1:
+        assert r1[k] is r2[k]  # hash-consing: structural identity == identity
+
+
+_SUBPROC_QUERY = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, {src!r})
+    from repro.core.frontend import TStream
+    from repro.core import ir
+    s = TStream.source("in", prec=1)
+    fast = s.window(12).mean()
+    slow = s.window(40).mean()
+    q = (fast.join(slow, lambda a, b: a - b)
+         .where(lambda d, t=0.25: d > t))
+    print(ir.fingerprint(q.node))
+""")
+
+
+def test_fingerprint_stable_across_processes():
+    """A plan cache keyed by fingerprint may outlive one interpreter: the
+    digest must not depend on the process — same query, different
+    processes, different hash seeds, same fingerprint (no id()/ordering
+    leaks).  Cheap: the subprocess imports only frontend+ir, no jax."""
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    code = _SUBPROC_QUERY.format(src=src)
+    digests = []
+    for seed in ("0", "4242"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        digests.append(out.stdout.strip())
+    # in-process reference (lambdas compiled from this file, not from -c)
+    s = TStream.source("in", prec=1)
+    fast = s.window(12).mean()
+    slow = s.window(40).mean()
+    q = (fast.join(slow, lambda a, b: a - b)
+         .where(lambda d, t=0.25: d > t))
+    digests.append(ir.fingerprint(q.node))
+    assert len(set(digests)) == 1, digests
+
+
+# ---------------------------------------------------------------------------
+# attach / detach mid-run
+# ---------------------------------------------------------------------------
+
+def _chunk(full, k, taxis=0):
+    sl = slice(k * SPAN, (k + 1) * SPAN)
+    if taxis:
+        return {"in": SnapshotGrid(value=full.value[:, sl],
+                                   valid=full.valid[:, sl],
+                                   t0=k * SPAN, prec=1)}
+    return {"in": SnapshotGrid(value=full.value[sl], valid=full.valid[sl],
+                               t0=k * SPAN, prec=1)}
+
+
+@pytest.mark.parametrize("keyed", [False, True])
+def test_attach_detach_matches_fresh_replay_from_checkpoint(keyed):
+    queries = _dash(keyed=keyed, n=6)
+    names = list(queries)
+    shape = (K, SPAN * (N_CHUNKS + 1)) if keyed else SPAN * (N_CHUNKS + 1)
+    vals, valid = _int_stream(shape, seed=6, p_valid=0.9)
+    full = (keyed_grid(vals, valid) if keyed else
+            SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                         t0=0, prec=1))
+    taxis = 1 if keyed else 0
+    kw = {"n_keys": K} if keyed else {}
+
+    live = MultiQuerySession(SPAN, pallas=False, **kw)
+    for n in names[:3]:
+        live.attach(n, queries[n])
+    live.step(_chunk(full, 0, taxis))
+    ckpt1 = live.state()
+
+    live.attach(names[3], queries[names[3]])      # attach mid-run
+    o1 = live.step(_chunk(full, 1, taxis))
+    ckpt2 = live.state()
+    live.detach(names[0])                         # detach mid-run
+    o2 = live.step(_chunk(full, 2, taxis))
+    o3 = live.step(_chunk(full, 3, taxis))
+
+    # fresh session with the post-attach query set, replayed from ckpt1
+    fresh = MultiQuerySession(SPAN, pallas=False, **kw)
+    for n in names[:4]:
+        fresh.attach(n, queries[n])
+    fresh.restore(ckpt1)
+    p1 = fresh.step(_chunk(full, 1, taxis))
+    for n in names[:4]:
+        _assert_bit_identical(o1[n], p1[n], ("attach", n))
+
+    # fresh session with the post-detach query set, replayed from ckpt2
+    fresh2 = MultiQuerySession(SPAN, pallas=False, **kw)
+    for n in names[1:4]:
+        fresh2.attach(n, queries[n])
+    fresh2.restore(ckpt2)
+    p2 = fresh2.step(_chunk(full, 2, taxis))
+    p3 = fresh2.step(_chunk(full, 3, taxis))
+    for n in names[1:4]:
+        _assert_bit_identical(o2[n], p2[n], ("detach", n))
+        _assert_bit_identical(o3[n], p3[n], ("detach2", n))
+    assert o3[names[1]].t0 == p3[names[1]].t0
+
+
+# ---------------------------------------------------------------------------
+# validation / guards
+# ---------------------------------------------------------------------------
+
+def test_session_rejects_conflicting_source_declarations():
+    sess = MultiQuerySession(SPAN, pallas=False)
+    sess.attach("a", TStream.source("in", prec=1).window(8).mean())
+    sess.attach("b", TStream.source("in", prec=2).window(8).mean())
+    with pytest.raises(ValueError, match="conflicting"):
+        sess.step({"in": SnapshotGrid(value=jnp.zeros(SPAN),
+                                      valid=jnp.ones(SPAN, bool),
+                                      t0=0, prec=1)})
+
+
+def test_session_rejects_keyed_unkeyed_mix():
+    sess = MultiQuerySession(SPAN, n_keys=K, pallas=False)
+    sess.attach("a", TStream.source("s1", keyed=True).window(8).mean())
+    with pytest.raises(ValueError, match="keyed"):
+        sess.attach("b", TStream.source("s2", keyed=False).window(8).mean())
+
+
+def test_session_rejects_lookahead():
+    sess = MultiQuerySession(SPAN, pallas=False)
+    with pytest.raises(NotImplementedError, match="lookahead"):
+        sess.attach("a", TStream.source("in").shift(-4))
+
+
+def test_detach_clears_keyedness_and_validates_name():
+    sess = MultiQuerySession(SPAN, n_keys=K, pallas=False)
+    sess.attach("a", TStream.source("s1", keyed=True).window(8).mean())
+    with pytest.raises(ValueError, match="no query"):
+        sess.detach("nope")
+    sess.detach("a")
+    # emptied session accepts the other keyedness
+    sess.attach("b", TStream.source("s2", keyed=False).window(8).mean())
+
+
+def test_fingerprint_distinguishes_captured_globals():
+    """Two bytecode-identical lambdas reading different module-level values
+    by the same name must not collide (they compute different things)."""
+    ns1 = {"THR": 1.0}
+    ns2 = {"THR": 99.0}
+    f1 = eval("lambda v: v > THR", ns1)
+    f2 = eval("lambda v: v > THR", ns2)
+    f3 = eval("lambda v: v > THR", dict(ns1))
+    s = TStream.source("in", prec=1)
+    a = ir.fingerprint(s.where(f1).node)
+    b = ir.fingerprint(s.where(f2).node)
+    c = ir.fingerprint(s.where(f3).node)
+    assert a != b
+    assert a == c
+
+
+class _Thresh:
+    def __init__(self, t):
+        self.t = t
+
+    def pred(self, v):
+        return v > self.t
+
+
+def test_fingerprint_distinguishes_bound_method_receivers():
+    """Bound methods share bytecode but not behaviour: the receiver's state
+    is part of the structural identity."""
+    s = TStream.source("in", prec=1)
+    a = ir.fingerprint(s.where(_Thresh(1.0).pred).node)
+    b = ir.fingerprint(s.where(_Thresh(5.0).pred).node)
+    c = ir.fingerprint(s.where(_Thresh(1.0).pred).node)
+    assert a != b
+    assert a == c
+
+
+def test_fingerprint_ignores_attribute_name_collisions_with_globals():
+    """co_names holds attribute names too; ``d["x"]``-style or method-call
+    lambdas must not resolve those names against the defining module's
+    namespace (which may hold unrelated, even unfingerprintable, values)."""
+    ns1 = {"mean": open(os.devnull)}   # unrelated, unfingerprintable global
+    ns2 = {}
+    try:
+        f1 = eval("lambda v: v.mean()", ns1)
+        f2 = eval("lambda v: v.mean()", ns2)
+        s = TStream.source("in", prec=1)
+        assert (ir.fingerprint(s.select(f1).node)
+                == ir.fingerprint(s.select(f2).node))
+    finally:
+        ns1["mean"].close()
+
+
+def test_eval_counts_cleared_on_reset():
+    queries = _dash(n=4)
+    vals, valid = _int_stream(SPAN * 2, seed=8)
+    full = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                               valid=jnp.asarray(valid), t0=0, prec=1)}
+    sess = MultiQuerySession(SPAN, pallas=False, instrument=True)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    sess.run(full, 2)
+    sess.reset()
+    sess.run(full, 2)  # warmup-then-measure pattern must not double-count
+    s = TStream.source("in", prec=1)
+    assert sess.eval_count(s.window(12).mean()) == 2
+
+
+def test_union_plan_merges_halo_contracts():
+    a = TStream.source("in", prec=1).window(16).mean()
+    b = TStream.source("in", prec=1).window(48).mean()
+    up = qplan.plan_union([a.node, b.node], span=SPAN)
+    assert up.input_specs["in"].left_halo == 48    # union of 16 and 48
+    pa = qplan.plan_query(a.node, out_len=SPAN)
+    assert pa.input_specs["in"].left_halo == 16
+
+
+def test_halo_overflow_guard_reports_min_partition_length():
+    """Satellite: the single-hop halo guard must name the minimum viable
+    out_len for the offending input, not just reject."""
+    q = TStream.source("in", prec=1).window(100).mean()
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+    with pytest.raises(NotImplementedError) as ei:
+        check_single_hop_halo(exe.input_specs, exe.out_prec, n=4)
+    msg = str(ei.value)
+    assert "input in" in msg
+    assert "out_len >= 100" in msg            # halo 100 ticks, prec 1
+    assert "100 time units" in msg
+    assert "multi-hop" in msg
+    # n=1 (no sharding) never raises
+    check_single_hop_halo(exe.input_specs, exe.out_prec, n=1)

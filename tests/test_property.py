@@ -14,7 +14,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import compile as qc, fusion
+from repro.core import compile as qc, fusion, ir
 from repro.core.frontend import TStream
 from repro.core.parallel import partition_run
 from repro.core.stream import SnapshotGrid
@@ -122,6 +122,91 @@ def test_sliding_sum_matches_convolve(data, w):
     assert np.array_equal(m, cnt > 0)
     np.testing.assert_allclose(np.asarray(out.value)[m], want[m],
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# structural fingerprints (multi-query sharing)
+# ---------------------------------------------------------------------------
+#
+# Queries are generated from explicit *recipes* (step lists) so that
+# structural equality is decidable by construction: by design every step
+# kind/parameter combination maps to a distinct IR structure, so two DAGs
+# built from recipes are structurally equal iff the recipes are equal.
+# Parameters are compared by repr (so -0.0 vs 0.0 stays consistent with the
+# fingerprint encoding).
+
+def _step_select(q, s, c):
+    return q.select(lambda v, c=c: v * c + 1.0)
+
+
+def _step_where(q, s, t):
+    return q.where(lambda v, t=t: v > t)
+
+
+def _step_shift(q, s, d):
+    return q.shift(d)
+
+
+def _step_wsum(q, s, w):
+    return q.window(w).sum()
+
+
+def _step_wmean(q, s, w):
+    return q.window(w).mean()
+
+
+def _step_wmax(q, s, w):
+    return q.window(w).max()
+
+
+def _step_join(q, s, d):
+    return q.join(s.shift(d), lambda a, b: a - b)
+
+
+_STEPS = {"select": _step_select, "where": _step_where, "shift": _step_shift,
+          "wsum": _step_wsum, "wmean": _step_wmean, "wmax": _step_wmax,
+          "join": _step_join}
+
+
+@st.composite
+def query_recipe(draw):
+    depth = draw(st.integers(1, 4))
+    steps = []
+    for _ in range(depth):
+        kind = draw(st.sampled_from(sorted(_STEPS)))
+        if kind in ("select", "where"):
+            p = repr(draw(st.floats(-2, 2, allow_nan=False)))
+        elif kind in ("wsum", "wmean", "wmax"):
+            p = repr(draw(st.integers(2, 24)))
+        else:
+            p = repr(draw(st.integers(0, 7)))
+        steps.append((kind, p))
+    return tuple(steps)
+
+
+def _build(recipe):
+    s = TStream.source("in", prec=1)
+    q = s
+    for kind, p in recipe:
+        q = _STEPS[kind](q, s, eval(p))
+    return q.node
+
+
+@settings(max_examples=60, deadline=None)
+@given(r1=query_recipe(), r2=query_recipe())
+def test_fingerprint_equality_iff_structural_equality(r1, r2):
+    """fingerprint(a) == fingerprint(b)  ⇔  a, b structurally equal."""
+    a, b = _build(r1), _build(r2)
+    assert (ir.fingerprint(a) == ir.fingerprint(b)) == (r1 == r2)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(r=query_recipe())
+def test_fingerprint_deterministic_across_rebuilds(r):
+    """Rebuilding the same recipe (fresh lambdas, fresh node ids, fresh
+    auto-generated names) must reproduce the fingerprint exactly — no id()
+    or construction-order leaks."""
+    assert ir.fingerprint(_build(r)) == ir.fingerprint(_build(r))
 
 
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
