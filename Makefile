@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow bench
+.PHONY: test test-fast test-slow test-multidev bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -12,8 +12,14 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -q -m "not slow"
 
+# --durations=20 so test/benchmark rot shows up in the CI log over time
 test-slow:
-	$(PYTHON) -m pytest -q -m slow
+	$(PYTHON) -m pytest -q -m slow --durations=20
+
+# just the multi-device subprocess suite (halo exchange, mesh dry-run,
+# elastic checkpoint) — the fastest loop when hacking on core/halo.py
+test-multidev:
+	$(PYTHON) -m pytest -q tests/test_parallel_multidev.py --durations=20
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,94 @@
+"""Halo-depth × shard-count sweep: throughput where the seed could only raise.
+
+The seed's single-hop halo exchange rejected any time-sharded config whose
+lookback halo exceeded the per-shard core span — exactly the deep-window /
+many-shard corner where ordered-stream scaling is decided ("Scaling Ordered
+Stream Processing on Shared-Memory Multicores").  The multi-hop chain
+(core/halo.py) serves those configs; this benchmark sweeps window depth
+against shard count and reports events/sec per cell, with the hop count of
+the left halo in the derived column — the rows with ``hops>=2`` are the
+cells that previously raised ``NotImplementedError``.
+
+Windows are sized as fractions of the global timeline (N/16 … N/2) so the
+deep windows exceed the per-shard span at the higher shard counts whatever
+``REPRO_BENCH_EVENTS`` is.  Needs multiple devices to be interesting:
+``python -m benchmarks.run fighalo`` forces 8 host-platform devices (see
+run.py); standalone, set ``REPRO_BENCH_DEVICES=8``.  On a 1-device host the
+shard counts > 1 are skipped and reported as such — no silent truncation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.parallel import (partition_run, shard_map_run,
+                                 check_single_hop_halo)
+from repro.core.stream import SnapshotGrid
+from repro.launch.mesh import make_local_mesh
+
+from .common import row
+
+REPEATS = 3
+SHARDS = (1, 2, 4, 8)
+
+
+def _pow2_ticks(n_events: int) -> int:
+    n = max(1024, min(n_events, 1 << 20))
+    return 1 << (n.bit_length() - 1)
+
+
+def run(n_events: int = 1_000_000):
+    n_dev = len(jax.devices())
+    N = _pow2_ticks(n_events)
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100, N).astype(np.float32)
+    valid = rng.random(N) > 0.1
+    import jax.numpy as jnp
+    grids = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                                valid=jnp.asarray(valid), t0=0, prec=1)}
+
+    shards = [s for s in SHARDS if s <= n_dev]
+    skipped = [s for s in SHARDS if s > n_dev]
+    if skipped:
+        print(f"# fighalo: only {n_dev} device(s) — shard counts {skipped} "
+              "skipped (set REPRO_BENCH_DEVICES=8)")
+
+    for W in (N // 16, N // 8, N // 4, N // 2):
+        q = TStream.source("in", prec=1).window(W).sum()
+        for s in shards:
+            out_len = N // s
+            exe = qc.compile_query(q.node, out_len=out_len, pallas=False)
+            rep = check_single_hop_halo(exe.input_specs, exe.out_prec, s)
+            hops = max(r.max_hops for r in rep.values())
+            if s == 1:
+                fn = lambda: partition_run(exe, grids, 0, 1)
+            else:
+                # pre-place the timeline across the mesh so the timed
+                # region measures exchange+compute, not host resharding
+                # (common.py methodology: data pre-loaded in memory);
+                # shard_map_run's internal device_put is then a no-op
+                mesh = make_local_mesh(n_data=s)
+                sh = NamedSharding(mesh, P("data"))
+                gs = {"in": SnapshotGrid(
+                    value=jax.device_put(grids["in"].value, sh),
+                    valid=jax.device_put(grids["in"].valid, sh),
+                    t0=0, prec=1)}
+                fn = lambda: shard_map_run(exe, gs, mesh, axis="data")
+            jax.block_until_ready(fn().valid)  # warmup (compile)
+            best = []
+            for _ in range(REPEATS):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn().valid)
+                best.append(time.perf_counter() - t0)
+            dt = min(best)
+            row(f"fighalo_w{W}_s{s}", dt * 1e6,
+                f"{N / dt / 1e6:.1f}Mev/s,hops={hops}")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,9 +14,20 @@ def main() -> None:
     n = int(os.environ.get("REPRO_BENCH_EVENTS", 2_000_000))
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
+    # the halo-depth sweep shards time across devices; force a multi-device
+    # host platform BEFORE jax is imported (flag is read at backend init).
+    # Only when that section alone runs — the rest keep the default config.
+    ndev = os.environ.get("REPRO_BENCH_DEVICES")
+    if ndev is None and only == "fighalo":
+        ndev = "8"
+    if ndev and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={int(ndev)}").strip()
+
     from . import (fig7_throughput, fig8_keyed_scaling, fig8_ysb_scaling,
-                   fig9_latency, fig10_fusion, fig_multiquery_sharing,
-                   roofline_table)
+                   fig9_latency, fig10_fusion, fig_halo_depth,
+                   fig_multiquery_sharing, roofline_table)
 
     sections = {
         "fig7": lambda: fig7_throughput.run(n),
@@ -25,6 +36,7 @@ def main() -> None:
         "fig9": lambda: fig9_latency.run(min(n, 1_000_000)),
         "fig10": lambda: fig10_fusion.run(n),
         "figmq": lambda: fig_multiquery_sharing.run(min(n, 1_000_000)),
+        "fighalo": lambda: fig_halo_depth.run(min(n, 1_000_000)),
         "roofline": roofline_table.run,
     }
     for name, fn in sections.items():

@@ -8,7 +8,11 @@ total (lookback, lookahead) in time units relative to the output domain.
 Reading the bounds at the :class:`ir.Input` leaves yields the contract that
 lets the runtime partition an unbounded stream into independent chunks with
 halo overlap (paper Fig. 6) — the key to synchronization-free data
-parallelism over *arbitrary* queries.  Reading them at interior nodes gives
+parallelism over *arbitrary* queries.  The contract places no ceiling on
+depth: when the timeline is sharded across devices, halos deeper than the
+per-shard span (including the merged multi-query contracts of
+:func:`node_bounds_multi`) are served by the multi-hop exchange schedule
+planned in plan.py/halo.py.  Reading them at interior nodes gives
 compile.py the exact grid extent each intermediate temporal object needs.
 
 Per-edge rules (consumer needs bounds ``B``; what does the argument need?):

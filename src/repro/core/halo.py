@@ -1,0 +1,174 @@
+"""Multi-hop halo exchange for time-sharded SPMD execution (paper §6.2).
+
+When the timeline is sharded across devices, every shard holds only its
+*core* ticks of each input; the lookback/lookahead halo (paper Fig. 6
+shaded regions) lives on neighbouring shards.  A single ``ppermute`` can
+only move data one neighbour over, so the per-shard span used to bound the
+halo depth (``halo <= core`` or the config was rejected).  This module
+removes that cliff: the halo is assembled by a *chain* of ``ppermute``
+pulls — hop ``k`` forwards the slab that originated ``k`` neighbours away,
+so after ``K = ceil(halo / core)`` hops every shard has its full halo,
+whatever the window depth.
+
+The chain is a *static planning artifact*: :func:`schedule` turns one
+per-input halo contract (``plan.InputSpec``) into a :class:`HaloSchedule`
+— per side, the tick count each hop contributes.  Hops ``1..K-1`` forward
+the full core slab; the final hop is trimmed to the remainder before it is
+sent, so no hop ever moves more ticks than the halo still needs.
+
+φ at the edges: ``jax.lax.ppermute`` leaves non-participating receivers
+with zeros, so edge shards (no neighbour ``k`` hops over) naturally receive
+zero values and a ``False`` validity mask — exactly the φ encoding the rest
+of the stack uses for "before the stream start" / "past the stream end".
+Hops whose source would lie beyond the mesh on *every* shard (``k > n-1``)
+are not sent at all; the slab is filled with φ locally.
+
+Exchange invariant (what :func:`exchange` returns on every shard)::
+
+    [ left_halo ticks | core ticks | right_halo ticks ]
+
+with the left halo ordered oldest-first — identical, tick for tick, to the
+window :func:`repro.core.parallel.partition_run` slices out of the global
+arrays for the same partition, which is why the sharded and host-loop
+executions agree bit-for-bit on identical partitionings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HaloSchedule", "HopReport", "schedule", "hop_count", "exchange"]
+
+
+def hop_count(halo: int, core: int) -> int:
+    """Number of ppermute hops needed to pull ``halo`` ticks when each
+    shard holds ``core`` ticks: ``ceil(halo / core)`` (0 for no halo)."""
+    if halo <= 0:
+        return 0
+    if core <= 0:
+        raise ValueError(f"per-shard core must be positive, got {core}")
+    return -(-halo // core)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSchedule:
+    """Static per-input hop schedule (a planning artifact, like the halo
+    contract it derives from).
+
+    ``left_hops`` / ``right_hops`` hold the tick count contributed by hop
+    ``k`` (1-indexed: hop ``k`` delivers the slab that originated ``k``
+    neighbours away).  Every hop but the last contributes the full core
+    slab; the last contributes the remainder, so ``sum(left_hops) ==
+    left_halo`` and likewise on the right.
+    """
+
+    core: int
+    left_hops: Tuple[int, ...]
+    right_hops: Tuple[int, ...]
+
+    @property
+    def left_halo(self) -> int:
+        return sum(self.left_hops)
+
+    @property
+    def right_halo(self) -> int:
+        return sum(self.right_hops)
+
+    @property
+    def max_hops(self) -> int:
+        return max(len(self.left_hops), len(self.right_hops))
+
+
+@dataclasses.dataclass(frozen=True)
+class HopReport:
+    """Hop geometry of one input for a given shard count (informational;
+    see :func:`repro.core.parallel.check_single_hop_halo`)."""
+
+    left_hops: int
+    right_hops: int
+    min_single_hop_out_len: int  # smallest per-shard out_len with 1 hop max
+
+    @property
+    def max_hops(self) -> int:
+        return max(self.left_hops, self.right_hops)
+
+
+def _hops(halo: int, core: int) -> Tuple[int, ...]:
+    k = hop_count(halo, core)
+    if k == 0:
+        return ()
+    return (core,) * (k - 1) + (halo - (k - 1) * core,)
+
+
+@functools.lru_cache(maxsize=None)
+def schedule(left_halo: int, right_halo: int, core: int) -> HaloSchedule:
+    """The hop schedule serving a ``(left_halo, right_halo, core)`` halo
+    contract.  Cached — schedules are tiny and shared across executors."""
+    return HaloSchedule(core=core, left_hops=_hops(left_halo, core),
+                        right_hops=_hops(right_halo, core))
+
+
+def _phi(value, valid, take: int):
+    """A φ slab of ``take`` ticks (zero values, all-False validity)."""
+    zv = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((take,) + x.shape[1:], x.dtype), value)
+    return zv, jnp.zeros((take,), bool)
+
+
+def _pull(hops: Tuple[int, ...], value, valid, axis: str, n: int,
+          left: bool):
+    """Chained ppermute pulls for one side.
+
+    Returns ``[(v, m), ...]`` with entry ``k-1`` holding the contribution
+    of hop ``k`` (the slab that originated ``k`` neighbours away on the
+    ``left``/right).  The buffer is re-permuted each hop, so hop ``k``
+    costs one collective of at most ``core`` ticks; the final hop's buffer
+    is trimmed to the remainder *before* it is sent.  Hops with no possible
+    source shard (``k > n-1``) are filled with φ locally, no collective.
+    """
+    if not hops:
+        return []
+    perm = ([(i, i + 1) for i in range(n - 1)] if left
+            else [(i + 1, i) for i in range(n - 1)])
+    live = min(len(hops), n - 1)
+    parts = []
+    bv, bm = value, valid
+    for k, take in enumerate(hops, start=1):
+        if k > live:
+            parts.append(_phi(value, valid, take))
+            continue
+        if k == len(hops) and take != bm.shape[0]:
+            cut = (lambda x: x[-take:]) if left else (lambda x: x[:take])
+            bv = jax.tree_util.tree_map(cut, bv)
+            bm = cut(bm)
+        bv = jax.tree_util.tree_map(
+            lambda x: jax.lax.ppermute(x, axis, perm), bv)
+        bm = jax.lax.ppermute(bm, axis, perm)
+        parts.append((bv, bm))
+    return parts
+
+
+def exchange(sched: HaloSchedule, value, valid, axis: str, n: int):
+    """Assemble one input's full ``left_halo + core + right_halo`` grid on
+    every shard from core-only slabs (call inside ``shard_map``).
+
+    ``value``/``valid`` are the local core slab (time axis 0); ``axis`` is
+    the mesh axis name the timeline is sharded over, ``n`` its size.
+    Returns the ``(value, valid)`` pair the compiled partition body expects
+    — bit-identical to the host-loop window of the same partition.
+    """
+    lparts = _pull(sched.left_hops, value, valid, axis, n, left=True)
+    rparts = _pull(sched.right_hops, value, valid, axis, n, left=False)
+    # hop k is k neighbours away: the left halo reads oldest-first, so the
+    # furthest hop comes first; the right halo reads nearest-first.
+    segs = list(reversed(lparts)) + [(value, valid)] + rparts
+    if len(segs) == 1:
+        return value, valid
+    fv = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *[s[0] for s in segs])
+    fm = jnp.concatenate([s[1] for s in segs], axis=0)
+    return fv, fm

@@ -9,11 +9,13 @@ into three execution strategies:
   (partition size == batch size knob of Fig. 9).
 
 * :func:`shard_map_run`    — SPMD execution over a mesh axis: the timeline is
-  sharded across devices, and each device fetches its lookback/lookahead halo
-  from its neighbours with ``jax.lax.ppermute`` (a `collective-permute` on
-  TPU ICI — the cheapest collective there is; one hop, no reduction tree).
-  After the halo exchange the computation is embarrassingly parallel —
-  exactly the paper's "synchronization-free worker" property, recast as SPMD.
+  sharded across devices, and each device assembles its lookback/lookahead
+  halo through the multi-hop ``ppermute`` chain planned in halo.py
+  (`collective-permute` on TPU ICI — the cheapest collective there is; hop
+  ``k`` forwards the slab ``k`` neighbours over, ``ceil(halo/core)`` hops
+  per side, so windows deeper than the per-shard span shard fine).  After
+  the exchange the computation is embarrassingly parallel — exactly the
+  paper's "synchronization-free worker" property, recast as SPMD.
 
 * :class:`StreamRunner`    — continuous operation: consume unbounded streams
   chunk by chunk, carrying the halo *tail* of each input between calls as
@@ -23,6 +25,7 @@ into three execution strategies:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict
 
@@ -32,10 +35,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compile as qcompile
+from . import halo as halo_mod
 from .stream import SnapshotGrid
 
 __all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
-           "slice_grid", "check_single_hop_halo"]
+           "slice_grid", "check_single_hop_halo", "place_core_inputs"]
+
+# per-CompiledQuery bound on cached (mesh, axis) SPMD steps — each retains
+# a compiled executable (see shard_map_run)
+_SHARD_STEP_CACHE_MAX = 8
 
 
 def _slice_pad(value, valid, lo: int, hi: int):
@@ -61,7 +69,10 @@ def _slice_pad(value, valid, lo: int, hi: int):
 def slice_grid(grid: SnapshotGrid, t0: int, t_end: int) -> SnapshotGrid:
     """Grid restricted to (t0, t_end]; out-of-range ticks are φ."""
     p = grid.prec
-    assert (t0 - grid.t0) % p == 0 and (t_end - t0) % p == 0
+    if (t0 - grid.t0) % p or (t_end - t0) % p:
+        raise ValueError(
+            f"slice ({t0}, {t_end}] misaligned with grid "
+            f"(t0={grid.t0}, prec={p})")
     lo = (t0 - grid.t0) // p
     hi = (t_end - grid.t0) // p
     v, m = _slice_pad(grid.value, grid.valid, lo, hi)
@@ -94,34 +105,119 @@ def partition_run(exe: qcompile.CompiledQuery,
 
 
 def _grid_window(g: SnapshotGrid, t0: int, length: int):
+    # same alignment guard as slice_grid: a misaligned partition origin
+    # must raise, not floor-divide into a time-shifted window
+    if (t0 - g.t0) % g.prec:
+        raise ValueError(
+            f"partition window start {t0} misaligned with input grid "
+            f"(t0={g.t0}, prec={g.prec})")
     lo = (t0 - g.t0) // g.prec
     return _slice_pad(g.value, g.valid, lo, lo + length)
 
 
 def check_single_hop_halo(specs: Dict[str, "qcompile.InputSpec"],
-                          out_prec: int, n: int) -> None:
-    """Validate the single-hop ppermute contract for ``n`` time shards.
+                          out_prec: int, n: int
+                          ) -> Dict[str, "halo_mod.HopReport"]:
+    """Report the halo/hop geometry of ``n`` time shards, per input.
 
-    Each shard fetches its halo from its *immediate* neighbours only, so a
-    halo larger than the per-shard core span would need multi-hop exchange
-    (ROADMAP item) and currently returns wrong leading ticks.  Rather than
-    just rejecting, report the minimum viable partition length for the
-    offending input so callers know how to re-compile.
+    Historically this *rejected* any config whose halo exceeded the
+    per-shard core span (the single-hop ppermute could not serve it and
+    returned wrong leading ticks).  The multi-hop chain in halo.py now
+    serves any halo, so nothing is rejected; the function instead reports,
+    per input, the hops each side needs and the minimum per-shard
+    ``out_len`` at which the exchange collapses to a single hop — the old
+    rejection threshold, still useful to trade shard count against
+    exchange depth.
     """
-    if n <= 1:
-        return
+    report = {}
     for name, s in specs.items():
         halo = max(s.left_halo, s.right_halo)
-        if halo > s.core:
-            # need core = out_len*out_prec // s.prec >= halo ticks
-            min_out_len = -(-halo * s.prec // out_prec)
-            raise NotImplementedError(
-                f"input {name}: halo ({s.left_halo}/{s.right_halo} ticks) "
-                f"exceeds the per-shard span ({s.core} ticks); the "
-                "single-hop ppermute exchange would return wrong leading "
-                f"ticks — recompile with out_len >= {min_out_len} output "
-                f"ticks per shard ({min_out_len * out_prec} time units), "
-                "or use fewer shards (multi-hop exchange is a ROADMAP item)")
+        # single-hop needs core = out_len*out_prec // s.prec >= halo ticks
+        min_out_len = -(-halo * s.prec // out_prec) if halo else 0
+        report[name] = halo_mod.HopReport(
+            left_hops=halo_mod.hop_count(s.left_halo, s.core) if n > 1 else 0,
+            right_hops=(halo_mod.hop_count(s.right_halo, s.core)
+                        if n > 1 else 0),
+            min_single_hop_out_len=min_out_len)
+    return report
+
+
+def place_core_inputs(specs: Dict[str, "qcompile.InputSpec"],
+                      inputs: Dict[str, SnapshotGrid],
+                      mesh: Mesh, axis: str):
+    """Validate and device-place core-only input grids for time-sharded
+    execution: every input supplies exactly its core region (``n · core``
+    ticks, no halo) at a common origin, sharded along ``axis``.
+
+    Returns ``(placed, out_t0)``: the ``(value, valid)`` pairs in
+    sorted-name order and the absolute output start.  Shared by
+    :func:`shard_map_run` and :func:`repro.multiquery.shard_union_run` so
+    the two SPMD entry points cannot drift on the input contract.
+    """
+    n = mesh.shape[axis]
+    names = sorted(specs)
+    t0s = {name: inputs[name].t0 for name in names}
+    if len(set(t0s.values())) > 1:
+        raise ValueError(
+            f"inputs disagree on the core-region origin: {t0s} — every "
+            "input supplies the same output-span window (P0, P0 + span]")
+    out_t0 = t0s[names[0]] if names else 0
+
+    sh = NamedSharding(mesh, P(axis))
+    placed = []
+    for name in names:
+        g, s = inputs[name], specs[name]
+        if g.prec != s.prec:
+            raise ValueError(
+                f"input {name}: grid precision {g.prec} != planned "
+                f"precision {s.prec}")
+        if g.valid.shape[0] != s.core * n:
+            raise ValueError(
+                f"input {name}: expected core length {s.core * n}, "
+                f"got {g.valid.shape[0]} — supply exactly the "
+                "output-span region")
+        placed.append((jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sh), g.value),
+            jax.device_put(g.valid, sh)))
+    return placed, out_t0
+
+
+def stage_exchange_step(specs: Dict[str, "qcompile.InputSpec"], body,
+                        mesh: Mesh, axis: str, out_specs):
+    """Build the jitted SPMD step shared by both time-sharded entry points:
+    assemble every input's halo via its planned hop chain
+    (``InputSpec.halo_schedule`` → :func:`repro.core.halo.exchange`), then
+    run ``body`` on the full ``{name: (value, valid)}`` grids.  Keeping the
+    construction in one place means :func:`shard_map_run` and
+    :func:`repro.multiquery.shard_union_run` cannot drift on it."""
+    n = mesh.shape[axis]
+    names = sorted(specs)
+    scheds = {name: specs[name].halo_schedule() for name in names}
+
+    def local_body(*flat):
+        full = {name: halo_mod.exchange(scheds[name], v, m, axis, n)
+                for name, (v, m) in zip(names, flat)}
+        return body(full)
+
+    from jax.experimental.shard_map import shard_map
+    return jax.jit(shard_map(
+        local_body, mesh=mesh, in_specs=tuple(P(axis) for _ in names),
+        out_specs=out_specs, check_rep=False))
+
+
+def lru_step_get(cache: "collections.OrderedDict", key, build,
+                 max_entries: int):
+    """Bounded staged-step cache: move-to-front on hit, build + evict the
+    least-recently-used entries past ``max_entries`` on miss.  Entries
+    retain compiled executables, so long-lived processes that re-shard
+    across changing meshes / query sets must stay bounded."""
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    cache[key] = hit = build()
+    while len(cache) > max_entries:
+        cache.popitem(last=False)
+    return hit
 
 
 def shard_map_run(exe: qcompile.CompiledQuery,
@@ -129,71 +225,31 @@ def shard_map_run(exe: qcompile.CompiledQuery,
                   mesh: Mesh, axis: str = "data") -> SnapshotGrid:
     """SPMD partitioned execution: one partition per device along ``axis``.
 
-    Each input's *core* region (no halo) is sharded along time; halos move
-    between neighbours via ppermute.  ``exe`` must be compiled with
-    ``out_len == global_out_len // mesh.shape[axis]``.
+    Each input supplies exactly its *core* region (no halo, one output
+    span's worth of ticks per shard), sharded along time; every shard then
+    assembles its full halo through the statically planned ppermute hop
+    chain (``InputSpec.halo_schedule`` → :func:`repro.core.halo.exchange`)
+    and runs the compiled partition body with no further communication.
+    ``exe`` must be compiled with ``out_len == global_out_len //
+    mesh.shape[axis]``.  The output grid starts where the inputs' core
+    region starts (``inputs[*].t0``), so sharded outputs stitch against
+    :func:`partition_run` at any origin.
     """
-    n = mesh.shape[axis]
-
     specs = exe.input_specs
-    core_len = {name: s.core * n for name, s in specs.items()}
-    check_single_hop_halo(specs, exe.out_prec, n)
+    placed, out_t0 = place_core_inputs(specs, inputs, mesh, axis)
 
-    def local_body(*flat):
-        local = dict(zip(sorted(specs), flat))
-        full = {}
-        for name in sorted(specs):
-            v, m = local[name]
-            hl, hr = specs[name].left_halo, specs[name].right_halo
-            right_perm = [(i, i + 1) for i in range(n - 1)]
-            left_perm = [(i + 1, i) for i in range(n - 1)]
-
-            if hl:
-                lv = jax.tree_util.tree_map(
-                    lambda x: _xch_pad(x, hl, right_perm, True, axis, n), v)
-                lm = _xch_pad(m, hl, right_perm, True, axis, n)
-            else:
-                lv = jax.tree_util.tree_map(
-                    lambda x: x[:0], v)
-                lm = m[:0]
-            if hr:
-                rv = jax.tree_util.tree_map(
-                    lambda x: _xch_pad(x, hr, left_perm, False, axis, n), v)
-                rm = _xch_pad(m, hr, left_perm, False, axis, n)
-            else:
-                rv = jax.tree_util.tree_map(lambda x: x[:0], v)
-                rm = m[:0]
-            fv = jax.tree_util.tree_map(
-                lambda a, b, c: jnp.concatenate([a, b, c], axis=0), lv, v, rv)
-            fm = jnp.concatenate([lm, m, rm], axis=0)
-            full[name] = (fv, fm)
-        return exe.trace_fn(full)
-
-    from jax.experimental.shard_map import shard_map
-    in_specs = tuple(P(axis) for _ in sorted(specs))
-    flat_in = tuple(
-        (inputs[name].value, inputs[name].valid) for name in sorted(specs))
-    sharded = shard_map(local_body, mesh=mesh,
-                        in_specs=in_specs,
-                        out_specs=(P(axis), P(axis)),
-                        check_rep=False)
-    # shard the core inputs along time
-    placed = []
-    for name, (v, m) in zip(sorted(specs), flat_in):
-        assert m.shape[0] == core_len[name], (
-            f"input {name}: expected core length {core_len[name]}, "
-            f"got {m.shape[0]} — supply exactly the output-span region")
-        sh = NamedSharding(mesh, P(axis))
-        placed.append((jax.tree_util.tree_map(
-            lambda x: jax.device_put(x, sh), v), jax.device_put(m, sh)))
-    val, msk = jax.jit(sharded)(*placed)
-    return SnapshotGrid(value=val, valid=msk, t0=0, prec=exe.out_prec)
-
-
-def _xch_pad(leaf, cnt, perm, take_tail, axis, n):
-    """ppermute a halo slab; devices with no neighbour receive zeros (φ)."""
-    part = leaf[-cnt:] if take_tail else leaf[:cnt]
-    return jax.lax.ppermute(part, axis, perm)
+    # the staged SPMD step depends only on (exe, mesh, axis) — cache it on
+    # the CompiledQuery so repeated calls (streaming chunks, benchmark
+    # repeats) reuse the traced+compiled computation
+    cache = exe.__dict__.setdefault("_shard_step_cache",
+                                    collections.OrderedDict())
+    step = lru_step_get(
+        cache, (mesh, axis),
+        lambda: stage_exchange_step(specs, exe.trace_fn, mesh, axis,
+                                    (P(axis), P(axis))),
+        _SHARD_STEP_CACHE_MAX)
+    val, msk = step(*placed)
+    return SnapshotGrid(value=val, valid=msk, t0=out_t0, prec=exe.out_prec)
 
 
 def batch_run(exe: qcompile.CompiledQuery,

@@ -15,8 +15,10 @@ This module is that artifact.  It owns, in exactly one place:
   instead of gathers.
 * :class:`InputSpec` — the per-input halo contract: ``left_halo`` /
   ``right_halo`` / ``core`` ticks per partition (paper Fig. 6 shaded
-  regions).  Every executor in parallel.py and engine/ consumes these
-  fields instead of re-deriving the arithmetic.
+  regions), plus the derived multi-hop exchange schedule
+  (:meth:`InputSpec.halo_schedule` → halo.py) used when the timeline is
+  sharded across devices.  Every executor in parallel.py and engine/
+  consumes these fields instead of re-deriving the arithmetic.
 * :class:`QueryPlan` — the whole bundle, built once per (query, out_len)
   by :func:`plan_query` and shared by the fused executable, the
   interpreted operator-at-a-time program, and all partitioned runners.
@@ -38,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import boundary, ir
+from . import boundary, halo, ir
 
 __all__ = ["GridPlan", "AlignSpec", "InputSpec", "QueryPlan", "UnionPlan",
            "plan_query", "plan_union"]
@@ -178,6 +180,15 @@ class InputSpec:
 
     def grid_plan(self) -> GridPlan:
         return GridPlan(t0=self.t0, length=self.length, prec=self.prec)
+
+    def halo_schedule(self) -> "halo.HaloSchedule":
+        """The static multi-hop exchange schedule serving this contract
+        when the timeline is sharded (one shard per ``core`` ticks): hop
+        ``k`` pulls the slab ``k`` neighbours over, ``ceil(halo/core)``
+        hops per side (see :mod:`repro.core.halo`).  Like the halo sizes
+        themselves, this is a planning artifact — resolved once here,
+        consumed by every sharded executor."""
+        return halo.schedule(self.left_halo, self.right_halo, self.core)
 
 
 @dataclasses.dataclass

@@ -161,8 +161,13 @@ class KeyedEngine:
         ``(n_keys, out_len)`` output partition."""
         for name, spec in self.exe.input_specs.items():
             g = chunks[name]
-            assert g.valid.shape == (self.n_keys, spec.core), (
-                name, g.valid.shape, (self.n_keys, spec.core))
+            # a real exception, not an assert: this is user-input
+            # validation and must survive ``python -O``
+            if tuple(g.valid.shape) != (self.n_keys, spec.core):
+                raise ValueError(
+                    f"input {name}: chunk validity shape "
+                    f"{tuple(g.valid.shape)} != (n_keys, core) = "
+                    f"{(self.n_keys, spec.core)}")
         if not self._tails:
             self._init_tails(chunks)
         chunk_in = {name: self._place((chunks[name].value,

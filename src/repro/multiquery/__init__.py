@@ -26,6 +26,11 @@ exactly one place:
   contract deterministically), and composes with the keyed engine — K keyed
   sub-streams × N queries advance as a single vmapped, optionally
   mesh-sharded XLA computation.
+* :func:`~repro.multiquery.session.shard_union_run` — the *time*-sharded
+  union executor: the shared timeline is partitioned across mesh devices
+  and the merged halo contracts — which get deeper as queries pile on —
+  are assembled by the multi-hop ppermute chain (core/halo.py), so union
+  plans with windows deeper than the per-shard span still scale out.
 
 Sharing model in one line: *fingerprint-equal ⇒ plan-equal ⇒ evaluate
 once* — correctness rests on fingerprints implying structural equality
@@ -39,7 +44,8 @@ exactly-representable data and within the kernel's documented
 window-bounded error otherwise (see kernels/ops.py; offset-invariant
 blocking is a ROADMAP follow-on).
 """
-from .session import MultiQuerySession
+from .session import MultiQuerySession, shard_union_run
 from .shared import SharedPlanCache, SharingReport
 
-__all__ = ["MultiQuerySession", "SharedPlanCache", "SharingReport"]
+__all__ = ["MultiQuerySession", "SharedPlanCache", "SharingReport",
+           "shard_union_run"]

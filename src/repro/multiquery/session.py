@@ -24,6 +24,7 @@ N queries advance as a single XLA computation per chunk.
 """
 from __future__ import annotations
 
+import collections
 from typing import Dict, Optional
 
 import jax
@@ -31,13 +32,109 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import boundary, compile as qcompile, ir
+from ..core import boundary, compile as qcompile, ir, parallel
 from ..core.plan import plan_union
 from ..core.stream import SnapshotGrid
 from ..engine import wrap_keyed_step
 from .shared import SharedPlanCache, SharingReport
 
-__all__ = ["MultiQuerySession"]
+__all__ = ["MultiQuerySession", "shard_union_run"]
+
+
+def _union_body(plan, queries, order, pallas, sum_algo, span,
+                counts=None, fps=None):
+    """The union-DAG chunk evaluator (single-key view, time axis 0):
+    every node once through the shared evaluator, then per-query output
+    windows sliced off each root's (possibly union-widened) grid.  Shared
+    by the session's staged step and :func:`shard_union_run`."""
+
+    def body(full: Dict[str, tuple]) -> Dict[str, tuple]:
+        env: Dict[int, tuple] = {}
+        for n in order:
+            if isinstance(n, ir.Input):
+                args = (full[n.name],)
+            else:
+                args = tuple(env[id(a)] for a in n.args)
+            if fps:
+                counts[fps[id(n)]] = counts.get(fps[id(n)], 0) + 1
+            env[id(n)] = qcompile.eval_op(n, plan, pallas, sum_algo, *args)
+        outs = {}
+        for qname, root in queries.items():
+            gp = plan.plan_of(root)
+            lo = -gp.t0 // gp.prec        # skip any union-widened halo
+            out_len = span // gp.prec
+            v, m = env[id(root)]
+            outs[qname] = (
+                jax.tree_util.tree_map(
+                    lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + out_len, axis=0), v),
+                jax.lax.slice_in_dim(m, lo, lo + out_len, axis=0))
+        return outs
+
+    return body
+
+
+def shard_union_run(queries: Dict[str, object], span: int,
+                    inputs: Dict[str, SnapshotGrid], mesh: Mesh,
+                    axis: str = "data", *, pallas: Optional[bool] = None,
+                    sum_algo: str = "block") -> Dict[str, SnapshotGrid]:
+    """SPMD execution of N queries' union DAG with the *timeline* sharded
+    along ``mesh[axis]`` — the multi-query counterpart of
+    :func:`repro.core.parallel.shard_map_run`.
+
+    ``span`` is the per-shard output span (time units); each input supplies
+    exactly the core region of the global window (``n · span`` time units,
+    shared by all queries).  The merged per-source halo contracts of the
+    union plan — which get *deeper* as queries pile on — are assembled by
+    the same multi-hop ppermute chain as the per-query path
+    (``InputSpec.halo_schedule`` → :func:`repro.core.halo.exchange`), so
+    union plans whose windows exceed the per-shard span shard fine.
+    Unkeyed sources only (the keyed session shards the key axis instead).
+    """
+    queries = {name: getattr(q, "node", q) for name, q in queries.items()}
+    for name, root in queries.items():
+        ir.validate(root)
+        if any(n.keyed for n in ir.free_inputs(root)):
+            raise NotImplementedError(
+                f"query {name!r}: shard_union_run time-shards unkeyed "
+                "sources; keyed query sets shard the key axis via "
+                "MultiQuerySession(mesh=...)")
+
+    # plan + staged step depend only on the query-set structure and the
+    # execution knobs — cache both so chunked/repeated calls reuse the
+    # traced+compiled computation (same pattern as shard_map_run's cache,
+    # keyed structurally because callers rebuild query dicts per call)
+    qkey = tuple(sorted((name, ir.fingerprint(root))
+                        for name, root in queries.items()))
+
+    def build():
+        plan = plan_union(list(queries.values()), span)
+        order = ir.topo_order_multi(list(queries.values()))
+        body = _union_body(plan, queries, order, pallas, sum_algo, span)
+        return plan, parallel.stage_exchange_step(
+            plan.input_specs, body, mesh, axis,
+            {qname: (P(axis), P(axis)) for qname in queries})
+
+    plan, sharded = parallel.lru_step_get(
+        _union_step_cache, (qkey, span, mesh, axis, pallas, sum_algo),
+        build, _UNION_STEP_CACHE_MAX)
+
+    placed, out_t0 = parallel.place_core_inputs(
+        plan.input_specs, inputs, mesh, axis)
+    outs = sharded(*placed)
+    return {qname: SnapshotGrid(value=v, valid=m, t0=out_t0,
+                                prec=queries[qname].prec)
+            for qname, (v, m) in outs.items()}
+
+
+# (qkey, span, mesh, axis, pallas, sum_algo) -> (UnionPlan, jitted step);
+# structural fingerprints make the key process-stable, so rebuilding the
+# same dashboard set every chunk never re-traces.  LRU-bounded: each entry
+# retains a compiled executable, and a long-lived server with an evolving
+# query set must not grow resident memory without bound.
+_UNION_STEP_CACHE_MAX = 16
+_union_step_cache: "collections.OrderedDict[tuple, tuple]" = \
+    collections.OrderedDict()
 
 
 class MultiQuerySession:
@@ -180,34 +277,9 @@ class MultiQuerySession:
         queries = dict(self._queries)
         fps = {id(n): ir.fingerprint(n) for n in order} if self.instrument \
             else {}
-        pallas, sum_algo, span = self.pallas, self.sum_algo, self.span
         taxis = self._taxis
-        counts = self.node_eval_counts
-
-        def body(full: Dict[str, tuple]) -> Dict[str, tuple]:
-            """Evaluate the union DAG once (single-key view, time axis 0)."""
-            env: Dict[int, tuple] = {}
-            for n in order:
-                if isinstance(n, ir.Input):
-                    args = (full[n.name],)
-                else:
-                    args = tuple(env[id(a)] for a in n.args)
-                if fps:
-                    counts[fps[id(n)]] = counts.get(fps[id(n)], 0) + 1
-                env[id(n)] = qcompile.eval_op(n, plan, pallas, sum_algo,
-                                              *args)
-            outs = {}
-            for qname, root in queries.items():
-                gp = plan.plan_of(root)
-                lo = -gp.t0 // gp.prec        # skip any union-widened halo
-                out_len = span // gp.prec
-                v, m = env[id(root)]
-                outs[qname] = (
-                    jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, lo, lo + out_len, axis=0), v),
-                    jax.lax.slice_in_dim(m, lo, lo + out_len, axis=0))
-            return outs
+        body = _union_body(plan, queries, order, self.pallas, self.sum_algo,
+                           self.span, counts=self.node_eval_counts, fps=fps)
 
         def step(tails, chunks):
             full = {}
@@ -300,7 +372,10 @@ class MultiQuerySession:
         for name, spec in specs.items():
             g = chunks[name]
             want = ((self.n_keys, spec.core) if taxis else (spec.core,))
-            assert tuple(g.valid.shape) == want, (name, g.valid.shape, want)
+            if tuple(g.valid.shape) != want:
+                raise ValueError(
+                    f"input {name}: chunk validity shape "
+                    f"{tuple(g.valid.shape)} != expected {want}")
             chunk_in[name] = self._place((g.value, g.valid))
             if name in self._tails:
                 tails[name] = self._fit_tail(self._tails[name],

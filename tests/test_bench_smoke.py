@@ -43,3 +43,12 @@ def test_fig8_keyed_scaling_smoke():
     out = _run_section("fig8k")
     assert "fig8k_trend_k16," in out
     assert "fig8k_ysb_p4," in out
+
+
+def test_fig_halo_depth_smoke():
+    out = _run_section("fighalo")
+    # all shard counts reported (run.py forces 8 host devices for fighalo)
+    for s in (1, 2, 4, 8):
+        assert f"_s{s}," in out, out
+    # the deep-window multi-hop corner — rejected at seed — must run
+    assert "hops=4" in out, out

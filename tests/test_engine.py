@@ -142,6 +142,18 @@ def test_keyed_engine_rejects_mixed_keyed_unkeyed():
         KeyedEngine(exe, n_keys=8)
 
 
+def test_keyed_engine_step_shape_check_is_real_exception():
+    """Chunk-shape validation must survive ``python -O`` (ValueError, not
+    assert)."""
+    s = TStream.source("a", keyed=True)
+    exe = qc.compile_query(s.window(8).mean().node, out_len=16, pallas=False)
+    eng = KeyedEngine(exe, n_keys=4)
+    bad = {"a": keyed_grid(np.zeros((4, 15), np.float32),
+                           np.ones((4, 15), bool))}
+    with pytest.raises(ValueError, match="chunk validity shape"):
+        eng.step(bad)
+
+
 def test_keyed_engine_rejects_lookahead():
     s = TStream.source("a", keyed=True)
     q = s.shift(-4)  # lookahead

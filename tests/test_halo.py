@@ -1,0 +1,155 @@
+"""Multi-hop halo exchange: schedule math (core/halo.py), the repurposed
+halo guard, and the shard_map_run satellites (absolute output origin,
+real-exception input validation, alignment guard).
+
+Everything here runs on the default single-device CPU config — a 1-device
+mesh exercises the full shard_map/exchange code path (all halo ticks φ);
+the true multi-device bit-identity checks live in the slow subprocess
+suite (tests/test_parallel_multidev.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compile as qc
+from repro.core import halo
+from repro.core.frontend import TStream
+from repro.core.parallel import (partition_run, shard_map_run,
+                                 check_single_hop_halo, slice_grid)
+from repro.core.plan import plan_query
+from repro.core.stream import SnapshotGrid
+from repro.launch.mesh import make_local_mesh
+
+
+# ---------------------------------------------------------------------------
+# schedule math
+# ---------------------------------------------------------------------------
+
+def test_hop_count_threshold():
+    """Satellite pin: halo == core is single-hop; halo == core + 1 is the
+    first config that needs the chain."""
+    assert halo.hop_count(0, 64) == 0
+    assert halo.hop_count(64, 64) == 1       # halo == core: passes 1 hop
+    assert halo.hop_count(65, 64) == 2       # halo == core + 1: needs hops
+    assert halo.hop_count(128, 64) == 2
+    assert halo.hop_count(129, 64) == 3
+    assert halo.hop_count(500, 128) == 4     # the acceptance config
+    with pytest.raises(ValueError):
+        halo.hop_count(1, 0)
+
+
+def test_schedule_hop_contributions():
+    s = halo.schedule(500, 0, 128)
+    assert s.left_hops == (128, 128, 128, 116)   # full slabs + remainder
+    assert s.right_hops == ()
+    assert s.left_halo == 500 and s.right_halo == 0
+    assert s.max_hops == 4
+    # exact multiples: all hops are full slabs
+    assert halo.schedule(256, 0, 128).left_hops == (128, 128)
+    # both sides independent
+    two = halo.schedule(10, 130, 64)
+    assert two.left_hops == (10,)
+    assert two.right_hops == (64, 64, 2)
+    # schedules are cached planning artifacts
+    assert halo.schedule(500, 0, 128) is s
+
+
+def test_input_spec_carries_schedule():
+    q = TStream.source("in", prec=1).window(100).sum()
+    qp = plan_query(q.node, out_len=32)
+    sched = qp.input_specs["in"].halo_schedule()
+    assert sched.core == 32
+    assert sum(sched.left_hops) == qp.input_specs["in"].left_halo
+    assert len(sched.left_hops) == 4          # ceil(100 / 32)
+
+
+def test_check_single_hop_halo_reports_instead_of_raising():
+    """The old NotImplementedError is retired: any halo is servable, and
+    the report keeps the min_out_len ceil-division formula."""
+    q = TStream.source("in", prec=1).window(100).sum()
+    for out_len, hops in ((100, 1), (99, 2), (50, 2), (33, 4), (32, 4)):
+        exe = qc.compile_query(q.node, out_len=out_len, pallas=False)
+        rep = check_single_hop_halo(exe.input_specs, exe.out_prec, n=8)
+        assert rep["in"].left_hops == hops, out_len
+        assert rep["in"].min_single_hop_out_len == 100
+    # exactly at the threshold: halo == core is still single-hop
+    exe = qc.compile_query(q.node, out_len=100, pallas=False)
+    assert check_single_hop_halo(
+        exe.input_specs, exe.out_prec, n=8)["in"].max_hops == 1
+
+
+# ---------------------------------------------------------------------------
+# shard_map_run satellites (1-device mesh)
+# ---------------------------------------------------------------------------
+
+def _grid(vals, valid, t0=0):
+    return SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                        t0=t0, prec=1)
+
+
+def _int_data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 100, n).astype(np.float32),
+            rng.random(n) > 0.2)
+
+
+def test_shard_map_run_nonzero_origin_matches_partition_run():
+    """Regression: the sharded output grid must start where the inputs'
+    core region starts, not at a hardcoded t0=0."""
+    N, T0 = 64, 960
+    vals, valid = _int_data(N, seed=3)
+    g = {"in": _grid(vals, valid, t0=T0)}
+    q = TStream.source("in", prec=1).window(8).sum()
+    exe = qc.compile_query(q.node, out_len=N, pallas=False)
+    ref = partition_run(exe, g, T0, 1)
+    out = shard_map_run(exe, g, make_local_mesh(n_data=1))
+    assert out.t0 == T0
+    assert ref.t0 == T0
+    assert np.array_equal(np.asarray(ref.valid), np.asarray(out.valid))
+    m = np.asarray(ref.valid)
+    assert np.array_equal(np.asarray(ref.value)[m], np.asarray(out.value)[m])
+
+
+def test_shard_map_run_core_length_is_real_exception():
+    vals, valid = _int_data(48, seed=4)
+    q = TStream.source("in", prec=1).window(8).sum()
+    exe = qc.compile_query(q.node, out_len=64, pallas=False)
+    with pytest.raises(ValueError, match="core length"):
+        shard_map_run(exe, {"in": _grid(vals, valid)},
+                      make_local_mesh(n_data=1))
+
+
+def test_shard_map_run_rejects_disagreeing_origins():
+    N = 32
+    a = TStream.source("a", prec=1)
+    b = TStream.source("b", prec=1)
+    q = a.window(4).sum().join(b.window(4).sum(), lambda x, y: x + y)
+    exe = qc.compile_query(q.node, out_len=N, pallas=False)
+    va, ma = _int_data(N, seed=5)
+    vb, mb = _int_data(N, seed=6)
+    with pytest.raises(ValueError, match="core-region origin"):
+        shard_map_run(exe, {"a": _grid(va, ma, t0=0),
+                            "b": _grid(vb, mb, t0=32)},
+                      make_local_mesh(n_data=1))
+
+
+def test_grid_window_misalignment_raises():
+    """Satellite: a misaligned partition origin raises instead of
+    floor-dividing into a time-shifted window."""
+    N = 32
+    vals, valid = _int_data(N, seed=7)
+    g = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                            valid=jnp.asarray(valid), t0=0, prec=2)}
+    q = TStream.source("in", prec=2).window(8).sum()
+    exe = qc.compile_query(q.node, out_len=8, pallas=False)
+    partition_run(exe, g, 0, 1)  # aligned: fine
+    with pytest.raises(ValueError, match="misaligned"):
+        partition_run(exe, g, 1, 1)
+
+
+def test_slice_grid_misalignment_is_real_exception():
+    vals, valid = _int_data(16, seed=8)
+    g = SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                     t0=0, prec=2)
+    with pytest.raises(ValueError, match="misaligned"):
+        slice_grid(g, 1, 9)

@@ -389,17 +389,56 @@ def test_union_plan_merges_halo_contracts():
     assert pa.input_specs["in"].left_halo == 16
 
 
-def test_halo_overflow_guard_reports_min_partition_length():
-    """Satellite: the single-hop halo guard must name the minimum viable
-    out_len for the offending input, not just reject."""
+def test_halo_overflow_guard_reports_hop_geometry():
+    """The halo guard is informational now: deep-lookback configs are
+    served by the multi-hop exchange (core/halo.py), so nothing raises;
+    the report keeps the old single-hop threshold formula."""
     q = TStream.source("in", prec=1).window(100).mean()
     exe = qc.compile_query(q.node, out_len=32, pallas=False)
-    with pytest.raises(NotImplementedError) as ei:
-        check_single_hop_halo(exe.input_specs, exe.out_prec, n=4)
-    msg = str(ei.value)
-    assert "input in" in msg
-    assert "out_len >= 100" in msg            # halo 100 ticks, prec 1
-    assert "100 time units" in msg
-    assert "multi-hop" in msg
-    # n=1 (no sharding) never raises
-    check_single_hop_halo(exe.input_specs, exe.out_prec, n=1)
+    rep = check_single_hop_halo(exe.input_specs, exe.out_prec, n=4)
+    assert rep["in"].min_single_hop_out_len == 100   # halo 100 ticks, prec 1
+    assert rep["in"].left_hops == 4                  # ceil(100 / 32)
+    assert rep["in"].right_hops == 0
+    assert rep["in"].max_hops == 4
+    # n=1 (no sharding): no exchange, zero hops
+    rep1 = check_single_hop_halo(exe.input_specs, exe.out_prec, n=1)
+    assert rep1["in"].max_hops == 0
+
+
+def test_shard_union_run_single_device_matches_session():
+    """Time-sharded union execution on a trivial 1-device mesh must match
+    the chunked session bit-for-bit (integer-valued data)."""
+    from repro.multiquery import shard_union_run
+    from repro.launch.mesh import make_local_mesh
+
+    N = 128
+    vals, valid = _int_stream(N, seed=13)
+    full = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                               valid=jnp.asarray(valid), t0=0, prec=1)}
+    s = TStream.source("in", prec=1)
+    queries = {"a": s.window(12).mean(), "b": s.window(40).sum()}
+    out = shard_union_run(queries, N, full, make_local_mesh(n_data=1),
+                          pallas=False)
+    sess = MultiQuerySession(N, pallas=False)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    ref = sess.run(full, 1)
+    for name in queries:
+        assert np.array_equal(np.asarray(ref[name].valid),
+                              np.asarray(out[name].valid))
+        m = np.asarray(ref[name].valid)
+        assert np.array_equal(np.asarray(ref[name].value)[m],
+                              np.asarray(out[name].value)[m])
+
+
+def test_session_step_shape_check_is_real_exception():
+    """User-input validation must survive ``python -O`` (ValueError, not
+    assert)."""
+    vals, valid = _int_stream(SPAN, seed=14)
+    sess = MultiQuerySession(SPAN, pallas=False)
+    sess.attach("q", TStream.source("in", prec=1).window(8).mean())
+    bad = {"in": SnapshotGrid(value=jnp.asarray(vals[:SPAN - 1]),
+                              valid=jnp.asarray(valid[:SPAN - 1]),
+                              t0=0, prec=1)}
+    with pytest.raises(ValueError, match="chunk validity shape"):
+        sess.step(bad)

@@ -69,6 +69,113 @@ def test_shard_map_halo_exchange_matches_host_loop():
     assert "HALO_OK" in out
 
 
+def test_shard_map_multi_hop_bit_identical_to_partition_run():
+    """Deep-lookback configs the seed rejected (halo > per-shard core) must
+    run through the multi-hop ppermute chain and match the host loop
+    *bit-for-bit* on integer-valued data (same partitioning ⇒ identical
+    float association; see the float caveat in repro/multiquery).
+
+    Covers 2-hop, 3-hop and the acceptance config (window 500 over 8
+    shards of 128 core ticks ⇒ 4-hop left halo), non-zero origins, and the
+    right-halo chain via multi-hop lookahead (shift(-d)) configs.
+    """
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as qc
+        from repro.core.frontend import TStream
+        from repro.core.parallel import (partition_run, shard_map_run,
+                                         check_single_hop_halo)
+        from repro.core.stream import SnapshotGrid
+        from repro.launch.mesh import make_local_mesh
+
+        assert len(jax.devices()) == 8
+        mesh = make_local_mesh(n_data=8)
+
+        # lookback (left chain): (window, total ticks, hops, origin),
+        # core = N // 8
+        configs = [(100, 512, 2, 0),     # core 64  -> 2 hops
+                   (100, 320, 3, 0),     # core 40  -> 3 hops
+                   (500, 1024, 4, 0),    # core 128 -> 4 hops (acceptance)
+                   (500, 1024, 4, 4096)] # ... at a non-zero origin
+        # lookahead (right chain has its own trim direction, permutation
+        # and segment order): shift(-d) needs ceil(d/core) right hops
+        la_configs = [(150, 512, 3, 0),  # core 64 -> 3 right hops
+                      (70, 256, 3, 128)] # core 32 -> 3 right hops, t0!=0
+        for kind, W, N, hops, t0 in (
+                [("lb",) + c for c in configs]
+                + [("la",) + c for c in la_configs]):
+            rng = np.random.default_rng(W + N)
+            vals = rng.integers(0, 100, N).astype(np.float32)
+            valid = rng.random(N) > 0.2
+            g = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                                    valid=jnp.asarray(valid),
+                                    t0=t0, prec=1)}
+            s = TStream.source("in", prec=1)
+            q = s.window(W).sum() if kind == "lb" else s.shift(-W)
+            exe = qc.compile_query(q.node, out_len=N // 8, pallas=False)
+            rep = check_single_hop_halo(exe.input_specs, exe.out_prec, 8)
+            got = (rep["in"].left_hops if kind == "lb"
+                   else rep["in"].right_hops)
+            assert got == hops, (kind, W, N, rep)
+
+            ref = partition_run(exe, g, t0, 8)
+            shard = shard_map_run(exe, g, mesh, axis="data")
+            assert shard.t0 == t0, (shard.t0, t0)
+            m1, m2 = np.asarray(ref.valid), np.asarray(shard.valid)
+            assert np.array_equal(m1, m2), (kind, W, N, m1.sum(), m2.sum())
+            v1, v2 = np.asarray(ref.value), np.asarray(shard.value)
+            assert np.array_equal(v1[m1], v2[m1]), (kind, W, N)
+        print("MULTIHOP_OK")
+    """)
+    assert "MULTIHOP_OK" in out
+
+
+def test_shard_union_run_deep_windows_match_session():
+    """Time-sharded union execution: merged multi-query halo contracts
+    deeper than the per-shard span (4-hop) must match the chunked
+    MultiQuerySession bit-for-bit on integer-valued data."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.frontend import TStream
+        from repro.core.stream import SnapshotGrid
+        from repro.launch.mesh import make_local_mesh
+        from repro.multiquery import MultiQuerySession, shard_union_run
+
+        N, n_shards = 512, 8
+        span = N // n_shards                  # 64 per shard
+        rng = np.random.default_rng(9)
+        vals = rng.integers(0, 50, N).astype(np.float32)
+        valid = rng.random(N) > 0.2
+        g = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                                valid=jnp.asarray(valid), t0=0, prec=1)}
+        s = TStream.source("in", prec=1)
+        queries = {"shallow": s.window(16).mean(),   # 1 hop
+                   "deep": s.window(200).sum()}      # merged halo: 4 hops
+
+        mesh = make_local_mesh(n_data=n_shards)
+        out = shard_union_run(queries, span, g, mesh, axis="data",
+                              pallas=False)
+
+        sess = MultiQuerySession(span, pallas=False)
+        for name, q in queries.items():
+            sess.attach(name, q)
+        ref = sess.run(g, n_shards)
+        for name in queries:
+            m1 = np.asarray(ref[name].valid)
+            m2 = np.asarray(out[name].valid)
+            assert np.array_equal(m1, m2), name
+            v1 = np.asarray(ref[name].value)
+            v2 = np.asarray(out[name].value)
+            assert np.array_equal(v1[m1], v2[m1]), name
+        print("UNION_SHARD_OK")
+    """)
+    assert "UNION_SHARD_OK" in out
+
+
 def test_dryrun_cell_small_mesh():
     """End-to-end dry-run machinery on an 8-device mesh (2 data × 4 model):
     lower+compile a smoke-size train step with the production sharding
