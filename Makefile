@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow test-multidev bench
+.PHONY: test test-fast test-slow test-multidev bench bench-sparse
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -23,3 +23,8 @@ test-multidev:
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+# change-rate × segment-size sweep (dense vs sparse execution); writes
+# BENCH_figsparse.json alongside the stdout table
+bench-sparse:
+	$(PYTHON) -m benchmarks.run figsparse

@@ -11,6 +11,8 @@ one — see kernels/ops.py).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -81,5 +83,62 @@ def time_spe(app, data, n_events, batch=100_000, repeats=REPEATS):
     return n_events / dt, dt
 
 
-def row(name: str, us_per_call: float, derived: str):
+# ---------------------------------------------------------------------------
+# machine-readable results: run.py opens a section, row() records every CSV
+# row into it, and end_section() writes BENCH_<section>.json (rows + parsed
+# derived columns + config) next to the stdout table so the perf trajectory
+# is trackable across PRs (slow CI uploads the files as artifacts).
+# ---------------------------------------------------------------------------
+
+_SECTION: str | None = None
+_ROWS: list = []
+_CONFIG: dict = {}
+
+
+def begin_section(name: str, config: dict | None = None) -> None:
+    global _SECTION, _ROWS, _CONFIG
+    _SECTION, _ROWS, _CONFIG = name, [], dict(config or {})
+
+
+def _parse_derived(derived: str) -> dict:
+    """Lift ``k=v`` pairs out of a derived column ("3.1Mev/s,hops=2") into
+    typed JSON columns; bare fragments stay in the raw string only."""
+    out = {}
+    for part in str(derived).split(","):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def row(name: str, us_per_call: float, derived: str, **extra):
+    """Print one CSV row and record it (plus parsed/extra derived columns)
+    into the open section's JSON."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    if _SECTION is not None:
+        entry = {"name": name, "us_per_call": float(us_per_call),
+                 "derived": str(derived)}
+        entry.update(_parse_derived(derived))
+        entry.update(extra)
+        _ROWS.append(entry)
+
+
+def end_section(out_dir: str = ".") -> str | None:
+    """Write ``BENCH_<section>.json`` for the open section; returns the
+    path (None if no section is open)."""
+    global _SECTION
+    if _SECTION is None:
+        return None
+    cfg = dict(_CONFIG)
+    cfg.setdefault("devices", jax.device_count())
+    path = os.path.join(out_dir, f"BENCH_{_SECTION}.json")
+    with open(path, "w") as f:
+        json.dump({"section": _SECTION, "config": cfg, "rows": _ROWS},
+                  f, indent=1)
+        f.write("\n")
+    _SECTION = None
+    return path

@@ -1,0 +1,121 @@
+"""Change-rate × segment-size sweep: dense vs change-compressed execution.
+
+Real-world streams are change-compressed: fraud and dashboard sources hold
+their value for long spans and change in bursts (sessions, market moves),
+so >90% of grid ticks carry no new information.  This sweep drives the
+fraud-style windowed app (trailing mean + stddev → threshold → excess →
+where) over piecewise-constant integer-valued streams whose *change rate*
+(fraction of ticks whose value differs from the previous tick, arriving in
+bursts of ``BURST`` ticks) ranges 1%…100%, and compares:
+
+* ``dense``  — the fused one-shot execution (its best configuration), and
+* ``sparse`` — :func:`repro.core.sparse.sparse_run` at several segment
+  (chunk) sizes: only segments whose dilated lineage saw a change are
+  computed, the rest hold.
+
+Derived columns report throughput, the measured compaction ratio
+(``compact`` = dirty segments / total segments) and the dense-vs-sparse
+``speedup``.  Expected shape: big wins at 1% (the compaction bound times
+the ``(seg+window)/seg`` halo overhead), break-even somewhere around
+10–50%, and a constant-factor *loss* at 100% — dense mode remains the
+right default for high-change streams (see repro/core/sparse.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.parallel import partition_run
+from repro.core.sparse import segment_mask, sparse_run
+from repro.core.stream import SnapshotGrid
+
+from .common import row
+
+REPEATS = 3
+RATES = (0.01, 0.10, 0.50, 1.00)
+BURST = 128  # change-burst length (a fraud session / market move)
+
+
+def _pow2_ticks(n_events: int) -> int:
+    n = max(4096, min(n_events, 1 << 20))
+    return 1 << (n.bit_length() - 1)
+
+
+def burst_stream(n: int, rate: float, seed: int,
+                 burst: int = BURST) -> np.ndarray:
+    """Piecewise-constant integer-valued stream whose value changes on
+    ~``rate`` of ticks, arriving in bursts of ``burst`` consecutive
+    changes."""
+    rng = np.random.default_rng(seed)
+    change = np.zeros(n, bool)
+    if rate >= 1.0:
+        change[:] = True
+    else:
+        n_bursts = max(int(n * rate) // burst, 1)
+        for s in rng.integers(0, max(n - burst, 1), n_bursts):
+            change[s:s + burst] = True
+    change[0] = True
+    raw = np.floor(rng.random(n) * 100).astype(np.float32)
+    idx = np.maximum.accumulate(np.where(change, np.arange(n), -1))
+    return raw[idx]
+
+
+def _fraud_query(window: int):
+    s = TStream.source("in", prec=1)
+    mu = s.window(window).mean().shift(1)
+    sd = s.window(window).stddev().shift(1)
+    thr = mu.join(sd, lambda m, d: m + 3.0 * d, name="thr")
+    return (s.join(thr, lambda x, t: x - t, name="excess")
+            .where(lambda e: e > 0, name="flag"))
+
+
+def _bench(fn) -> float:
+    jax.block_until_ready(fn().valid)  # warmup (compile)
+    best = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn().valid)
+        best.append(time.perf_counter() - t0)
+    return min(best)
+
+
+def run(n_events: int = 1_000_000):
+    N = _pow2_ticks(n_events)
+    window = min(64, N // 8)
+    segs = sorted({max(128, N // 2048), max(256, N // 1024)})
+    q = _fraud_query(window)
+    exe_dense = qc.compile_query(q.node, out_len=N, pallas=False)
+    # one sparse executable per segment size, shared across rates so the
+    # bucketed jit caches stay warm exactly as in steady-state operation
+    exe_sparse = {seg: qc.compile_query(q.node, out_len=seg, pallas=False,
+                                        sparse=True) for seg in segs}
+
+    for rate in RATES:
+        vals = burst_stream(N, rate, seed=7)
+        g = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                                valid=jnp.ones(N, bool), t0=0, prec=1)}
+        dt_d = _bench(lambda: partition_run(exe_dense, g, 0, 1))
+        r = int(rate * 100)
+        row(f"figsparse_dense_r{r}", dt_d * 1e6,
+            f"{N / dt_d / 1e6:.1f}Mev/s,mode=dense,rate={rate}",
+            events=N, window=window)
+        for seg in segs:
+            exe_s = exe_sparse[seg]
+            n_segs = N // seg
+            dt_s = _bench(lambda: sparse_run(exe_s, g, 0, n_segs))
+            n_dirty = int(np.asarray(
+                segment_mask(exe_s, g, 0, n_segs)).sum())
+            row(f"figsparse_sparse_r{r}_c{seg}", dt_s * 1e6,
+                f"{N / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
+                f"compact={n_dirty / n_segs:.3f},speedup={dt_d / dt_s:.2f}",
+                events=N, window=window, seg_len=seg,
+                dirty_segments=n_dirty, total_segments=n_segs)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,13 +1,27 @@
 """Benchmark driver: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py) and
+writes a machine-readable ``BENCH_<section>.json`` per executed section
+(rows + parsed derived columns + config) so the perf trajectory is
+trackable across PRs; slow CI uploads the JSONs as artifacts.
 Scale with REPRO_BENCH_EVENTS (default 2M events — the paper uses 160M on
 a 32-core machine; this container is 1 core).
+
+Runs either as a module (``python -m benchmarks.run figsparse``) or as a
+plain script (``python benchmarks/run.py figsparse``).
 """
 from __future__ import annotations
 
 import os
 import sys
+
+if __package__ in (None, ""):
+    # plain-script invocation: make the repo root (for ``benchmarks``) and
+    # src/ (for ``repro``) importable before any package import
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (os.path.join(_ROOT, "src"), _ROOT):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -25,9 +39,10 @@ def main() -> None:
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={int(ndev)}").strip()
 
-    from . import (fig7_throughput, fig8_keyed_scaling, fig8_ysb_scaling,
-                   fig9_latency, fig10_fusion, fig_halo_depth,
-                   fig_multiquery_sharing, roofline_table)
+    from benchmarks import (common, fig7_throughput, fig8_keyed_scaling,
+                            fig8_ysb_scaling, fig9_latency, fig10_fusion,
+                            fig_halo_depth, fig_multiquery_sharing,
+                            fig_sparse, roofline_table)
 
     sections = {
         "fig7": lambda: fig7_throughput.run(n),
@@ -37,13 +52,18 @@ def main() -> None:
         "fig10": lambda: fig10_fusion.run(n),
         "figmq": lambda: fig_multiquery_sharing.run(min(n, 1_000_000)),
         "fighalo": lambda: fig_halo_depth.run(min(n, 1_000_000)),
+        "figsparse": lambda: fig_sparse.run(min(n, 1_000_000)),
         "roofline": roofline_table.run,
     }
     for name, fn in sections.items():
         if only and only != name:
             continue
         print(f"## section {name}")
+        common.begin_section(name, config={"events": n})
         fn()
+        path = common.end_section()
+        if path:
+            print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

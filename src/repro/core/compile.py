@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import fusion, ir
-from .plan import InputSpec, QueryPlan, plan_query
+from .plan import ChangePlan, InputSpec, QueryPlan, plan_change, plan_query
 from .reduction import get_reduction
 from ..kernels import ops as kops
 
@@ -198,6 +198,9 @@ class CompiledQuery:
     trace_fn: Callable[[Dict[str, tuple]], tuple]
     fn: Callable[[Dict[str, tuple]], tuple]
     _node_fns: list  # [(name, jitted fn, arg node ids, node)]
+    # change-propagation plan (compile_query(..., sparse=True)): enables the
+    # change-compressed executors in sparse.py / parallel.py / engine
+    change_plan: Optional[ChangePlan] = None
 
     @property
     def out_len(self) -> int:
@@ -227,8 +230,18 @@ class CompiledQuery:
 
 def compile_query(root: ir.Node, out_len: int, *, opt: bool = True,
                   pallas: Optional[bool] = None, sum_algo: str = "block",
-                  jit: bool = True) -> CompiledQuery:
-    """Compile a TiLT query for partitions of ``out_len`` output ticks."""
+                  jit: bool = True, sparse: bool = False) -> CompiledQuery:
+    """Compile a TiLT query for partitions of ``out_len`` output ticks.
+
+    With ``sparse=True`` the executable additionally carries a
+    :class:`plan.ChangePlan` (per-source dirty-span dilation contracts,
+    derived from the halo contracts) enabling the change-compressed
+    executors — :func:`repro.core.sparse.sparse_run`,
+    :class:`repro.core.parallel.SparseStreamRunner` and
+    ``KeyedEngine(..., sparse=True)`` — which skip partitions/keys whose
+    inputs didn't change.  ``out_len`` is then the *segment* length the
+    sparse executors compact over (pick it a few× the deepest window).
+    """
     if opt:
         root = fusion.optimize(root)
     ir.validate(root)
@@ -260,4 +273,5 @@ def compile_query(root: ir.Node, out_len: int, *, opt: bool = True,
             tuple(id(a) for a in n.args), n))
 
     return CompiledQuery(root=root, plan=qp, trace_fn=trace_fn, fn=fn,
-                         _node_fns=node_fns)
+                         _node_fns=node_fns,
+                         change_plan=plan_change(qp) if sparse else None)

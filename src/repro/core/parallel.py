@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +36,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compile as qcompile
 from . import halo as halo_mod
+from . import sparse as sparse_mod
 from .stream import SnapshotGrid
 
 __all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
-           "slice_grid", "check_single_hop_halo", "place_core_inputs"]
+           "SparseStreamRunner", "slice_grid", "check_single_hop_halo",
+           "place_core_inputs"]
 
 # per-CompiledQuery bound on cached (mesh, axis) SPMD steps — each retains
 # a compiled executable (see shard_map_run)
@@ -335,3 +337,155 @@ class StreamRunner:
         self._t = state.pop("__t")
         self._tails = {k: jax.tree_util.tree_map(jnp.asarray, v)
                        for k, v in state.items()}
+
+
+@dataclasses.dataclass
+class SparseStreamRunner:
+    """Change-compressed continuous execution (sparse.py, chunked).
+
+    Like :class:`StreamRunner`, but each step feeds ``segs_per_chunk``
+    partitions' worth of fresh ticks and only the partitions whose dilated
+    input lineage saw a change are computed — the rest hold the previous
+    output (see :mod:`repro.core.sparse` for the semantics).  The carried
+    cross-chunk state is the halo contract *plus its change metadata*: per
+    input, the trailing ``left_halo`` value ticks (as in StreamRunner), the
+    matching ``left_halo`` dirty flags (changes near a chunk's end dirty
+    the next chunk's leading outputs — the dirty mask is stream state
+    exactly like the halo), a 1-tick snapshot the next chunk's first tick
+    diffs against, and the last emitted output tick as the hold seed.
+
+    ``exe`` must be compiled with ``sparse=True``; queries must be
+    lookback-only (same contract as StreamRunner).
+    """
+
+    exe: qcompile.CompiledQuery
+    segs_per_chunk: int = 8
+    _tails: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+    _dirty_tails: Dict[str, jax.Array] = dataclasses.field(
+        default_factory=dict)
+    _prev: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+    _seed: Optional[tuple] = None
+    _t: int = 0
+    _started: bool = False
+
+    def __post_init__(self):
+        if self.exe.change_plan is None:
+            raise ValueError("SparseStreamRunner needs a query compiled "
+                             "with sparse=True")
+        if self.segs_per_chunk < 1:
+            raise ValueError("segs_per_chunk must be >= 1")
+        span = self.exe.out_len * self.exe.out_prec
+        for name, s in self.exe.input_specs.items():
+            if s.right_halo > 0:
+                raise NotImplementedError(
+                    "SparseStreamRunner supports lookback-only queries "
+                    f"(input {name} has lookahead)")
+            if span % s.prec:
+                raise ValueError(
+                    f"input {name}: segment span {span} not a multiple of "
+                    f"input precision {s.prec}")
+
+    def step(self, chunks: Dict[str, SnapshotGrid]) -> SnapshotGrid:
+        """Feed ``segs_per_chunk`` partitions' worth of fresh core ticks
+        per input; compute only the dirty ones."""
+        exe, n_segs = self.exe, self.segs_per_chunk
+        S, q = exe.out_len, exe.out_prec
+        span = S * q
+        names = sorted(exe.input_specs)
+        cp = exe.change_plan
+        first = not self._started
+
+        for name in names:  # validate everything before touching state
+            core = exe.input_specs[name].core * n_segs
+            if chunks[name].valid.shape[0] != core:
+                raise ValueError(
+                    f"input {name}: chunk length "
+                    f"{chunks[name].valid.shape[0]} != "
+                    f"segs_per_chunk * core = {core}")
+
+        bufs, seg_dirty = {}, jnp.zeros((n_segs,), bool)
+        new_tails, new_dtails, new_prev = {}, {}, {}
+        for name in names:
+            spec = exe.input_specs[name]
+            g = chunks[name]
+            hl, core = spec.left_halo, spec.core * n_segs
+            if name in self._tails:
+                tv, tm = self._tails[name]
+                dt = self._dirty_tails[name]
+            else:  # stream start: φ halo, no recorded changes
+                tv = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((hl,) + x.shape[1:], x.dtype),
+                    g.value)
+                tm = jnp.zeros((hl,), bool)
+                dt = jnp.zeros((hl,), bool)
+            bv = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), tv, g.value)
+            bm = jnp.concatenate([tm, g.valid], axis=0)
+            bufs[name] = (bv, bm)
+
+            d_chunk = sparse_mod.source_dirty(
+                g.value, g.valid, self._prev.get(name))
+            full_d = jnp.concatenate([dt, d_chunk], axis=0)
+            sp = cp.specs[name]
+            i_lo, i_hi1 = sparse_mod.seg_ranges(
+                sp.lookback, sp.lookahead, spec.prec, grid_t0=-hl * spec.prec,
+                out_t0=0, out_prec=q, seg_len=S, n_segs=n_segs)
+            seg_dirty = seg_dirty | sparse_mod.range_any(
+                full_d, jnp.asarray(i_lo), jnp.asarray(i_hi1))
+
+            total = hl + core
+            new_tails[name] = (
+                jax.tree_util.tree_map(lambda x: x[total - hl:], bv),
+                bm[total - hl:])
+            new_dtails[name] = full_d[full_d.shape[0] - hl:]
+            new_prev[name] = (
+                jax.tree_util.tree_map(lambda x: x[-1:], g.value),
+                g.valid[-1:])
+        if not names:
+            seg_dirty = jnp.ones((n_segs,), bool)
+        if first:
+            seg_dirty = seg_dirty.at[0].set(True)  # hold-fill base case
+
+        n = int(jnp.sum(seg_dirty))
+        cap = sparse_mod.bucket_capacity(n, n_segs)
+        step = sparse_mod.staged_step(exe, n_segs, cap)
+        flat = [bufs[nm] for nm in names]
+        # buffer-relative gather starts: segment k's halo window begins at
+        # buffer tick k * span / prec (the tail supplies segment 0's halo)
+        starts = {nm: jnp.arange(n_segs)
+                  * (span // exe.input_specs[nm].prec) for nm in names}
+        seed = self._seed if self._seed is not None else sparse_mod.zero_seed(
+            exe, flat)
+        ov, om, new_seed = step(flat, starts, seg_dirty, *seed)
+        # commit carried state only after the step succeeded — a raise
+        # above leaves the runner exactly as it was, so the caller can
+        # retry the chunk without losing boundary changes
+        self._tails, self._dirty_tails, self._prev = (
+            new_tails, new_dtails, new_prev)
+        self._seed = new_seed
+        self._started = True
+        out = SnapshotGrid(value=ov, valid=om, t0=self._t, prec=q)
+        self._t += n_segs * span
+        return out
+
+    # -- checkpointing -------------------------------------------------------
+    def state(self) -> Dict:
+        """Checkpointable runner state (host arrays): halo tails + change
+        metadata (dirty tails, 1-tick snapshots, hold seed)."""
+        to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)  # noqa: E731
+        return {"tails": {k: to_np(v) for k, v in self._tails.items()},
+                "dirty": {k: np.asarray(v)
+                          for k, v in self._dirty_tails.items()},
+                "prev": {k: to_np(v) for k, v in self._prev.items()},
+                "seed": None if self._seed is None else to_np(self._seed),
+                "__t": self._t}
+
+    def restore(self, state: Dict) -> None:
+        to_j = lambda t: jax.tree_util.tree_map(jnp.asarray, t)  # noqa: E731
+        self._t = state["__t"]
+        self._tails = {k: to_j(v) for k, v in state["tails"].items()}
+        self._dirty_tails = {k: jnp.asarray(v)
+                             for k, v in state["dirty"].items()}
+        self._prev = {k: to_j(v) for k, v in state["prev"].items()}
+        self._seed = None if state["seed"] is None else to_j(state["seed"])
+        self._started = True

@@ -43,7 +43,8 @@ import numpy as np
 from . import boundary, halo, ir
 
 __all__ = ["GridPlan", "AlignSpec", "InputSpec", "QueryPlan", "UnionPlan",
-           "plan_query", "plan_union"]
+           "ChangeSpec", "ChangePlan", "plan_query", "plan_union",
+           "plan_change"]
 
 
 def _ceil_div(a, b):
@@ -220,6 +221,48 @@ class QueryPlan:
             self._aligns[key] = AlignSpec(
                 self.input_specs[n.name].grid_plan(), self.node_plans[id(n)])
         return self._aligns[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChangeSpec:
+    """Per-input dirty-span dilation contract (change-compressed execution).
+
+    Boundary resolution says output time ``τ`` reads this input inside
+    ``[τ − lookback, τ + lookahead]``; the *reverse image* of that lineage
+    interval is the dirty span: a changed input tick at time ``t`` can only
+    alter outputs in ``[t − lookahead, t + lookback]``.  Both bounds are in
+    time units and use the halo-rounded extents of :class:`InputSpec`, so
+    the dilation is conservative exactly where the halo is.
+    """
+
+    lookback: int    # input change at t dirties outputs in [t, t+lookback]
+    lookahead: int   # ... and in [t-lookahead, t]
+    prec: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ChangePlan:
+    """Static change-propagation artifact for one (query, out_len) pair.
+
+    The sparse executor (:mod:`repro.core.sparse`) needs exactly one fact
+    per source to turn per-tick dirty masks into dirty *output segments*:
+    how far a change spreads through the query DAG.  That is the halo
+    contract read backwards — window/interp/shift ops widen dirty spans by
+    the same lookback/lookahead extents they demand as halo — so the plan
+    is derived entirely from :class:`InputSpec` (no second DAG walk).
+    """
+
+    out_len: int                      # segment length in output ticks
+    out_prec: int
+    specs: Dict[str, ChangeSpec]      # per input NAME
+
+
+def plan_change(qp: "QueryPlan") -> ChangePlan:
+    """Derive the change-propagation plan from a query's halo contracts."""
+    specs = {name: ChangeSpec(lookback=s.left_halo * s.prec,
+                              lookahead=s.right_halo * s.prec, prec=s.prec)
+             for name, s in qp.input_specs.items()}
+    return ChangePlan(out_len=qp.out_len, out_prec=qp.out_prec, specs=specs)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,371 @@
+"""Change-compressed sparse execution (paper §5's loop-counter trick on TPU).
+
+TiLT's LLVM backend skips redundant work with data-dependent loop counters:
+temporal expressions are only evaluated where the underlying signal actually
+*changed*.  Data-dependent control flow doesn't exist on TPU, so this module
+recasts the trick as a **static-shape segment gather** over the dense
+snapshot grids the rest of the stack uses:
+
+1. **Dirty masks.**  Per source, :func:`source_dirty` diffs every tick's
+   ``(value, valid)`` snapshot against the previous tick (the first tick
+   diffs against a carried 1-tick snapshot of the previous chunk, or is
+   forced dirty at stream start).  A tick is *clean* iff the temporal
+   object held its value — the same change-compression
+   :func:`repro.core.stream.grid_to_events` applies on egress.  Callers may
+   instead supply an explicit change-event channel (``dirty=`` argument).
+2. **Dilation.**  A changed input tick at time ``t`` can only alter outputs
+   in ``[t − lookahead, t + lookback]`` — the reverse image of the lineage
+   interval boundary resolution computes.  :class:`repro.core.plan.ChangePlan`
+   derives these spans from the existing halo contracts
+   (:class:`repro.core.plan.InputSpec`), so window/interp/shift ops widen
+   dirty spans by exactly the extents they demand as halo.
+3. **Segment compaction.**  The chunk timeline is cut into segments of
+   ``exe.out_len`` output ticks (one partition each).  A segment is dirty
+   iff any dirty input tick lands in its dilated lineage — a static-index
+   range query over a cumulative sum of the dirty mask.  Dirty segments are
+   gathered — with their full halo windows, via the planned
+   :class:`~repro.core.plan.InputSpec` contract — into a compacted buffer
+   whose capacity is **bucketed to the next power of two**
+   (:func:`bucket_capacity`), so at most ``log2(n_segments)+1`` distinct
+   shapes ever reach jit and the executable cache stays warm however the
+   change rate fluctuates between chunks.
+4. **Compute + scatter.**  The fused partition body runs ``vmap``-ped over
+   the compacted segments only — bit-identical inputs to what
+   :func:`repro.core.parallel.partition_run` would slice for the same
+   partitions — and results scatter back over the chunk.  Clean segments
+   take the *hold* value: every tick of a clean segment provably equals the
+   previous output tick (its whole lineage window saw zero changes, so the
+   window content is shift-invariant there), hence the last tick of the
+   nearest preceding dirty segment — or the carried last output at a chunk
+   boundary — fills them.
+
+Exactness: dirty segments are computed by the same traced body on
+bit-identical inputs, and clean-segment holds are implied by φ-semantics,
+so sparse ≡ dense *bit-for-bit on the same partitioning*; across different
+partitionings the usual float-association caveat applies (exact for
+integer-valued data — see repro/multiquery/__init__.py).  NaN payloads
+compare unequal to themselves and are therefore always dirty
+(conservative, never wrong).
+
+When dense still wins: the sparse path adds O(T) mask/cumsum work, a
+gather, and a halo's worth of recomputation per dirty segment
+(``(out_len + halo) / out_len`` overhead).  At high change rates (≳50% of
+segments dirty) or for halo-dominated segments (window ≫ out_len) the
+compaction saves nothing and the overhead makes dense execution faster —
+pick ``out_len`` a few× the deepest window and keep sparse mode for the
+<10%-dirty streams it is built for (fraud, dashboards, sensor fan-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .stream import SnapshotGrid
+
+__all__ = ["source_dirty", "bucket_capacity", "segment_mask", "sparse_run"]
+
+
+# ---------------------------------------------------------------------------
+# dirty masks
+# ---------------------------------------------------------------------------
+
+def source_dirty(value, valid, prev: Optional[tuple] = None) -> jax.Array:
+    """Per-tick dirty mask of one source grid (time axis 0).
+
+    Tick ``i`` is dirty iff its ``(value, valid)`` snapshot differs from
+    tick ``i-1``'s.  ``prev`` is a 1-tick ``(value, valid)`` snapshot the
+    first tick diffs against (the carried last tick of the previous chunk);
+    with ``prev=None`` the first tick is unconditionally dirty (stream
+    start).  Value comparison is raw — garbage at φ ticks counts as change
+    — which is conservative and keeps the mask independent of φ encoding.
+    """
+    if prev is None:
+        pv = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x[:1]), value)
+        pm = jnp.zeros((1,), bool)
+    else:
+        pv, pm = prev
+    d = valid != jnp.concatenate([pm, valid[:-1]])
+    for x, p in zip(jax.tree_util.tree_leaves(value),
+                    jax.tree_util.tree_leaves(pv)):
+        neq = x != jnp.concatenate([p.astype(x.dtype), x[:-1]], axis=0)
+        if neq.ndim > 1:
+            neq = neq.reshape(neq.shape[0], -1).any(axis=1)
+        d = d | neq
+    if prev is None:
+        d = d.at[0].set(True)
+    return d
+
+
+def bucket_capacity(n: int, n_max: int) -> int:
+    """Power-of-two compaction capacity ≥ ``max(n, 1)``, clipped to
+    ``n_max`` — the bucketing policy that bounds the number of distinct
+    shapes the jitted sparse step is traced for."""
+    return min(1 << max(n - 1, 0).bit_length(), max(n_max, 1))
+
+
+# ---------------------------------------------------------------------------
+# dirty-segment resolution (static index ranges + one cumsum range query)
+# ---------------------------------------------------------------------------
+
+def seg_ranges(lookback_t: int, lookahead_t: int, prec: int, grid_t0: int,
+               out_t0: int, out_prec: int, seg_len: int, n_segs: int):
+    """Half-open input-tick ranges ``[i_lo, i_hi1)`` per output segment: the
+    input ticks whose change can dirty that segment (dilated lineage).
+    Pure planning arithmetic — numpy, affine in the segment index.
+
+    The hold rule compares each output tick to the *previous output tick*,
+    one ``out_prec`` stride back, so clean ticks need the input constant
+    over their whole lineage **shifted back one stride**: a dirty input
+    tick at time ``t`` (its held value changes inside ``(t − prec, t]``)
+    can alter outputs ``τ`` with ``t − lookahead − prec < τ <
+    t + lookback + out_prec`` — both bounds open, which is what keeps the
+    carried dirty tail of the chunked runners at exactly ``left_halo``
+    ticks.  With integer times the open bounds become the ``±1`` below;
+    for ``out_prec == prec`` this reduces to the plain lineage interval.
+    """
+    k = np.arange(n_segs, dtype=np.int64)
+    # first output time of segment k is out_t0 + (k·S+1)·q; a dirty tick
+    # affects it iff t > τ_min − lookback − q, i.e. t ≥ τ_min+1−lookback−q
+    lo_t = out_t0 + k * seg_len * out_prec + 1 - lookback_t
+    # last output time is out_t0 + (k+1)·S·q; affected iff t < τ_max +
+    # lookahead + p, i.e. t ≤ τ_max + lookahead + p − 1
+    hi_t = out_t0 + (k + 1) * seg_len * out_prec + lookahead_t + prec - 1
+    i_lo = -(-(lo_t - grid_t0) // prec) - 1          # ceil_index
+    i_hi1 = (hi_t - grid_t0) // prec                 # floor_index + 1
+    return i_lo, i_hi1
+
+
+@jax.jit
+def range_any(dirty: jax.Array, i_lo: jax.Array, i_hi1: jax.Array):
+    """``any(dirty[i_lo[k]:i_hi1[k]])`` per segment, via one cumsum."""
+    c = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                         jnp.cumsum(dirty.astype(jnp.int32))])
+    L = dirty.shape[0]
+    a = jnp.clip(i_lo, 0, L)
+    b = jnp.clip(i_hi1, 0, L)
+    return (c[b] - c[jnp.minimum(a, b)]) > 0
+
+
+def _gather_starts(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
+                   n_parts: int) -> Dict[str, jax.Array]:
+    """Per-input start index of every segment's halo window in the supplied
+    grid (may run off either end: the gather φ-pads, like ``_slice_pad``)."""
+    span = exe.out_len * exe.out_prec
+    starts = {}
+    for name, spec in exe.input_specs.items():
+        g = inputs[name]
+        if g.prec != spec.prec:
+            raise ValueError(f"input {name}: grid precision {g.prec} != "
+                             f"planned precision {spec.prec}")
+        if (out_t0 + spec.t0 - g.t0) % spec.prec:
+            raise ValueError(
+                f"partition window start {out_t0 + spec.t0} misaligned with "
+                f"input grid (t0={g.t0}, prec={g.prec})")
+        if span % spec.prec:
+            # same guard partition_run hits on its k>=1 windows
+            raise ValueError(
+                f"input {name}: segment span {span} not a multiple of "
+                f"input precision {spec.prec}")
+        k = np.arange(n_parts, dtype=np.int64)
+        starts[name] = jnp.asarray(
+            (out_t0 + k * span + spec.t0 - g.t0) // spec.prec)
+    return starts
+
+
+def segment_mask(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
+                 n_parts: int, dirty: Optional[Dict[str, jax.Array]] = None,
+                 force_first: bool = True) -> jax.Array:
+    """Dirty mask over ``n_parts`` output segments of ``exe.out_len`` ticks.
+
+    ``dirty`` optionally supplies explicit per-input change masks (aligned
+    to each supplied grid) — the change-event-channel path; otherwise masks
+    come from :func:`source_dirty` on the grids themselves.  With
+    ``force_first`` the first segment is always dirty (the hold-fill base
+    case when no carried output seeds the chunk).
+    """
+    cp = _change_plan(exe)
+    S, q = exe.out_len, exe.out_prec
+    seg = jnp.zeros((n_parts,), bool)
+    k = np.arange(n_parts, dtype=np.int64)
+    tau_min = out_t0 + k * S * q + q        # first output time per segment
+    tau_max = out_t0 + (k + 1) * S * q      # last output time per segment
+    for name, spec in exe.input_specs.items():
+        g = inputs[name]
+        d = (dirty[name] if dirty is not None and name in dirty
+             else source_dirty(g.value, g.valid))
+        sp = cp.specs[name]
+        i_lo, i_hi1 = seg_ranges(sp.lookback, sp.lookahead, spec.prec, g.t0,
+                                 out_t0, q, S, n_parts)
+        seg = seg | range_any(d, jnp.asarray(i_lo), jnp.asarray(i_hi1))
+        # the supplied grid's edges are virtual changes: beyond-grid reads
+        # are φ, so the real→φ transition one tick past the end (and the
+        # φ→real transition at tick 0) enters nearby lineages — outputs
+        # whose dilated lineage (open interval, as in seg_ranges) covers
+        # an edge must compute, or lookahead queries would hold stale
+        # values where dense execution yields φ
+        for t_edge in (g.t0 + spec.prec,
+                       g.t0 + (g.valid.shape[0] + 1) * spec.prec):
+            hit = ((tau_max > t_edge - sp.lookahead - spec.prec)
+                   & (tau_min < t_edge + sp.lookback + q))
+            seg = seg | jnp.asarray(hit)
+    if not exe.input_specs:
+        seg = jnp.ones((n_parts,), bool)  # input-free (const) query: dense
+    if force_first:
+        seg = seg.at[0].set(True)
+    return seg
+
+
+def _change_plan(exe):
+    cp = getattr(exe, "change_plan", None)
+    if cp is None:
+        raise ValueError(
+            "query was not compiled for sparse execution — pass "
+            "sparse=True to compile_query to attach a ChangePlan")
+    return cp
+
+
+# ---------------------------------------------------------------------------
+# the staged gather → vmapped body → scatter/hold step
+# ---------------------------------------------------------------------------
+
+def _bc(mask, x):
+    """Broadcast a leading-axis mask over the trailing dims of ``x``."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+
+
+def staged_step(exe, n_segs: int, capacity: int):
+    """The jitted sparse chunk step for a fixed (segment count, compaction
+    capacity) geometry — cached on the CompiledQuery so repeated chunks with
+    the same bucket reuse the compiled executable.
+
+    ``step(flat, starts, seg_dirty, seed_v, seed_m)`` takes the full input
+    grids (``(value, valid)`` in sorted-name order), per-input segment start
+    indices, the dirty-segment mask and a 1-tick hold seed; it returns the
+    chunk output ``(value, valid)`` plus the new seed (the chunk's last
+    output tick).
+    """
+    cache = exe.__dict__.setdefault("_sparse_step_cache", {})
+    key = (n_segs, capacity)
+    if key in cache:
+        return cache[key]
+
+    names = sorted(exe.input_specs)
+    specs = exe.input_specs
+    S = exe.out_len
+
+    def step(flat, starts, seg_dirty, seed_v, seed_m):
+        seg_ids = jnp.nonzero(seg_dirty, size=capacity, fill_value=0)[0]
+        gath = []
+        for name, (v, m) in zip(names, flat):
+            L = specs[name].length
+            st = jnp.take(starts[name], seg_ids)            # (C,)
+            idx = st[:, None] + jnp.arange(L)[None, :]      # (C, L)
+            T = m.shape[0]
+            ok = (idx >= 0) & (idx < T)
+            idxc = jnp.clip(idx, 0, T - 1)
+            gm = jnp.take(m, idxc) & ok
+
+            def gather(x, ok=ok, idxc=idxc):
+                gx = jnp.take(x, idxc, axis=0)
+                return jnp.where(_bc(ok, gx), gx, jnp.zeros((), x.dtype))
+
+            gath.append((jax.tree_util.tree_map(gather, v), gm))
+
+        def one(*f):
+            return exe.trace_fn(dict(zip(names, f)))
+
+        out_v, out_m = jax.vmap(one)(*gath)                 # (C, S, ...)
+
+        # scatter compacted results back over the segment axis
+        pos = jnp.clip(jnp.cumsum(seg_dirty) - 1, 0, capacity - 1)
+        full_v = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, pos, axis=0), out_v)      # (n_segs, S, ...)
+        full_m = jnp.take(out_m, pos, axis=0)
+
+        # hold fill: clean segments take the last tick of the nearest
+        # preceding dirty segment, or the carried seed before any
+        prev_d = jax.lax.cummax(
+            jnp.where(seg_dirty, jnp.arange(n_segs), -1))
+        src = jnp.clip(prev_d, 0, n_segs - 1)
+        has = prev_d >= 0
+
+        def hold(x, sv):
+            hx = jnp.take(x[:, -1], src, axis=0)     # (n_segs, ...)
+            return jnp.where(_bc(has, hx), hx, sv[None].astype(x.dtype))
+
+        hv = jax.tree_util.tree_map(hold, full_v, seed_v)
+        hm = jnp.where(has, jnp.take(full_m[:, -1], src), seed_m)
+
+        ov = jax.tree_util.tree_map(
+            lambda f, h: jnp.where(_bc(seg_dirty, f), f, h[:, None]),
+            full_v, hv)
+        om = jnp.where(seg_dirty[:, None], full_m, hm[:, None])
+
+        ov = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_segs * S,) + x.shape[2:]), ov)
+        om = om.reshape(n_segs * S)
+        new_seed = (jax.tree_util.tree_map(lambda x: x[-1], ov), om[-1])
+        return ov, om, new_seed
+
+    cache[key] = jax.jit(step)
+    return cache[key]
+
+
+def zero_seed(exe, flat):
+    """A φ hold seed shaped like one output tick (used when no carried
+    output exists; the forced-dirty first segment makes it unread)."""
+    names = sorted(exe.input_specs)
+    leaves, treedef = jax.tree_util.tree_flatten(flat)
+    shapes = (str(treedef),
+              tuple((x.shape, str(x.dtype)) for x in leaves))
+    cache = exe.__dict__.setdefault("_sparse_seed_cache", {})
+    if shapes not in cache:
+        avals = {}
+        for name, (v, m) in zip(names, flat):
+            L = exe.input_specs[name].length
+            avals[name] = (
+                jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct((L,) + x.shape[1:],
+                                                   x.dtype), v),
+                jax.ShapeDtypeStruct((L,), jnp.bool_))
+        out_v, out_m = jax.eval_shape(exe.trace_fn, avals)
+        cache[shapes] = (
+            jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape[1:], a.dtype), out_v),
+            jnp.asarray(False))
+    return cache[shapes]
+
+
+# ---------------------------------------------------------------------------
+# entry point: the change-compressed mirror of partition_run
+# ---------------------------------------------------------------------------
+
+def sparse_run(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
+               n_parts: int, dirty: Optional[Dict[str, jax.Array]] = None
+               ) -> SnapshotGrid:
+    """Run ``n_parts`` partitions of ``exe.out_len`` output ticks starting
+    at ``out_t0`` — the change-compressed mirror of
+    :func:`repro.core.parallel.partition_run`: only partitions whose dilated
+    input lineage saw a change are computed; the rest hold.
+
+    ``exe`` must be compiled with ``sparse=True``.  ``dirty`` optionally
+    supplies explicit per-input change masks (one bool per tick of the
+    supplied grid) in place of the value diff.  The single data-dependent
+    decision — how many segments are dirty — is resolved on the host and
+    bucketed to a power of two, so the jitted step's shapes stay static.
+    """
+    _change_plan(exe)
+    names = sorted(exe.input_specs)
+    seg_dirty = segment_mask(exe, inputs, out_t0, n_parts, dirty=dirty)
+    n = int(jnp.sum(seg_dirty))
+    cap = bucket_capacity(n, n_parts)
+    step = staged_step(exe, n_parts, cap)
+    flat = [(inputs[nm].value, inputs[nm].valid) for nm in names]
+    starts = _gather_starts(exe, inputs, out_t0, n_parts)
+    seed_v, seed_m = zero_seed(exe, flat)
+    ov, om, _ = step(flat, starts, seg_dirty, seed_v, seed_m)
+    return SnapshotGrid(value=ov, valid=om, t0=out_t0, prec=exe.out_prec)

@@ -5,6 +5,7 @@ Runs exactly the entry point a user would (``python -m benchmarks.run
 <section>``) with REPRO_BENCH_EVENTS shrunk to a few thousand events — a
 compile-and-one-chunk pass, not a measurement.
 """
+import json
 import os
 import subprocess
 import sys
@@ -52,3 +53,26 @@ def test_fig_halo_depth_smoke():
         assert f"_s{s}," in out, out
     # the deep-window multi-hop corner — rejected at seed — must run
     assert "hops=4" in out, out
+
+
+def test_fig_sparse_smoke_and_json_results():
+    """The change-rate sweep must report dense + sparse rows at every rate
+    and write the machine-readable BENCH_figsparse.json next to the stdout
+    table (rows with parsed derived columns + config)."""
+    path = os.path.join(REPO, "BENCH_figsparse.json")
+    if os.path.exists(path):
+        os.remove(path)
+    out = _run_section("figsparse")
+    for r in (1, 10, 50, 100):
+        assert f"figsparse_dense_r{r}," in out, out
+        assert f"figsparse_sparse_r{r}_" in out, out
+    assert os.path.exists(path), out
+    doc = json.load(open(path))
+    assert doc["section"] == "figsparse"
+    assert doc["config"]["events"] == 4096
+    sparse_rows = [r for r in doc["rows"] if r.get("mode") == "sparse"]
+    assert sparse_rows and all("compact" in r and "speedup" in r
+                               for r in sparse_rows), doc["rows"]
+    # at 1% change rate the sweep must actually compact
+    assert min(r["compact"] for r in sparse_rows
+               if r["rate"] == 0.01) < 0.5, sparse_rows

@@ -160,3 +160,64 @@ def test_keyed_engine_rejects_lookahead():
     exe = qc.compile_query(q.node, out_len=32, pallas=False)
     with pytest.raises(NotImplementedError, match="lookahead"):
         KeyedEngine(exe, n_keys=8)
+
+
+# -- restore() validation: every checkpoint/engine mismatch must raise a
+#    clear ValueError up front, not an opaque shape error in the next step
+
+
+def _ckpt_engine(n_keys=8, sparse=False):
+    s = TStream.source("a", keyed=True)
+    exe = qc.compile_query(s.window(16).mean().node, out_len=32,
+                           pallas=False, sparse=sparse)
+    eng = KeyedEngine(exe, n_keys=n_keys, sparse=sparse)
+    chunk = {"a": keyed_grid(np.ones((n_keys, 32), np.float32),
+                             np.ones((n_keys, 32), bool))}
+    eng.step(chunk)
+    return exe, eng
+
+
+def test_restore_rejects_wrong_key_count():
+    exe, eng = _ckpt_engine(n_keys=8)
+    other = KeyedEngine(exe, n_keys=4)
+    with pytest.raises(ValueError, match=r"tail shape.*n_keys"):
+        other.restore(eng.state())
+
+
+def test_restore_rejects_unknown_input_names():
+    exe, eng = _ckpt_engine()
+    state = eng.state()
+    state["bogus"] = state.pop("a")
+    with pytest.raises(ValueError, match="unknown=\\['bogus'\\]"):
+        KeyedEngine(exe, n_keys=8).restore(state)
+
+
+def test_restore_rejects_wrong_tail_length():
+    """A checkpoint from a different query plan (different halo) must be
+    named as such, not fail later inside the jitted step."""
+    exe, eng = _ckpt_engine()
+    s = TStream.source("a", keyed=True)
+    exe64 = qc.compile_query(s.window(64).mean().node, out_len=32,
+                             pallas=False)
+    with pytest.raises(ValueError, match="left_halo"):
+        KeyedEngine(exe64, n_keys=8).restore(eng.state())
+
+
+def test_restore_rejects_misaligned_stream_clock():
+    exe, eng = _ckpt_engine()
+    state = eng.state()
+    state["__t"] = 17  # not a multiple of the 32-tick partition span
+    with pytest.raises(ValueError, match="stream clock"):
+        KeyedEngine(exe, n_keys=8).restore(state)
+    state["__t"] = -32
+    with pytest.raises(ValueError, match="stream clock"):
+        KeyedEngine(exe, n_keys=8).restore(state)
+
+
+def test_restore_rejects_sparse_dense_mismatch():
+    exe_s, eng_s = _ckpt_engine(sparse=True)
+    exe_d, eng_d = _ckpt_engine(sparse=False)
+    with pytest.raises(ValueError, match="dense engine cannot restore"):
+        KeyedEngine(exe_d, n_keys=8).restore(eng_s.state())
+    with pytest.raises(ValueError, match="sparse engine cannot restore"):
+        KeyedEngine(exe_s, n_keys=8, sparse=True).restore(eng_d.state())

@@ -132,6 +132,54 @@ def test_shard_map_multi_hop_bit_identical_to_partition_run():
     assert "MULTIHOP_OK" in out
 
 
+def test_sparse_run_matches_shard_map_run():
+    """Change-compressed execution vs SPMD time-sharded execution: dirty
+    spans crossing shard boundaries (a multi-hop-deep window) must agree
+    bit-for-bit on integer-valued data with both partition_run and
+    shard_map_run over the same partitioning."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as qc
+        from repro.core.frontend import TStream
+        from repro.core.parallel import partition_run, shard_map_run
+        from repro.core.sparse import segment_mask, sparse_run
+        from repro.core.stream import SnapshotGrid
+
+        assert len(jax.devices()) == 8
+        N, n_shards = 512, 8
+        # piecewise-constant integers; the change at tick 300 sits mid
+        # shard 4 and its 100-tick lookback span crosses shard boundaries
+        vals = np.full(N, 11.0, np.float32)
+        vals[140:] = 4.0
+        vals[300:] = 27.0
+        valid = np.ones(N, bool)
+        valid[200:230] = False
+        g = {"in": SnapshotGrid(value=jnp.asarray(vals),
+                                valid=jnp.asarray(valid), t0=0, prec=1)}
+        s = TStream.source("in", prec=1)
+        q = s.window(100).sum()   # halo 100 > core 64: 2-hop exchange
+        exe = qc.compile_query(q.node, out_len=N // n_shards,
+                               pallas=False, sparse=True)
+
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        ref = partition_run(exe, g, 0, n_shards)
+        shard = shard_map_run(exe, g, mesh, axis="data")
+        got = sparse_run(exe, g, 0, n_shards)
+        mask = np.asarray(segment_mask(exe, g, 0, n_shards))
+        assert 1 < mask.sum() < n_shards, mask.astype(int)  # real compaction
+        for other, name in ((shard, "shard"), (got, "sparse")):
+            m1, m2 = np.asarray(ref.valid), np.asarray(other.valid)
+            assert np.array_equal(m1, m2), (name, m1.sum(), m2.sum())
+            v1, v2 = np.asarray(ref.value), np.asarray(other.value)
+            assert np.array_equal(v1[m1], v2[m1]), name
+        print("SPARSE_SHARD_OK")
+    """)
+    assert "SPARSE_SHARD_OK" in out
+
+
 def test_shard_union_run_deep_windows_match_session():
     """Time-sharded union execution: merged multi-query halo contracts
     deeper than the per-shard span (4-hop) must match the chunked
