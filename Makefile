@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow test-multidev bench bench-sparse
+.PHONY: test test-fast test-slow test-multidev bench bench-sparse \
+	bench-policy clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -28,3 +29,13 @@ bench:
 # BENCH_figsparse.json alongside the stdout table
 bench-sparse:
 	$(PYTHON) -m benchmarks.run figsparse
+
+# execution-policy matrix sweep (the unified runner across body × keys ×
+# dag points); writes BENCH_figpolicy.json (uploaded as a CI artifact like
+# the other sections)
+bench-policy:
+	$(PYTHON) -m benchmarks.run figpolicy
+
+# drop the gitignored machine-readable benchmark results
+clean-bench:
+	rm -f BENCH_*.json

@@ -1,0 +1,144 @@
+"""Execution-policy sweep: the unified runner across the policy matrix.
+
+One workload — a bursty piecewise-constant dashboard/fraud stream where
+~2% of ticks change — driven through several points of the
+``ExecPolicy(body × keys × placement × dag)`` space by the *same*
+unified chunked runner (repro/engine/runner.py):
+
+* ``dense×single×local×solo``   — the chunked baseline (StreamRunner path)
+* ``sparse×single×local×solo``  — segment compaction (SparseStreamRunner)
+* ``dense×vmapped×local×solo``  — K keyed sub-streams (KeyedEngine path)
+* ``sparse×vmapped×local×solo`` — key compaction (mostly-idle keys skip)
+* ``dense×single×local×union``  — N queries, shared union DAG (session)
+* ``sparse×single×local×union`` — merged ChangePlan: clean chunks skip the
+  whole union evaluation
+
+Derived columns report throughput (events/s through the policy's work
+axis), the measured compaction ratio for sparse points, and the speedup
+over the dense point with the same keys/dag axes.  Mesh placements are
+covered by the multidev tests and ``benchmarks/fig_halo_depth.py`` (this
+container is 1 core; an in-process 8-device host mesh measures dispatch
+overhead, not parallel speedup).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.stream import SnapshotGrid
+from repro.engine import ExecPolicy, Runner, keyed_grid
+from repro.multiquery import union_runner
+
+from .common import row
+from .fig_sparse import burst_stream
+
+REPEATS = 3
+K = 32          # keyed sub-streams (1 in 8 active)
+RATE = 0.02     # change rate of active streams
+SEGS_PER_CHUNK = 8
+
+
+def _pow2_ticks(n_events: int) -> int:
+    n = max(4096, min(n_events, 1 << 20))
+    return 1 << (n.bit_length() - 1)
+
+
+def _trend(s):
+    return (s.window(32).mean()
+            .join(s.window(64).mean(), lambda a, b: a - b)
+            .where(lambda d: d > 0))
+
+
+def _bands(s):
+    return s.window(48).max().join(s, lambda hi, x: hi - x)
+
+
+def _bench(mk_runner, grids, n_chunks) -> float:
+    r = mk_runner()
+    out = r.run(grids, n_chunks)           # warmup (compile)
+    leaf = out if isinstance(out, SnapshotGrid) else next(iter(out.values()))
+    jax.block_until_ready(leaf.valid)
+    best = []
+    for _ in range(REPEATS):
+        r = mk_runner()
+        t0 = time.perf_counter()
+        out = r.run(grids, n_chunks)
+        leaf = (out if isinstance(out, SnapshotGrid)
+                else next(iter(out.values())))
+        jax.block_until_ready(leaf.valid)
+        best.append(time.perf_counter() - t0)
+    return min(best)
+
+
+def _compaction(exe_or_spec_cache) -> float:
+    """Smallest compaction capacity the staged steps were built for,
+    relative to the work-unit count — the measured skip ratio proxy."""
+    caps = [k[-1] for k in exe_or_spec_cache
+            if isinstance(k, tuple) and k[0] == "compute"]
+    units = [k[1] * k[2] for k in exe_or_spec_cache
+             if isinstance(k, tuple) and k[0] == "compute"]
+    return min(caps) / max(units) if caps else 1.0
+
+
+def run(n_events: int = 1_000_000):
+    N = _pow2_ticks(n_events)
+    seg = max(128, N // 1024)
+    n_chunks = N // (seg * SEGS_PER_CHUNK)
+    single_vals = burst_stream(N, RATE, seed=3)
+    keyed_vals = np.zeros((K, N), np.float32)
+    for k in range(0, K, 8):               # 1 in 8 keys active
+        keyed_vals[k] = burst_stream(N, RATE, seed=10 + k)
+    g1 = {"in": SnapshotGrid(value=jax.numpy.asarray(single_vals),
+                             valid=jax.numpy.ones(N, bool), t0=0, prec=1)}
+    gk = {"in": keyed_grid(keyed_vals, np.ones((K, N), bool))}
+
+    dense_dt = {}
+    for keys, dag in (("single", "solo"), ("vmapped", "solo"),
+                      ("single", "union")):
+        keyed = keys == "vmapped"
+        s = TStream.source("in", prec=1, keyed=keyed)
+        grids, base_ev = (gk, K * N) if keyed else (g1, N)
+        for body in ("dense", "sparse"):
+            ev = base_ev
+            policy = ExecPolicy(body=body, keys=keys, dag=dag)
+            sparse = body == "sparse"
+            if dag == "solo":
+                exe = qc.compile_query(_trend(s).node, out_len=seg,
+                                       pallas=False, sparse=sparse)
+                cache = exe.__dict__.setdefault("_runner_step_cache", {})
+
+                def mk(exe=exe, policy=policy, keyed=keyed):
+                    return Runner(exe, policy, n_keys=K if keyed else None,
+                                  segs_per_chunk=SEGS_PER_CHUNK)
+            else:
+                queries = {"trend": _trend(s), "bands": _bands(s)}
+                proto = union_runner(queries, seg, policy, pallas=False,
+                                     segs_per_chunk=SEGS_PER_CHUNK)
+                cache = proto.spec.step_cache
+
+                def mk(proto=proto, policy=policy):
+                    proto.reset()
+                    return proto
+                ev = ev * len(queries)
+            dt = _bench(mk, grids, n_chunks)
+            label = f"figpolicy_{body}_{keys}_{dag}"
+            derived = (f"{ev / dt / 1e6:.1f}Mev/s,"
+                       f"policy={policy.describe()}")
+            extra = dict(events=ev, chunks=n_chunks, seg_len=seg)
+            if sparse:
+                compact = _compaction(cache)
+                speedup = dense_dt[(keys, dag)] / dt
+                derived += f",compact={compact:.3f},speedup={speedup:.2f}"
+                extra.update(body="sparse")
+            else:
+                dense_dt[(keys, dag)] = dt
+                extra.update(body="dense")
+            row(label, dt * 1e6, derived, **extra)
+
+
+if __name__ == "__main__":
+    run()

@@ -42,7 +42,7 @@ def main() -> None:
     from benchmarks import (common, fig7_throughput, fig8_keyed_scaling,
                             fig8_ysb_scaling, fig9_latency, fig10_fusion,
                             fig_halo_depth, fig_multiquery_sharing,
-                            fig_sparse, roofline_table)
+                            fig_policy, fig_sparse, roofline_table)
 
     sections = {
         "fig7": lambda: fig7_throughput.run(n),
@@ -53,6 +53,7 @@ def main() -> None:
         "figmq": lambda: fig_multiquery_sharing.run(min(n, 1_000_000)),
         "fighalo": lambda: fig_halo_depth.run(min(n, 1_000_000)),
         "figsparse": lambda: fig_sparse.run(min(n, 1_000_000)),
+        "figpolicy": lambda: fig_policy.run(min(n, 1_000_000)),
         "roofline": roofline_table.run,
     }
     for name, fn in sections.items():

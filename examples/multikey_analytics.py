@@ -1,16 +1,20 @@
 """Multi-key, multi-query streaming analytics.
 
 Part 1 — per-user fraud detection over many concurrent keyed sub-streams
-(paper §6.2's partitioned-stream parallelism): the KeyedEngine advances all
-users at once, one vmapped XLA computation per time partition, carrying only
-each user's halo tail between chunks.
+(paper §6.2's partitioned-stream parallelism): the unified policy runner
+(``Runner`` + ``ExecPolicy(keys="vmapped")``, the successor of the
+deprecated KeyedEngine) advances all users at once, one vmapped XLA
+computation per time partition, carrying only each user's halo tail
+between chunks.  Swapping ``body="sparse"`` or ``placement=mesh(...)``
+into the policy composes change-compressed execution and key-axis
+sharding onto the same runner — no separate entry points.
 
 Part 2 — the serving scenario on top: a *dashboard fan-out* where several
 queries (trend up/down, band breakout, momentum — differing only in their
 final heads) watch the same keyed price source.  One MultiQuerySession
-serves all of them from a single pass per chunk: the shared window
-aggregates are planned and evaluated once, per-query heads fan out from
-them (repro/multiquery).
+(the ``dag="union"`` corner of the policy space) serves all of them from a
+single pass per chunk: the shared window aggregates are planned and
+evaluated once, per-query heads fan out from them (repro/multiquery).
 
 Run:  PYTHONPATH=src python examples/multikey_analytics.py [n_users]
 """
@@ -23,7 +27,7 @@ import numpy as np
 from repro.core import compile as qc
 from repro.core.frontend import TStream
 from repro.data import apps as A
-from repro.engine import KeyedEngine, keyed_grid
+from repro.engine import ExecPolicy, Runner, keyed_grid
 from repro.multiquery import MultiQuerySession
 
 N_TICKS = 50_000
@@ -39,6 +43,7 @@ def fraud_demo(n_users: int = 64):
     q = s.join(thr, lambda x, t: x - t).where(lambda e: e > 0)
 
     exe = qc.compile_query(q.node, out_len=N_TICKS // N_PARTS)
+    policy = ExecPolicy(keys="vmapped")    # dense × vmapped × local × solo
 
     rng = np.random.default_rng(0)
     amounts = rng.lognormal(3.0, 1.0, (n_users, N_TICKS)).astype(np.float32)
@@ -47,11 +52,11 @@ def fraud_demo(n_users: int = 64):
 
     grid = {"amt": keyed_grid(amounts, np.ones((n_users, N_TICKS), bool))}
 
-    engine = KeyedEngine(exe, n_keys=n_users)
+    engine = Runner(exe, policy, n_keys=n_users)
     out = engine.run(grid, N_PARTS)        # warmup (compile)
     jax.block_until_ready(out.valid)
 
-    engine = KeyedEngine(exe, n_keys=n_users)
+    engine = Runner(exe, policy, n_keys=n_users)
     t0 = time.perf_counter()
     out = engine.run(grid, N_PARTS)
     jax.block_until_ready(out.valid)

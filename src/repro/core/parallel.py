@@ -22,21 +22,27 @@ into three execution strategies:
   the only state.  The state size is the boundary contract — independent of
   stream length — which is what makes long-running queries restartable
   (the tail is checkpointable; see train/checkpoint.py integration).
+
+:class:`StreamRunner` and :class:`SparseStreamRunner` are deprecated thin
+wrappers over the unified policy runner (:mod:`repro.engine.runner`): the
+tail-carry, staging and checkpoint machinery they used to duplicate lives
+there exactly once, composed from the same planning artifacts
+(``InputSpec`` halo contracts, ``ChangePlan`` dilation) these one-shot
+entry points consume.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, Optional
+import warnings
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compile as qcompile
 from . import halo as halo_mod
-from . import sparse as sparse_mod
 from .stream import SnapshotGrid
 
 __all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
@@ -283,7 +289,8 @@ def batch_run(exe: qcompile.CompiledQuery,
 
 @dataclasses.dataclass
 class StreamRunner:
-    """Continuous chunked execution with carried halo state.
+    """Continuous chunked execution with carried halo state (deprecated
+    alias for ``repro.engine.Runner(exe, ExecPolicy())``).
 
     The only cross-chunk state is, per input, the trailing ``left_halo``
     ticks of the previous chunk — i.e. exactly the boundary-resolution
@@ -292,56 +299,32 @@ class StreamRunner:
     """
 
     exe: qcompile.CompiledQuery
-    _tails: Dict[str, tuple] = dataclasses.field(default_factory=dict)
-    _t: int = 0  # absolute time of the next output partition start
+    _runner: object = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
-        for name, s in self.exe.input_specs.items():
-            if s.right_halo > 0:
-                raise NotImplementedError(
-                    "StreamRunner supports lookback-only queries "
-                    f"(input {name} has lookahead)")
+        from ..engine.policy import ExecPolicy
+        from ..engine.runner import Runner
+        warnings.warn(
+            "StreamRunner is deprecated; use repro.engine.Runner with "
+            "ExecPolicy()", DeprecationWarning, stacklevel=3)
+        self._runner = Runner(self.exe, ExecPolicy())
 
     def step(self, chunks: Dict[str, SnapshotGrid]) -> SnapshotGrid:
         """Feed exactly one partition's worth of new core ticks per input."""
-        part_in = {}
-        for name, spec in self.exe.input_specs.items():
-            g = chunks[name]
-            hl, core = spec.left_halo, spec.core
-            assert g.valid.shape[0] == core, (name, g.valid.shape, core)
-            if name in self._tails:
-                tv, tm = self._tails[name]
-            else:  # stream start: φ halo
-                tv = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros((hl,) + x.shape[1:], x.dtype), g.value)
-                tm = jnp.zeros((hl,), bool)
-            fv = jax.tree_util.tree_map(
-                lambda a, b: jnp.concatenate([a, b], axis=0), tv, g.value)
-            fm = jnp.concatenate([tm, g.valid], axis=0)
-            part_in[name] = (fv, fm)
-            if hl:
-                self._tails[name] = (
-                    jax.tree_util.tree_map(lambda x: x[-hl:], fv), fm[-hl:])
-        v, m = self.exe.fn(part_in)
-        out = SnapshotGrid(value=v, valid=m, t0=self._t, prec=self.exe.out_prec)
-        self._t += self.exe.out_len * self.exe.out_prec
-        return out
+        return self._runner.step(chunks)
 
     def state(self) -> Dict[str, tuple]:
         """Checkpointable runner state (host arrays)."""
-        return {k: jax.tree_util.tree_map(np.asarray, v)
-                for k, v in self._tails.items()} | {"__t": self._t}
+        return self._runner.state()
 
     def restore(self, state: Dict) -> None:
-        state = dict(state)  # don't consume the caller's checkpoint
-        self._t = state.pop("__t")
-        self._tails = {k: jax.tree_util.tree_map(jnp.asarray, v)
-                       for k, v in state.items()}
+        self._runner.restore(state, strict=False)
 
 
 @dataclasses.dataclass
 class SparseStreamRunner:
-    """Change-compressed continuous execution (sparse.py, chunked).
+    """Change-compressed continuous execution (deprecated alias for
+    ``repro.engine.Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk)``).
 
     Like :class:`StreamRunner`, but each step feeds ``segs_per_chunk``
     partitions' worth of fresh ticks and only the partitions whose dilated
@@ -360,132 +343,43 @@ class SparseStreamRunner:
 
     exe: qcompile.CompiledQuery
     segs_per_chunk: int = 8
-    _tails: Dict[str, tuple] = dataclasses.field(default_factory=dict)
-    _dirty_tails: Dict[str, jax.Array] = dataclasses.field(
-        default_factory=dict)
-    _prev: Dict[str, tuple] = dataclasses.field(default_factory=dict)
-    _seed: Optional[tuple] = None
-    _t: int = 0
-    _started: bool = False
+    _runner: object = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
+        from ..engine.policy import ExecPolicy
+        from ..engine.runner import Runner
+        warnings.warn(
+            "SparseStreamRunner is deprecated; use repro.engine.Runner "
+            "with ExecPolicy(body='sparse')", DeprecationWarning,
+            stacklevel=3)
         if self.exe.change_plan is None:
             raise ValueError("SparseStreamRunner needs a query compiled "
                              "with sparse=True")
-        if self.segs_per_chunk < 1:
-            raise ValueError("segs_per_chunk must be >= 1")
-        span = self.exe.out_len * self.exe.out_prec
-        for name, s in self.exe.input_specs.items():
-            if s.right_halo > 0:
-                raise NotImplementedError(
-                    "SparseStreamRunner supports lookback-only queries "
-                    f"(input {name} has lookahead)")
-            if span % s.prec:
-                raise ValueError(
-                    f"input {name}: segment span {span} not a multiple of "
-                    f"input precision {s.prec}")
+        self._runner = Runner(self.exe, ExecPolicy(body="sparse"),
+                              segs_per_chunk=self.segs_per_chunk)
 
     def step(self, chunks: Dict[str, SnapshotGrid]) -> SnapshotGrid:
         """Feed ``segs_per_chunk`` partitions' worth of fresh core ticks
         per input; compute only the dirty ones."""
-        exe, n_segs = self.exe, self.segs_per_chunk
-        S, q = exe.out_len, exe.out_prec
-        span = S * q
-        names = sorted(exe.input_specs)
-        cp = exe.change_plan
-        first = not self._started
+        return self._runner.step(chunks)
 
-        for name in names:  # validate everything before touching state
-            core = exe.input_specs[name].core * n_segs
-            if chunks[name].valid.shape[0] != core:
-                raise ValueError(
-                    f"input {name}: chunk length "
-                    f"{chunks[name].valid.shape[0]} != "
-                    f"segs_per_chunk * core = {core}")
-
-        bufs, seg_dirty = {}, jnp.zeros((n_segs,), bool)
-        new_tails, new_dtails, new_prev = {}, {}, {}
-        for name in names:
-            spec = exe.input_specs[name]
-            g = chunks[name]
-            hl, core = spec.left_halo, spec.core * n_segs
-            if name in self._tails:
-                tv, tm = self._tails[name]
-                dt = self._dirty_tails[name]
-            else:  # stream start: φ halo, no recorded changes
-                tv = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros((hl,) + x.shape[1:], x.dtype),
-                    g.value)
-                tm = jnp.zeros((hl,), bool)
-                dt = jnp.zeros((hl,), bool)
-            bv = jax.tree_util.tree_map(
-                lambda a, b: jnp.concatenate([a, b], axis=0), tv, g.value)
-            bm = jnp.concatenate([tm, g.valid], axis=0)
-            bufs[name] = (bv, bm)
-
-            d_chunk = sparse_mod.source_dirty(
-                g.value, g.valid, self._prev.get(name))
-            full_d = jnp.concatenate([dt, d_chunk], axis=0)
-            sp = cp.specs[name]
-            i_lo, i_hi1 = sparse_mod.seg_ranges(
-                sp.lookback, sp.lookahead, spec.prec, grid_t0=-hl * spec.prec,
-                out_t0=0, out_prec=q, seg_len=S, n_segs=n_segs)
-            seg_dirty = seg_dirty | sparse_mod.range_any(
-                full_d, jnp.asarray(i_lo), jnp.asarray(i_hi1))
-
-            total = hl + core
-            new_tails[name] = (
-                jax.tree_util.tree_map(lambda x: x[total - hl:], bv),
-                bm[total - hl:])
-            new_dtails[name] = full_d[full_d.shape[0] - hl:]
-            new_prev[name] = (
-                jax.tree_util.tree_map(lambda x: x[-1:], g.value),
-                g.valid[-1:])
-        if not names:
-            seg_dirty = jnp.ones((n_segs,), bool)
-        if first:
-            seg_dirty = seg_dirty.at[0].set(True)  # hold-fill base case
-
-        n = int(jnp.sum(seg_dirty))
-        cap = sparse_mod.bucket_capacity(n, n_segs)
-        step = sparse_mod.staged_step(exe, n_segs, cap)
-        flat = [bufs[nm] for nm in names]
-        # buffer-relative gather starts: segment k's halo window begins at
-        # buffer tick k * span / prec (the tail supplies segment 0's halo)
-        starts = {nm: jnp.arange(n_segs)
-                  * (span // exe.input_specs[nm].prec) for nm in names}
-        seed = self._seed if self._seed is not None else sparse_mod.zero_seed(
-            exe, flat)
-        ov, om, new_seed = step(flat, starts, seg_dirty, *seed)
-        # commit carried state only after the step succeeded — a raise
-        # above leaves the runner exactly as it was, so the caller can
-        # retry the chunk without losing boundary changes
-        self._tails, self._dirty_tails, self._prev = (
-            new_tails, new_dtails, new_prev)
-        self._seed = new_seed
-        self._started = True
-        out = SnapshotGrid(value=ov, valid=om, t0=self._t, prec=q)
-        self._t += n_segs * span
-        return out
-
-    # -- checkpointing -------------------------------------------------------
+    # -- checkpointing (historical flat format, translated to the unified
+    #    state pytree of the policy runner) ----------------------------------
     def state(self) -> Dict:
         """Checkpointable runner state (host arrays): halo tails + change
         metadata (dirty tails, 1-tick snapshots, hold seed)."""
-        to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)  # noqa: E731
-        return {"tails": {k: to_np(v) for k, v in self._tails.items()},
-                "dirty": {k: np.asarray(v)
-                          for k, v in self._dirty_tails.items()},
-                "prev": {k: to_np(v) for k, v in self._prev.items()},
-                "seed": None if self._seed is None else to_np(self._seed),
-                "__t": self._t}
+        c = self._runner.state()
+        sp = c.pop("__sparse")
+        t = c.pop("__t")
+        return {"tails": c, "dirty": sp["dirty"], "prev": sp["prev"],
+                "seed": sp["seed"].get("__out"), "__t": t}
 
     def restore(self, state: Dict) -> None:
-        to_j = lambda t: jax.tree_util.tree_map(jnp.asarray, t)  # noqa: E731
-        self._t = state["__t"]
-        self._tails = {k: to_j(v) for k, v in state["tails"].items()}
-        self._dirty_tails = {k: jnp.asarray(v)
-                             for k, v in state["dirty"].items()}
-        self._prev = {k: to_j(v) for k, v in state["prev"].items()}
-        self._seed = None if state["seed"] is None else to_j(state["seed"])
-        self._started = True
+        seed = state["seed"]
+        canonical = dict(state["tails"])
+        canonical["__t"] = state["__t"]
+        canonical["__sparse"] = {
+            "dirty": state["dirty"], "prev": state["prev"],
+            "seed": {} if seed is None else {"__out": seed},
+            "started": True}
+        self._runner.restore(canonical, strict=False)

@@ -258,7 +258,17 @@ class ChangePlan:
 
 
 def plan_change(qp: "QueryPlan") -> ChangePlan:
-    """Derive the change-propagation plan from a query's halo contracts."""
+    """Derive the change-propagation plan from a query's halo contracts.
+
+    Works unchanged on a :class:`UnionPlan`: its ``input_specs`` are the
+    *merged* per-source contracts (union of every attached query's
+    bounds), so the derived dilations are the per-input union of the
+    per-query dilations — exactly the merged ChangePlan sparse multi-query
+    execution needs (every output of every query in a segment is clean iff
+    no input changed inside the union-dilated lineage; the per-query
+    stride widening cancels identically for every output precision, see
+    :func:`repro.core.sparse.seg_ranges`).
+    """
     specs = {name: ChangeSpec(lookback=s.left_halo * s.prec,
                               lookahead=s.right_halo * s.prec, prec=s.prec)
              for name, s in qp.input_specs.items()}

@@ -54,6 +54,13 @@ segments dirty) or for halo-dominated segments (window ≫ out_len) the
 compaction saves nothing and the overhead makes dense execution faster —
 pick ``out_len`` a few× the deepest window and keep sparse mode for the
 <10%-dirty streams it is built for (fraud, dashboards, sensor fan-out).
+
+Layering: this module owns the change *mechanics* (dirty masks,
+dilation-range arithmetic, bucketing) and the one-shot
+:func:`sparse_run`; the chunked executors consume :func:`source_dirty` /
+:func:`seg_ranges` / :func:`range_any` / :func:`bucket_capacity` from the
+unified policy runner (:mod:`repro.engine.runner`), which composes them
+with keyed vmapping, per-shard mesh compaction and union DAGs.
 """
 from __future__ import annotations
 
@@ -66,7 +73,8 @@ import numpy as np
 
 from .stream import SnapshotGrid
 
-__all__ = ["source_dirty", "bucket_capacity", "segment_mask", "sparse_run"]
+__all__ = ["source_dirty", "bucket_capacity", "segment_mask", "sparse_run",
+           "seg_ranges", "range_any"]
 
 
 # ---------------------------------------------------------------------------

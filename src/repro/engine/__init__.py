@@ -1,11 +1,18 @@
-"""Keyed multi-stream execution engine.
+"""Execution engine: one policy-driven runner for every chunked strategy.
 
 The third layer of the query pipeline (frontend/IR → plan → codegen →
-**engine**): runs a compiled TiLT query over *K keyed sub-streams ×
-time partitions* — millions of independent per-key timelines (users,
-stock symbols, ad campaigns) advancing chunk by chunk with carried halo
-state, vectorized over the key axis and sharded across a device mesh.
+**engine**): :class:`Runner` advances a compiled TiLT query (or a
+multi-query union DAG) chunk by chunk under an :class:`ExecPolicy` — the
+four orthogonal axes ``body`` (dense | sparse), ``keys`` (single |
+vmapped), ``placement`` (local | mesh) and ``dag`` (solo | union) compose
+freely around a single carried state pytree with one
+checkpoint/restore/validate path.  :class:`KeyedEngine` survives as a
+deprecated alias for ``Runner(exe, ExecPolicy(keys="vmapped"))``.
 """
 from .keyed import KeyedEngine, keyed_grid, wrap_keyed_step
+from .policy import ExecPolicy, MeshPlacement, mesh_placement
+from .runner import BodySpec, Runner, body_spec_of
 
-__all__ = ["KeyedEngine", "keyed_grid", "wrap_keyed_step"]
+__all__ = ["KeyedEngine", "keyed_grid", "wrap_keyed_step",
+           "ExecPolicy", "MeshPlacement", "mesh_placement",
+           "BodySpec", "Runner", "body_spec_of"]

@@ -1,19 +1,19 @@
 """Keyed multi-stream engine: K sub-streams × time partitions (paper §6.2).
 
-The paper's second parallelism axis — *partitioned streams* — composes with
-time partitioning: each key (user, symbol, campaign) owns an independent
-timeline, and the static plan (plan.py) makes every partition of every key
-synchronization-free.  :class:`KeyedEngine` exploits both axes at once:
+.. deprecated::
+    :class:`KeyedEngine` is now a thin wrapper over the unified policy
+    runner — ``Runner(exe, ExecPolicy(keys="vmapped", ...), n_keys=K)``
+    (:mod:`repro.engine.runner`).  It is kept as a deprecated alias for one
+    release; new code should construct the policy directly, which also
+    unlocks the combinations this class historically rejected
+    (``sparse=True`` with ``mesh`` now routes through the per-shard
+    compaction path instead of raising).
 
-* **key axis**: the compiled query's traceable body is ``vmap``-ped over a
-  leading key dimension — one fused XLA computation advances all K keys.
-* **time axis**: like :class:`repro.core.parallel.StreamRunner`, the engine
-  carries, per input, only the trailing ``left_halo`` ticks of the previous
-  chunk — now shaped ``(K, left_halo, ...)``.  State size is the boundary
-  contract × K, independent of stream length, and checkpointable.
-* **devices**: with a mesh, the key axis shards along a named mesh axis via
-  ``shard_map`` — keys never communicate, so the SPMD body needs no
-  collectives at all (cheaper than even the time-sharded ppermute path).
+The execution model is unchanged: the compiled query's traceable body is
+vmapped over a leading key dimension, the only cross-chunk state is the
+per-key halo tail (boundary contract × K, independent of stream length,
+checkpointable), and an optional mesh shards the key axis — keys never
+communicate, so the SPMD body needs no collectives at all.
 
 Ingestion convention: every input grid carries a leading key axis — value
 leaves are ``(K, T, ...)``, validity is ``(K, T)``.  ``SnapshotGrid.t0`` /
@@ -24,17 +24,17 @@ handle exactly).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core import compile as qcompile
-from ..core import ir
-from ..core import sparse as sparse_mod
 from ..core.stream import SnapshotGrid
+from .policy import ExecPolicy, MeshPlacement
+from .runner import Runner
 
 __all__ = ["KeyedEngine", "keyed_grid", "wrap_keyed_step"]
 
@@ -49,8 +49,8 @@ def wrap_keyed_step(step, mesh: Optional[Mesh], axis: str = "data"):
     """Stage a ``(tails, chunks) -> (out, new_tails)`` step for keyed
     execution: shard the leading key axis along ``axis`` when a mesh is
     given (keys never communicate, so the SPMD body needs no collectives),
-    then jit.  Shared by :class:`KeyedEngine` and the multi-query session
-    (repro.multiquery), so both layers stage their chunk step identically.
+    then jit.  Deprecated: the unified runner stages its own steps; kept
+    for external callers building custom keyed steps.
     """
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
@@ -63,23 +63,21 @@ def wrap_keyed_step(step, mesh: Optional[Mesh], axis: str = "data"):
 
 @dataclasses.dataclass
 class KeyedEngine:
-    """Continuous keyed execution with carried per-key halo state.
+    """Continuous keyed execution with carried per-key halo state
+    (deprecated alias for ``Runner(exe, ExecPolicy(keys='vmapped'))``).
 
     ``exe`` must be compiled for the per-partition ``out_len``; queries must
-    be lookback-only (lookahead would delay output — same contract as
-    StreamRunner).  ``mesh`` (optional) shards the key axis along ``axis``;
-    ``n_keys`` must then be divisible by the axis size.
+    be lookback-only (lookahead would delay output — same contract as every
+    chunked runner).  ``mesh`` (optional) shards the key axis along
+    ``axis``; ``n_keys`` must then be divisible by the axis size.
 
     ``sparse=True`` (requires ``compile_query(..., sparse=True)``) enables
-    change-compressed stepping: each step, only the keys whose inputs
-    changed — per-key dirty masks carried across partitions exactly like
-    the halo tails, dilated by the :class:`~repro.core.plan.ChangePlan`
-    contract — are gathered into a power-of-two-bucketed compaction buffer
-    and computed; idle keys hold their previous output tick (see
-    :mod:`repro.core.sparse`).  This is the fraud/dashboard fan-out
-    scenario where >95% of keys are idle per partition.  Sparse mode does
-    not compose with ``mesh`` yet (the key-compaction gather is global
-    across the key axis).
+    change-compressed stepping: only the keys whose inputs changed are
+    gathered into a power-of-two-bucketed compaction buffer and computed;
+    idle keys hold their previous output tick (see
+    :mod:`repro.core.sparse`).  Sparse mode now composes with ``mesh``:
+    the compaction is resolved *per shard* (local nonzero + per-shard
+    capacity buckets), so the gather never crosses devices.
     """
 
     exe: qcompile.CompiledQuery
@@ -87,235 +85,18 @@ class KeyedEngine:
     mesh: Optional[Mesh] = None
     axis: str = "data"
     sparse: bool = False
-    _tails: Dict[str, tuple] = dataclasses.field(default_factory=dict)
-    _t: int = 0  # absolute time of the next output partition start
-    _step_fn: object = dataclasses.field(default=None, repr=False)
-    # sparse-mode state: per-key change metadata carried like the halo
-    _dirty_tails: Dict[str, jax.Array] = dataclasses.field(
-        default_factory=dict)
-    _prev: Dict[str, tuple] = dataclasses.field(default_factory=dict)
-    _seed: Optional[tuple] = dataclasses.field(default=None, repr=False)
-    _started: bool = False
+    _runner: Runner = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
-        for name, s in self.exe.input_specs.items():
-            if s.right_halo > 0:
-                raise NotImplementedError(
-                    "KeyedEngine supports lookback-only queries "
-                    f"(input {name} has lookahead)")
-        if self.mesh is not None and self.n_keys % self.mesh.shape[self.axis]:
-            raise ValueError(
-                f"n_keys={self.n_keys} not divisible by mesh axis "
-                f"'{self.axis}' of size {self.mesh.shape[self.axis]}")
-        if self.sparse:
-            if self.exe.change_plan is None:
-                raise ValueError(
-                    "KeyedEngine(sparse=True) needs a query compiled with "
-                    "sparse=True")
-            if self.mesh is not None:
-                raise NotImplementedError(
-                    "sparse keyed execution does not compose with mesh "
-                    "sharding yet (the key-compaction gather is global)")
-        keyed_inputs = [n.name for n in ir.free_inputs(self.exe.root)
-                        if n.keyed]
-        if keyed_inputs and set(keyed_inputs) != set(self.exe.input_specs):
-            raise ValueError(
-                "query mixes keyed and unkeyed sources: "
-                f"keyed={keyed_inputs}, all={sorted(self.exe.input_specs)}")
-        # the jitted step is cached on the CompiledQuery so that fresh
-        # engine instances (new stream epochs, benchmark repeats) reuse the
-        # traced+compiled computation instead of re-jitting a new closure
-        cache = self.exe.__dict__.setdefault("_keyed_step_cache", {})
-        key = (self.mesh, self.axis)
-        if key not in cache:
-            cache[key] = self._build_step()
-        self._step_fn = cache[key]
-
-    # -- staged step ---------------------------------------------------------
-    def _build_step(self):
-        exe = self.exe
-        names = sorted(exe.input_specs)
-        specs = exe.input_specs
-
-        def step(tails, chunks):
-            full = []
-            for name in names:
-                tv, tm = tails[name]
-                cv, cm = chunks[name]
-                fv = jax.tree_util.tree_map(
-                    lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
-                fm = jnp.concatenate([tm, cm], axis=1)
-                full.append((fv, fm))
-
-            def one(*flat):
-                return exe.trace_fn(dict(zip(names, flat)))
-
-            out = jax.vmap(one)(*full)
-            new_tails = {}
-            for name, (fv, fm) in zip(names, full):
-                s = specs[name]
-                # the trailing left_halo ticks start at index `core`
-                new_tails[name] = (
-                    jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, s.core, s.core + s.left_halo, axis=1), fv),
-                    jax.lax.slice_in_dim(fm, s.core, s.core + s.left_halo,
-                                         axis=1))
-            return out, new_tails
-
-        return wrap_keyed_step(step, self.mesh, self.axis)
-
-    def _init_tails(self, chunks: Dict[str, SnapshotGrid]):
-        for name, spec in self.exe.input_specs.items():
-            g = chunks[name]
-            hl = spec.left_halo
-            tv = jax.tree_util.tree_map(
-                lambda x: jnp.zeros((self.n_keys, hl) + x.shape[2:], x.dtype),
-                g.value)
-            tm = jnp.zeros((self.n_keys, hl), bool)
-            self._tails[name] = self._place((tv, tm))
-            if self.sparse:
-                self._dirty_tails[name] = jnp.zeros((self.n_keys, hl), bool)
-                self._prev[name] = (
-                    jax.tree_util.tree_map(
-                        lambda x: jnp.zeros((self.n_keys, 1) + x.shape[2:],
-                                            x.dtype), g.value),
-                    jnp.zeros((self.n_keys, 1), bool))
-
-    # -- sparse (change-compressed) stepping ---------------------------------
-    def _sparse_mask_fn(self):
-        """Jitted phase 1: assemble per-key buffers, diff the chunk against
-        the carried snapshots, dilate dirtiness through the DAG and reduce
-        to one dirty flag per key; also advances the carried change state."""
-        exe = self.exe
-        names = sorted(exe.input_specs)
-        specs = exe.input_specs
-        cp = exe.change_plan
-        S, q = exe.out_len, exe.out_prec
-
-        def mask(tails, dirty_tails, prev, chunks):
-            bufs, new_tails, new_dt, new_prev = {}, {}, {}, {}
-            key_dirty = None
-            for name in names:
-                s = specs[name]
-                hl = s.left_halo
-                tv, tm = tails[name]
-                cv, cm = chunks[name]
-                bv = jax.tree_util.tree_map(
-                    lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
-                bm = jnp.concatenate([tm, cm], axis=1)
-                bufs[name] = (bv, bm)
-                pv, pm = prev[name]
-                d_chunk = jax.vmap(
-                    lambda v, m, p0, p1: sparse_mod.source_dirty(
-                        v, m, (p0, p1)))(cv, cm, pv, pm)
-                full_d = jnp.concatenate([dirty_tails[name], d_chunk], axis=1)
-                sp = cp.specs[name]
-                i_lo, i_hi1 = sparse_mod.seg_ranges(
-                    sp.lookback, sp.lookahead, s.prec, grid_t0=-hl * s.prec,
-                    out_t0=0, out_prec=q, seg_len=S, n_segs=1)
-                lo = int(np.clip(i_lo[0], 0, full_d.shape[1]))
-                hi = int(np.clip(i_hi1[0], 0, full_d.shape[1]))
-                kd = full_d[:, lo:hi].any(axis=1)
-                key_dirty = kd if key_dirty is None else key_dirty | kd
-                L = full_d.shape[1]
-                new_tails[name] = (
-                    jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, s.core, s.core + hl, axis=1), bv),
-                    jax.lax.slice_in_dim(bm, s.core, s.core + hl, axis=1))
-                new_dt[name] = jax.lax.slice_in_dim(full_d, L - hl, L, axis=1)
-                new_prev[name] = (
-                    jax.tree_util.tree_map(lambda x: x[:, -1:], cv),
-                    cm[:, -1:])
-            return bufs, key_dirty, new_tails, new_dt, new_prev
-
-        return mask
-
-    def _sparse_compute_fn(self, capacity: int):
-        """Jitted phase 2 for one compaction capacity: gather the dirty
-        keys' buffers, run the vmapped body on them only, scatter back with
-        the per-key hold seed filling idle keys."""
-        exe = self.exe
-        names = sorted(exe.input_specs)
-
-        def compute(bufs, key_dirty, seed_v, seed_m):
-            key_ids = jnp.nonzero(key_dirty, size=capacity, fill_value=0)[0]
-            gath = []
-            for name in names:
-                bv, bm = bufs[name]
-                gath.append((
-                    jax.tree_util.tree_map(
-                        lambda x: jnp.take(x, key_ids, axis=0), bv),
-                    jnp.take(bm, key_ids, axis=0)))
-
-            def one(*flat):
-                return exe.trace_fn(dict(zip(names, flat)))
-
-            out_v, out_m = jax.vmap(one)(*gath)          # (C, S, ...)
-            pos = jnp.clip(jnp.cumsum(key_dirty) - 1, 0, capacity - 1)
-            full_v = jax.tree_util.tree_map(
-                lambda x: jnp.take(x, pos, axis=0), out_v)  # (K, S, ...)
-            full_m = jnp.take(out_m, pos, axis=0)
-
-            def bc(mask, x):
-                return mask.reshape(mask.shape + (1,) * (x.ndim - 1))
-
-            ov = jax.tree_util.tree_map(
-                lambda f, sv: jnp.where(bc(key_dirty, f), f,
-                                        sv[:, None].astype(f.dtype)),
-                full_v, seed_v)
-            om = jnp.where(key_dirty[:, None], full_m, seed_m[:, None])
-            new_seed = (
-                jax.tree_util.tree_map(lambda x: x[:, -1], ov), om[:, -1])
-            return (ov, om), new_seed
-
-        return compute
-
-    def _sparse_zero_seed(self, bufs):
-        """φ hold seed, one output tick per key (unused before the forced
-        all-dirty first step, but the jitted step needs the arrays)."""
-        names = sorted(self.exe.input_specs)
-        avals = {}
-        for name in names:
-            bv, bm = bufs[name]
-            avals[name] = (
-                jax.tree_util.tree_map(
-                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), bv),
-                jax.ShapeDtypeStruct(bm.shape[1:], jnp.bool_))
-        out_v, out_m = jax.eval_shape(self.exe.trace_fn, avals)
-        return (jax.tree_util.tree_map(
-            lambda a: jnp.zeros((self.n_keys,) + a.shape[1:], a.dtype),
-            out_v), jnp.zeros((self.n_keys,), bool))
-
-    def _sparse_step(self, chunk_in: Dict[str, tuple]) -> tuple:
-        exe = self.exe
-        cache = exe.__dict__.setdefault("_keyed_sparse_cache", {})
-        if "mask" not in cache:
-            cache["mask"] = jax.jit(self._sparse_mask_fn())
-        bufs, key_dirty, new_tails, new_dt, new_prev = cache["mask"](
-            self._tails, self._dirty_tails, self._prev, chunk_in)
-        if key_dirty is None:  # input-free query: nothing to skip
-            key_dirty = jnp.ones((self.n_keys,), bool)
-        if not self._started:
-            key_dirty = jnp.ones((self.n_keys,), bool)  # hold-seed base case
-            self._started = True
-        n = int(jnp.sum(key_dirty))
-        cap = sparse_mod.bucket_capacity(n, self.n_keys)
-        if ("compute", cap) not in cache:
-            cache[("compute", cap)] = jax.jit(self._sparse_compute_fn(cap))
-        seed = (self._seed if self._seed is not None
-                else self._sparse_zero_seed(bufs))
-        out, self._seed = cache[("compute", cap)](bufs, key_dirty, *seed)
-        self._tails, self._dirty_tails, self._prev = (
-            new_tails, new_dt, new_prev)
-        return out
-
-    def _place(self, tree):
-        if self.mesh is None:
-            return tree
-        sh = NamedSharding(self.mesh, P(self.axis))
-        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+        warnings.warn(
+            "KeyedEngine is deprecated; use repro.engine.Runner with "
+            "ExecPolicy(keys='vmapped', ...)", DeprecationWarning,
+            stacklevel=3)
+        policy = ExecPolicy(
+            body="sparse" if self.sparse else "dense", keys="vmapped",
+            placement=(MeshPlacement(self.mesh, self.axis)
+                       if self.mesh is not None else "local"))
+        self._runner = Runner(self.exe, policy, n_keys=self.n_keys)
 
     # -- public API ----------------------------------------------------------
     def step(self, chunks: Dict[str, SnapshotGrid]) -> SnapshotGrid:
@@ -323,144 +104,24 @@ class KeyedEngine:
 
         Each chunk grid must be ``(n_keys, spec.core, ...)``; returns the
         ``(n_keys, out_len)`` output partition."""
-        for name, spec in self.exe.input_specs.items():
-            g = chunks[name]
-            # a real exception, not an assert: this is user-input
-            # validation and must survive ``python -O``
-            if tuple(g.valid.shape) != (self.n_keys, spec.core):
-                raise ValueError(
-                    f"input {name}: chunk validity shape "
-                    f"{tuple(g.valid.shape)} != (n_keys, core) = "
-                    f"{(self.n_keys, spec.core)}")
-        if not self._tails:
-            self._init_tails(chunks)
-        chunk_in = {name: self._place((chunks[name].value,
-                                       chunks[name].valid))
-                    for name in self.exe.input_specs}
-        if self.sparse:
-            v, m = self._sparse_step(chunk_in)
-        else:
-            (v, m), self._tails = self._step_fn(self._tails, chunk_in)
-        out = SnapshotGrid(value=v, valid=m, t0=self._t,
-                           prec=self.exe.out_prec)
-        self._t += self.exe.out_len * self.exe.out_prec
-        return out
+        return self._runner.step(chunks)
 
     def run(self, inputs: Dict[str, SnapshotGrid],
             n_parts: int) -> SnapshotGrid:
         """Feed ``n_parts`` partitions sliced from full keyed streams and
         stitch the outputs along time (axis 1)."""
-        outs = []
-        for k in range(n_parts):
-            chunk = {}
-            for name, spec in self.exe.input_specs.items():
-                g = inputs[name]
-                lo = k * spec.core
-                chunk[name] = SnapshotGrid(
-                    value=jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, lo, lo + spec.core, axis=1), g.value),
-                    valid=jax.lax.slice_in_dim(
-                        g.valid, lo, lo + spec.core, axis=1),
-                    t0=g.t0 + lo * spec.prec, prec=spec.prec)
-            outs.append(self.step(chunk))
-        value = jax.tree_util.tree_map(
-            lambda *xs: jnp.concatenate(xs, axis=1),
-            *[o.value for o in outs])
-        valid = jnp.concatenate([o.valid for o in outs], axis=1)
-        return SnapshotGrid(value=value, valid=valid, t0=outs[0].t0,
-                            prec=self.exe.out_prec)
+        return self._runner.run(inputs, n_parts)
 
     def reset(self) -> None:
         """Drop carried state; the next step starts a fresh stream at t=0."""
-        self._tails = {}
-        self._dirty_tails = {}
-        self._prev = {}
-        self._seed = None
-        self._started = False
-        self._t = 0
+        self._runner.reset()
 
-    # -- checkpointing -------------------------------------------------------
+    # -- checkpointing (delegated to the unified state/validate path) --------
     def state(self) -> Dict:
         """Checkpointable engine state (host arrays)."""
-        to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)  # noqa: E731
-        out = {k: to_np(v) for k, v in self._tails.items()} | {"__t": self._t}
-        if self.sparse:
-            out["__sparse"] = {
-                "dirty": {k: np.asarray(v)
-                          for k, v in self._dirty_tails.items()},
-                "prev": {k: to_np(v) for k, v in self._prev.items()},
-                "seed": None if self._seed is None else to_np(self._seed),
-                "started": self._started}
-        return out
+        return self._runner.state()
 
     def restore(self, state: Dict) -> None:
         """Restore a :meth:`state` checkpoint, validating it against this
-        engine's configuration first.
-
-        Every inconsistency — wrong input names, wrong key count, wrong
-        tail length (a checkpoint from a different query/plan), a stream
-        clock misaligned with the partition span, missing or unexpected
-        sparse change state — raises a ``ValueError`` naming the mismatch,
-        instead of surfacing later as an opaque shape error inside the
-        jitted step.
-        """
-        state = dict(state)
-        if "__t" not in state:
-            raise ValueError("checkpoint has no '__t' stream clock")
-        t = state.pop("__t")
-        span = self.exe.out_len * self.exe.out_prec
-        if not isinstance(t, (int, np.integer)) or t < 0 or t % span:
-            raise ValueError(
-                f"checkpoint stream clock __t={t!r} is not a non-negative "
-                f"multiple of the partition span {span} — was this saved "
-                "from an engine with a different out_len/out_prec?")
-        sparse_state = state.pop("__sparse", None)
-        if self.sparse and sparse_state is None:
-            raise ValueError(
-                "sparse engine cannot restore a dense checkpoint: no "
-                "'__sparse' change state (dirty tails / snapshots / seed)")
-        if not self.sparse and sparse_state is not None:
-            raise ValueError(
-                "dense engine cannot restore a sparse checkpoint "
-                "(carries '__sparse' change state)")
-        names = set(self.exe.input_specs)
-        if state and set(state) != names:
-            unknown = sorted(set(state) - names)
-            missing = sorted(names - set(state))
-            raise ValueError(
-                f"checkpoint inputs {sorted(state)} != query inputs "
-                f"{sorted(names)} (unknown={unknown}, missing={missing})")
-        for name, (tv, tm) in state.items():
-            hl = self.exe.input_specs[name].left_halo
-            got = tuple(np.shape(tm))
-            if got != (self.n_keys, hl):
-                raise ValueError(
-                    f"input {name}: checkpoint tail shape {got} != "
-                    f"(n_keys, left_halo) = {(self.n_keys, hl)}")
-            for leaf in jax.tree_util.tree_leaves(tv):
-                if tuple(np.shape(leaf)[:2]) != (self.n_keys, hl):
-                    raise ValueError(
-                        f"input {name}: checkpoint tail value leaf shape "
-                        f"{tuple(np.shape(leaf))} does not lead with "
-                        f"(n_keys, left_halo) = {(self.n_keys, hl)}")
-        self._t = t
-        self._tails = {k: self._place(
-            jax.tree_util.tree_map(jnp.asarray, v))
-            for k, v in state.items()}
-        if self.sparse and sparse_state is not None:
-            dirty = sparse_state["dirty"]
-            for name in state:
-                hl = self.exe.input_specs[name].left_halo
-                got = tuple(np.shape(dirty.get(name, ())))
-                if got != (self.n_keys, hl):
-                    raise ValueError(
-                        f"input {name}: checkpoint dirty-tail shape {got} "
-                        f"!= (n_keys, left_halo) = {(self.n_keys, hl)}")
-            self._dirty_tails = {k: jnp.asarray(v) for k, v in dirty.items()}
-            self._prev = {k: jax.tree_util.tree_map(jnp.asarray, v)
-                          for k, v in sparse_state["prev"].items()}
-            seed = sparse_state["seed"]
-            self._seed = (None if seed is None
-                          else jax.tree_util.tree_map(jnp.asarray, seed))
-            self._started = bool(sparse_state["started"])
+        engine's configuration first (see :meth:`Runner.restore`)."""
+        self._runner.restore(state)

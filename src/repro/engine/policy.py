@@ -1,0 +1,130 @@
+"""Composable execution policies (TiLT's thesis applied to our own stack).
+
+The paper's central systems claim is that a time-centric IR plus a static
+planning layer lets optimization and parallelization strategies *compose*
+instead of being baked into per-strategy executors.  Our stack had drifted
+the other way: every capability grew a sibling entry point (``StreamRunner``,
+``SparseStreamRunner``, ``KeyedEngine``, ``MultiQuerySession``, …), and the
+pairings those silos could not express (sparse × mesh, sparse × union,
+keyed × multi-segment) were exactly the ROADMAP's remaining items.
+
+:class:`ExecPolicy` names the four orthogonal axes of chunked execution —
+each resolved by its own *planning artifact*, all consumed by the single
+unified runner (:mod:`repro.engine.runner`):
+
+====================  ======================  ===========================
+axis                  values                  planning artifact
+====================  ======================  ===========================
+``body``              ``dense`` | ``sparse``  :class:`repro.core.plan.ChangePlan`
+``keys``              ``single`` | ``vmapped``  key-axis vmap (paper §6.2)
+``placement``         ``local`` | mesh(axis)  shard_map over the work axis
+``dag``               ``solo`` | ``union``    :func:`repro.core.plan.plan_union`
+====================  ======================  ===========================
+
+``placement`` shards the *work-unit* axis: the key axis for
+``keys='vmapped'`` (keys never communicate — no collectives), the segment
+axis for ``keys='single'`` (segments within a chunk are distributed, with
+the chunk buffer replicated; the multi-hop ppermute chain of
+:mod:`repro.core.halo` remains the one-shot time-sharded path,
+:func:`repro.core.parallel.shard_map_run`).
+
+The old entry points survive as thin deprecated wrappers over
+``Runner(exe, ExecPolicy(...))`` — see docs/architecture.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from jax.sharding import Mesh
+
+__all__ = ["ExecPolicy", "MeshPlacement", "mesh_placement",
+           "BODIES", "KEYS", "PLACEMENTS", "DAGS"]
+
+BODIES = ("dense", "sparse")
+KEYS = ("single", "vmapped")
+PLACEMENTS = ("local", "mesh")
+DAGS = ("solo", "union")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlacement:
+    """``placement=mesh(axis)``: shard the policy's work axis along one
+    named mesh axis (the key axis when ``keys='vmapped'``, the segment
+    axis when ``keys='single'``)."""
+
+    mesh: Mesh
+    axis: str = "data"
+
+    def __repr__(self) -> str:  # keep policy repr readable in test output
+        return f"mesh(axis={self.axis!r}, n={self.mesh.shape[self.axis]})"
+
+
+def mesh_placement(mesh: Mesh, axis: str = "data") -> MeshPlacement:
+    """The ``mesh(axes)`` constructor for :class:`ExecPolicy.placement`."""
+    return MeshPlacement(mesh, axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """One point in the execution-policy space ``body × keys × placement ×
+    dag``.  Pure configuration — validation against a concrete query
+    (lookahead, divisibility, ChangePlan presence) happens when a
+    :class:`repro.engine.runner.Runner` is built from it."""
+
+    body: str = "dense"
+    keys: str = "single"
+    placement: Union[str, MeshPlacement] = "local"
+    dag: str = "solo"
+
+    def __post_init__(self):
+        if self.body not in BODIES:
+            raise ValueError(f"body={self.body!r} not in {BODIES}")
+        if self.keys not in KEYS:
+            raise ValueError(f"keys={self.keys!r} not in {KEYS}")
+        if self.dag not in DAGS:
+            raise ValueError(f"dag={self.dag!r} not in {DAGS}")
+        if isinstance(self.placement, Mesh):
+            # accept a bare Mesh for convenience: mesh over its default axis
+            object.__setattr__(
+                self, "placement", MeshPlacement(self.placement,
+                                                 self.placement.axis_names[0]))
+        if self.placement != "local" and not isinstance(self.placement,
+                                                        MeshPlacement):
+            raise ValueError(
+                f"placement={self.placement!r} must be 'local', a Mesh, or "
+                "mesh_placement(mesh, axis)")
+
+    # -- accessors -----------------------------------------------------------
+    @property
+    def sparse(self) -> bool:
+        return self.body == "sparse"
+
+    @property
+    def keyed(self) -> bool:
+        return self.keys == "vmapped"
+
+    @property
+    def union(self) -> bool:
+        return self.dag == "union"
+
+    @property
+    def mesh(self) -> Optional[Mesh]:
+        return (self.placement.mesh
+                if isinstance(self.placement, MeshPlacement) else None)
+
+    @property
+    def axis(self) -> str:
+        return (self.placement.axis
+                if isinstance(self.placement, MeshPlacement) else "data")
+
+    @property
+    def n_shards(self) -> int:
+        m = self.mesh
+        return m.shape[self.axis] if m is not None else 1
+
+    def describe(self) -> str:
+        """Compact ``dense×single×local×solo``-style label (benchmarks)."""
+        placement = ("local" if self.mesh is None
+                     else f"mesh{self.n_shards}")
+        return f"{self.body}×{self.keys}×{placement}×{self.dag}"

@@ -1,0 +1,733 @@
+"""One chunked runner for every execution policy (body × keys × placement ×
+dag).
+
+Every chunked executor in the stack — ``StreamRunner``,
+``SparseStreamRunner``, ``KeyedEngine``, ``MultiQuerySession`` — used to
+carry its own copy of the same machinery: concatenate carried halo tails
+with the fresh chunk, stage a per-partition body, slice new tails off the
+buffer, advance a stream clock, checkpoint it all.  :class:`Runner` owns
+that machinery exactly once, parameterized by an
+:class:`repro.engine.policy.ExecPolicy`; the old entry points are thin
+deprecated wrappers over it.
+
+Execution model (one ``step`` = one chunk):
+
+* The chunk timeline is cut into ``segs_per_chunk`` **segments** of
+  ``out_len`` output ticks each (one planned partition per segment).  Work
+  units are ``keys × segments``; a dense body computes every unit, a sparse
+  body only the units whose dilated input lineage saw a change
+  (:class:`repro.core.plan.ChangePlan`), the rest *hold* their previous
+  output (see :mod:`repro.core.sparse` for the semantics and exactness
+  argument).
+* ``keys='vmapped'`` adds a leading key axis to every grid; internally the
+  runner always carries the key axis (``K=1`` for ``keys='single'``), so
+  there is exactly one code path.
+* ``placement=mesh(axis)`` shards the *work-unit* axis over the mesh: whole
+  keys when keyed (buffers and carried state shard with them — no
+  collectives, keys never communicate), segments when single-keyed (the
+  chunk buffer is replicated).  Sparse compaction is **per shard**: each
+  device resolves its local dirty units with a local ``nonzero`` into a
+  per-shard power-of-two capacity bucket, so the gather never crosses
+  devices — this is what lets sparse execution compose with mesh sharding
+  (the global-gather limitation ``KeyedEngine(sparse=True)`` used to reject).
+* ``dag='union'`` runs the union DAG of N queries (one
+  :class:`repro.core.plan.UnionPlan`) and returns one grid per query; the
+  merged :class:`~repro.core.plan.ChangePlan` of the union is the per-input
+  union of the per-query dilations, so sparse execution composes with
+  multi-query sharing too.
+
+State pytree (the *only* cross-chunk state, host-roundtrippable through
+:meth:`Runner.state` / :meth:`Runner.restore` with one validation path)::
+
+    { input_name: (value_tail, valid_tail),   # trailing left_halo ticks
+      "__t": int,                             # stream clock
+      "__sparse": {                           # body='sparse' only
+         "dirty": {input_name: dirty_tail},   # change flags for those ticks
+         "prev":  {input_name: 1-tick snapshot},  # next chunk diffs vs this
+         "seed":  {out_name: last output tick},   # hold seed per output
+         "started": bool } }
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import ir
+from ..core import sparse as sparse_mod
+from ..core.plan import ChangePlan, InputSpec
+from ..core.stream import SnapshotGrid
+from .policy import ExecPolicy
+
+__all__ = ["BodySpec", "Runner", "body_spec_of"]
+
+_tm = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass
+class BodySpec:
+    """Everything the unified runner needs to know about a per-segment body.
+
+    A body evaluates one planned partition: given ``{input_name: (value,
+    valid)}`` grids covering one segment plus halo (``input_specs``), it
+    returns ``{out_name: (value, valid)}`` output grids of ``span //
+    out_precs[name]`` ticks each.  Solo queries are the single-output case
+    (``out_name == "__out"``); union DAGs return one entry per query.
+
+    ``step_cache`` holds the staged (traced + jitted) chunk steps, keyed by
+    execution geometry — share it across Runner instances over the same
+    compiled query so fresh runners (new stream epochs, benchmark repeats)
+    reuse compiled executables.
+    """
+
+    input_specs: Dict[str, InputSpec]
+    out_len: int     # segment length in ticks of the reference output grid
+    out_prec: int
+    outs_fn: Callable[[Dict[str, tuple]], Dict[str, tuple]]
+    out_precs: Dict[str, int]
+    change_plan: Optional[ChangePlan] = None
+    root: Optional[ir.Node] = None
+    jit: bool = True
+    solo: bool = True
+    step_cache: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def span(self) -> int:
+        return self.out_len * self.out_prec
+
+
+def body_spec_of(exe) -> BodySpec:
+    """The :class:`BodySpec` of a :class:`repro.core.compile.CompiledQuery`
+    (the ``dag='solo'`` case).  The step cache lives on the CompiledQuery,
+    so every Runner over the same executable shares staged steps."""
+
+    def outs_fn(inputs: Dict[str, tuple]) -> Dict[str, tuple]:
+        return {"__out": exe.trace_fn(inputs)}
+
+    return BodySpec(
+        input_specs=exe.input_specs, out_len=exe.out_len,
+        out_prec=exe.out_prec, outs_fn=outs_fn,
+        out_precs={"__out": exe.out_prec},
+        change_plan=getattr(exe, "change_plan", None), root=exe.root,
+        jit=True, solo=True,
+        step_cache=exe.__dict__.setdefault("_runner_step_cache", {}))
+
+
+def _bc(mask, x):
+    """Broadcast a leading-axes mask over the trailing dims of ``x``."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+
+
+class Runner:
+    """Chunked streaming execution under one :class:`ExecPolicy`.
+
+    Parameters
+    ----------
+    exe_or_spec:
+        A :class:`~repro.core.compile.CompiledQuery` (``dag='solo'``; pass
+        ``sparse=True`` to :func:`~repro.core.compile.compile_query` for a
+        sparse body) or a prebuilt :class:`BodySpec` (the union path —
+        see :func:`repro.multiquery.union_runner`).
+    policy:
+        The execution policy.  ``keys='vmapped'`` requires ``n_keys``;
+        ``placement=mesh`` shards keys (vmapped) or segments (single) and
+        requires the respective count to divide the mesh axis size.
+    segs_per_chunk:
+        Segments consumed per :meth:`step`; each chunk supplies
+        ``segs_per_chunk · spec.core`` fresh ticks per input.
+    """
+
+    def __init__(self, exe_or_spec, policy: ExecPolicy = ExecPolicy(), *,
+                 n_keys: Optional[int] = None, segs_per_chunk: int = 1):
+        spec = (exe_or_spec if isinstance(exe_or_spec, BodySpec)
+                else body_spec_of(exe_or_spec))
+        if policy.union != (not spec.solo):
+            raise ValueError(
+                f"policy dag={policy.dag!r} does not match the body "
+                f"(solo={spec.solo}); union runners need a union BodySpec "
+                "(see repro.multiquery.union_runner)")
+        if segs_per_chunk < 1:
+            raise ValueError("segs_per_chunk must be >= 1")
+        self.spec, self.policy = spec, policy
+        self.n_segs = segs_per_chunk
+        if policy.keyed:
+            if n_keys is None:
+                raise ValueError("keys='vmapped' needs n_keys")
+            self.n_keys = n_keys
+        else:
+            if n_keys not in (None, 1):
+                raise ValueError(
+                    f"keys='single' runs one stream (got n_keys={n_keys}); "
+                    "use ExecPolicy(keys='vmapped') for keyed sub-streams")
+            self.n_keys = 1
+
+        span = spec.span
+        for name, s in spec.input_specs.items():
+            if s.right_halo > 0:
+                raise NotImplementedError(
+                    "chunked runners support lookback-only queries "
+                    f"(input {name} has lookahead)")
+            if s.core * s.prec != span:
+                raise ValueError(
+                    f"input {name}: segment span {span} not a multiple of "
+                    f"input precision {s.prec}")
+        if policy.sparse and spec.change_plan is None:
+            raise ValueError(
+                "ExecPolicy(body='sparse') needs a query compiled with "
+                "sparse=True (no ChangePlan attached)")
+        if spec.root is not None and policy.keyed:
+            keyed_inputs = [n.name for n in ir.free_inputs(spec.root)
+                            if n.keyed]
+            if keyed_inputs and set(keyed_inputs) != set(spec.input_specs):
+                raise ValueError(
+                    "query mixes keyed and unkeyed sources: "
+                    f"keyed={keyed_inputs}, all={sorted(spec.input_specs)}")
+        if policy.mesh is not None:
+            n = policy.n_shards
+            if policy.keyed and self.n_keys % n:
+                raise ValueError(
+                    f"n_keys={self.n_keys} not divisible by mesh axis "
+                    f"'{policy.axis}' of size {n}")
+            if not policy.keyed and self.n_segs % n:
+                raise ValueError(
+                    f"segs_per_chunk={self.n_segs} not divisible by mesh "
+                    f"axis '{policy.axis}' of size {n}")
+
+        # -- the unified state pytree ---------------------------------------
+        self._tails: Dict[str, tuple] = {}
+        self._sparse: Optional[dict] = (
+            {"dirty": {}, "prev": {}, "seed": {}, "started": False}
+            if policy.sparse else None)
+        self._t = 0
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def _K(self) -> int:
+        return self.n_keys
+
+    @property
+    def _U(self) -> int:
+        return self.n_keys * self.n_segs
+
+    def _names(self):
+        return sorted(self.spec.input_specs)
+
+    def _place(self, tree):
+        """Device placement of carried per-key state (key-axis sharding)."""
+        if self.policy.mesh is None or not self.policy.keyed:
+            return tree
+        sh = NamedSharding(self.policy.mesh, P(self.policy.axis))
+        return _tm(lambda x: jax.device_put(x, sh), tree)
+
+    def _maybe_jit(self, fn):
+        return jax.jit(fn) if self.spec.jit else fn
+
+    def _cache_key(self, kind, *extra):
+        return (kind, self._K, self.n_segs, self.policy.mesh,
+                self.policy.axis, self.spec.jit) + extra
+
+    def _shard_body(self, fn, n_buf_args: int, unit_bufs: bool = False):
+        """Wrap the per-unit compute ``fn(w, bufs...)`` in shard_map over
+        the work-unit axis when a mesh is placed.  ``unit_bufs`` marks the
+        buffer args as already per-unit (dense path: gathered windows shard
+        with the units); otherwise they are the raw chunk buffers, which
+        shard with the keys when keyed and replicate when single-keyed
+        (each shard gathers its own segments from the full buffer)."""
+        mesh, axis = self.policy.mesh, self.policy.axis
+        if mesh is None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        buf_spec = P(axis) if (unit_bufs or self.policy.keyed) else P()
+        return shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(axis),) + (buf_spec,) * n_buf_args,
+            out_specs=P(axis), check_rep=False)
+
+    # -- chunk ingest --------------------------------------------------------
+    def _ingest(self, chunks: Dict[str, SnapshotGrid]) -> Dict[str, tuple]:
+        chunk_in = {}
+        for name in self._names():
+            s = self.spec.input_specs[name]
+            g = chunks[name]
+            want = ((self.n_keys, s.core * self.n_segs) if self.policy.keyed
+                    else (s.core * self.n_segs,))
+            if tuple(g.valid.shape) != want:
+                raise ValueError(
+                    f"input {name}: chunk validity shape "
+                    f"{tuple(g.valid.shape)} != expected {want}")
+            v, m = g.value, g.valid
+            if not self.policy.keyed:  # internal layout always carries K
+                v, m = _tm(lambda x: x[None], v), m[None]
+            chunk_in[name] = self._place((v, m))
+        return chunk_in
+
+    def _init_missing_tails(self, chunk_in: Dict[str, tuple]) -> None:
+        K = self._K
+        for name in self._names():
+            if name in self._tails:
+                continue
+            hl = self.spec.input_specs[name].left_halo
+            cv, cm = chunk_in[name]
+            tv = _tm(lambda x: jnp.zeros((K, hl) + x.shape[2:], x.dtype), cv)
+            self._tails[name] = self._place((tv, jnp.zeros((K, hl), bool)))
+            if self._sparse is not None and name not in self._sparse["dirty"]:
+                self._sparse["dirty"][name] = jnp.zeros((K, hl), bool)
+                self._sparse["prev"][name] = (
+                    _tm(lambda x: jnp.zeros((K, 1) + x.shape[2:], x.dtype),
+                        cv),
+                    jnp.zeros((K, 1), bool))
+
+    # -- dense step ----------------------------------------------------------
+    def _dense_step(self):
+        key = self._cache_key("dense")
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        names, specs = self._names(), self.spec.input_specs
+        outs_fn = self.spec.outs_fn
+        K, n_segs, U = self._K, self.n_segs, self._U
+        # static per-input gather map: segment k's halo window starts at
+        # buffer tick k·core (the carried tail supplies segment 0's halo)
+        idx_maps = {
+            name: np.arange(n_segs)[:, None] * specs[name].core
+            + np.arange(specs[name].length)[None, :] for name in names}
+
+        def units_body(*flat):
+            def one(*f):
+                return outs_fn(dict(zip(names, f)))
+            return jax.vmap(one)(*flat)
+
+        def units_sharded(w, *flat):  # w unused: dense computes every unit
+            return units_body(*flat)
+
+        sharded = self._shard_body(units_sharded, len(names), unit_bufs=True)
+
+        def step(tails, chunks):
+            full, units = {}, []
+            for name in names:
+                tv, tm = tails[name]
+                cv, cm = chunks[name]
+                fv = _tm(lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
+                fm = jnp.concatenate([tm, cm], axis=1)
+                full[name] = (fv, fm)
+                L = specs[name].length
+                idx = jnp.asarray(idx_maps[name])
+                gv = _tm(lambda x: jnp.take(x, idx, axis=1).reshape(
+                    (U, L) + x.shape[2:]), fv)
+                gm = jnp.take(fm, idx, axis=1).reshape(U, L)
+                units.append((gv, gm))
+            outs = sharded(jnp.ones((U,), bool), *units)
+            outs = {o: (_tm(lambda x: x.reshape(
+                        (K, n_segs * x.shape[1]) + x.shape[2:]), ov),
+                        om.reshape(K, -1))
+                    for o, (ov, om) in outs.items()}
+            new_tails = {}
+            for name in names:
+                s = specs[name]
+                lo = s.core * n_segs
+                fv, fm = full[name]
+                new_tails[name] = (
+                    _tm(lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + s.left_halo, axis=1), fv),
+                    jax.lax.slice_in_dim(fm, lo, lo + s.left_halo, axis=1))
+            return outs, new_tails
+
+        cache[key] = self._maybe_jit(step)
+        return cache[key]
+
+    # -- sparse phases -------------------------------------------------------
+    def _mask_step(self):
+        """Phase 1: assemble buffers, diff the chunk against carried
+        snapshots, dilate dirtiness through the DAG (ChangePlan) and reduce
+        to one flag per (key, segment) unit; also derives the next carried
+        change state."""
+        key = self._cache_key("mask")
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        names, specs = self._names(), self.spec.input_specs
+        cp = self.spec.change_plan
+        S, q = self.spec.out_len, self.spec.out_prec
+        K, n_segs = self._K, self.n_segs
+
+        def mask(tails, dirty, prev, chunks):
+            bufs, new_tails, new_dirty, new_prev = {}, {}, {}, {}
+            seg_dirty = jnp.zeros((K, n_segs), bool)
+            for name in names:
+                s = specs[name]
+                hl = s.left_halo
+                tv, tm = tails[name]
+                cv, cm = chunks[name]
+                fv = _tm(lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
+                fm = jnp.concatenate([tm, cm], axis=1)
+                bufs[name] = (fv, fm)
+                pv, pm = prev[name]
+                d_chunk = jax.vmap(
+                    lambda v, m, p0, p1: sparse_mod.source_dirty(
+                        v, m, (p0, p1)))(cv, cm, pv, pm)
+                full_d = jnp.concatenate([dirty[name], d_chunk], axis=1)
+                sp = cp.specs[name]
+                i_lo, i_hi1 = sparse_mod.seg_ranges(
+                    sp.lookback, sp.lookahead, s.prec,
+                    grid_t0=-hl * s.prec, out_t0=0, out_prec=q,
+                    seg_len=S, n_segs=n_segs)
+                ilo, ihi = jnp.asarray(i_lo), jnp.asarray(i_hi1)
+                seg_dirty = seg_dirty | jax.vmap(
+                    lambda d: sparse_mod.range_any(d, ilo, ihi))(full_d)
+                lo = s.core * n_segs
+                new_tails[name] = (
+                    _tm(lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + hl, axis=1), fv),
+                    jax.lax.slice_in_dim(fm, lo, lo + hl, axis=1))
+                new_dirty[name] = jax.lax.slice_in_dim(
+                    full_d, lo, lo + hl, axis=1)
+                new_prev[name] = (_tm(lambda x: x[:, -1:], cv), cm[:, -1:])
+            return bufs, seg_dirty, new_tails, new_dirty, new_prev
+
+        cache[key] = self._maybe_jit(mask)
+        return cache[key]
+
+    def _compute_step(self, cap: int):
+        """Phase 2 for one compaction capacity: per shard, resolve the local
+        dirty units (local ``nonzero`` into the power-of-two bucket), gather
+        their halo windows, run the vmapped body on them only, scatter the
+        results back over the local unit axis."""
+        key = self._cache_key("compute", cap)
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        names, specs = self._names(), self.spec.input_specs
+        outs_fn = self.spec.outs_fn
+        n_segs = self.n_segs
+        keyed = self.policy.keyed
+        mesh, axis = self.policy.mesh, self.policy.axis
+        U_loc = self._U // self.policy.n_shards
+
+        def local(w, *flat):
+            ids = jnp.nonzero(w, size=cap, fill_value=0)[0]
+            if keyed:
+                k_ids, s_ids = ids // n_segs, ids % n_segs
+            else:
+                base = (jax.lax.axis_index(axis) * U_loc
+                        if mesh is not None else 0)
+                k_ids, s_ids = jnp.zeros_like(ids), ids + base
+            gath = []
+            for name, (bv, bm) in zip(names, flat):
+                s = specs[name]
+                tidx = s_ids[:, None] * s.core + jnp.arange(s.length)[None, :]
+                gath.append((
+                    _tm(lambda x: x[k_ids[:, None], tidx], bv),
+                    bm[k_ids[:, None], tidx]))
+
+            def one(*f):
+                return outs_fn(dict(zip(names, f)))
+
+            outs = jax.vmap(one)(*gath)                  # {o: (cap, S_o, …)}
+            pos = jnp.clip(jnp.cumsum(w) - 1, 0, cap - 1)
+            return {o: (_tm(lambda x: jnp.take(x, pos, axis=0), ov),
+                        jnp.take(om, pos, axis=0))
+                    for o, (ov, om) in outs.items()}     # {o: (U_loc, S_o, …)}
+
+        cache[key] = self._maybe_jit(self._shard_body(local, len(names)))
+        return cache[key]
+
+    def _hold_step(self):
+        """Phase 3 (global): clean units take the last tick of the nearest
+        preceding dirty segment of the same key, or the key's carried hold
+        seed; dirty units keep their computed results."""
+        key = self._cache_key("hold")
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        K, n_segs = self._K, self.n_segs
+
+        def hold(full_outs, seg_dirty, seeds):
+            ar = jnp.arange(n_segs)
+            prev_d = jax.lax.cummax(
+                jnp.where(seg_dirty, ar[None, :], -1), axis=1)
+            src = jnp.clip(prev_d, 0, n_segs - 1)        # (K, n_segs)
+            has = prev_d >= 0
+            take_seg = jax.vmap(lambda x, s: jnp.take(x, s, axis=0))
+            outs, new_seeds = {}, {}
+            for o, (fv, fm) in full_outs.items():        # fv (K, n_segs, S, …)
+                sv, sm = seeds[o]
+
+                def hold_leaf(x, seed):
+                    hx = take_seg(x[:, :, -1], src)      # (K, n_segs, …)
+                    hx = jnp.where(_bc(has, hx), hx,
+                                   jnp.expand_dims(seed, 1).astype(x.dtype))
+                    return jnp.where(_bc(seg_dirty, x), x,
+                                     jnp.expand_dims(hx, 2))
+
+                ov = _tm(hold_leaf, fv, sv)
+                hm = jnp.where(has, take_seg(fm[:, :, -1], src), sm[:, None])
+                om = jnp.where(seg_dirty[:, :, None], fm, hm[:, :, None])
+                ov = _tm(lambda x: x.reshape(
+                    (K, n_segs * x.shape[2]) + x.shape[3:]), ov)
+                om = om.reshape(K, -1)
+                outs[o] = (ov, om)
+                new_seeds[o] = (_tm(lambda x: x[:, -1], ov), om[:, -1])
+            return outs, new_seeds
+
+        cache[key] = self._maybe_jit(hold)
+        return cache[key]
+
+    def _zero_seeds(self, chunk_in):
+        """φ hold seeds shaped like one output tick per key (unread: any
+        output missing a carried seed forces its first segment dirty)."""
+        if getattr(self, "_zero_seed_cache", None) is not None:
+            return self._zero_seed_cache
+        avals = {}
+        for name in self._names():
+            s = self.spec.input_specs[name]
+            cv, cm = chunk_in[name]
+            avals[name] = (
+                _tm(lambda x: jax.ShapeDtypeStruct(
+                    (s.length,) + x.shape[2:], x.dtype), cv),
+                jax.ShapeDtypeStruct((s.length,), jnp.bool_))
+        shapes = jax.eval_shape(self.spec.outs_fn, avals)
+        K = self._K
+        self._zero_seed_cache = {
+            o: (_tm(lambda a: jnp.zeros((K,) + a.shape[1:], a.dtype), ov),
+                jnp.zeros((K,), bool))
+            for o, (ov, om) in shapes.items()}
+        return self._zero_seed_cache
+
+    def _sparse_chunk(self, chunk_in):
+        st = self._sparse
+        names = self._names()
+        K, n_segs, U = self._K, self.n_segs, self._U
+        if names:
+            bufs, seg_dirty, new_tails, new_dirty, new_prev = \
+                self._mask_step()(self._tails, st["dirty"], st["prev"],
+                                  chunk_in)
+            sd = np.asarray(seg_dirty)
+        else:  # input-free (const) query: nothing to skip
+            bufs, new_tails, new_dirty, new_prev = {}, {}, {}, {}
+            sd = np.ones((K, n_segs), bool)
+        missing_seed = any(o not in st["seed"] for o in self.spec.out_precs)
+        if not st["started"] or missing_seed:
+            sd = sd.copy()
+            sd[:, 0] = True  # hold-fill base case: no carried output yet
+        n_shards = self.policy.n_shards
+        U_loc = U // n_shards
+        cnt = int(sd.reshape(n_shards, U_loc).sum(axis=1).max())
+        cap = sparse_mod.bucket_capacity(cnt, U_loc)
+        w = jnp.asarray(sd.reshape(-1))
+        full = self._compute_step(cap)(w, *[bufs[nm] for nm in names])
+        full = {o: (_tm(lambda x: x.reshape((K, n_segs) + x.shape[1:]), fv),
+                    fm.reshape((K, n_segs) + fm.shape[1:]))
+                for o, (fv, fm) in full.items()}
+        seeds = dict(self._zero_seeds(chunk_in))
+        seeds.update(st["seed"])
+        outs, new_seeds = self._hold_step()(full, jnp.asarray(sd), seeds)
+
+        def commit():
+            self._tails = new_tails
+            st["dirty"], st["prev"] = new_dirty, new_prev
+            st["seed"], st["started"] = new_seeds, True
+
+        return outs, commit
+
+    # -- public API ----------------------------------------------------------
+    def step(self, chunks: Dict[str, SnapshotGrid]):
+        """Advance the stream by one chunk (``segs_per_chunk`` segments).
+
+        Each chunk grid supplies ``segs_per_chunk · spec.core`` fresh ticks
+        per input (leading key axis first when ``keys='vmapped'``).  Returns
+        one output grid (solo) or ``{query_name: grid}`` (union).  Carried
+        state commits only after the step succeeded, so a raise leaves the
+        runner exactly as it was.
+        """
+        chunk_in = self._ingest(chunks)
+        self._init_missing_tails(chunk_in)
+        if self.policy.sparse:
+            outs, commit = self._sparse_chunk(chunk_in)
+        else:
+            outs, new_tails = self._dense_step()(self._tails, chunk_in)
+
+            def commit(new_tails=new_tails):
+                self._tails = new_tails
+
+        result = {}
+        for o, (v, m) in outs.items():
+            if not self.policy.keyed:
+                v, m = _tm(lambda x: x[0], v), m[0]
+            result[o] = SnapshotGrid(value=v, valid=m, t0=self._t,
+                                     prec=self.spec.out_precs[o])
+        commit()
+        self._t += self.n_segs * self.spec.span
+        return result["__out"] if self.spec.solo else result
+
+    def run(self, inputs: Dict[str, SnapshotGrid], n_chunks: int):
+        """Slice ``n_chunks`` chunks from full streams, step through them
+        and stitch the outputs along time."""
+        taxis = 1 if self.policy.keyed else 0
+        outs = []
+        for c in range(n_chunks):
+            chunk = {}
+            for name in self._names():
+                s = self.spec.input_specs[name]
+                g = inputs[name]
+                lo = c * s.core * self.n_segs
+                chunk[name] = SnapshotGrid(
+                    value=_tm(lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + s.core * self.n_segs, axis=taxis),
+                        g.value),
+                    valid=jax.lax.slice_in_dim(
+                        g.valid, lo, lo + s.core * self.n_segs, axis=taxis),
+                    t0=g.t0 + lo * s.prec, prec=s.prec)
+            outs.append(self.step(chunk))
+
+        def stitch(parts):
+            value = _tm(lambda *xs: jnp.concatenate(xs, axis=taxis),
+                        *[p.value for p in parts])
+            valid = jnp.concatenate([p.valid for p in parts], axis=taxis)
+            return SnapshotGrid(value=value, valid=valid, t0=parts[0].t0,
+                                prec=parts[0].prec)
+
+        if self.spec.solo:
+            return stitch(outs)
+        return {o: stitch([c[o] for c in outs]) for o in outs[0]}
+
+    def reset(self) -> None:
+        """Drop carried state; the next step starts a fresh stream at t=0."""
+        self._tails = {}
+        if self._sparse is not None:
+            self._sparse = {"dirty": {}, "prev": {}, "seed": {},
+                            "started": False}
+        self._t = 0
+
+    # -- checkpointing (the one state/validate path) -------------------------
+    def _strip(self, tree):
+        """Drop the internal K axis for single-key runners (host layout)."""
+        if self.policy.keyed:
+            return tree
+        return _tm(lambda x: x[0], tree)
+
+    def _lift(self, tree):
+        if self.policy.keyed:
+            return tree
+        return _tm(lambda x: jnp.asarray(x)[None], tree)
+
+    def state(self) -> Dict:
+        """Checkpointable runner state (host arrays); see the module
+        docstring for the pytree layout."""
+        to_np = lambda t: _tm(np.asarray, t)  # noqa: E731
+        out = {k: to_np(self._strip(v)) for k, v in self._tails.items()}
+        out["__t"] = self._t
+        if self._sparse is not None:
+            st = self._sparse
+            out["__sparse"] = {
+                "dirty": {k: np.asarray(self._strip(v))
+                          for k, v in st["dirty"].items()},
+                "prev": {k: to_np(self._strip(v))
+                         for k, v in st["prev"].items()},
+                "seed": {o: to_np(self._strip(v))
+                         for o, v in st["seed"].items()},
+                "started": st["started"]}
+        return out
+
+    def restore(self, state: Dict, *, strict: bool = True) -> None:
+        """Restore a :meth:`state` checkpoint, validating it against this
+        runner's configuration first.
+
+        Every inconsistency — wrong input names, wrong key count, wrong
+        tail length (a checkpoint from a different query/plan), a stream
+        clock misaligned with the partition span, missing or unexpected
+        sparse change state — raises a ``ValueError`` naming the mismatch,
+        instead of surfacing later as an opaque shape error inside the
+        jitted step.  ``strict=False`` additionally tolerates inputs absent
+        from the checkpoint (their tails re-initialize to φ) — the
+        session's attach/detach re-fit path.
+        """
+        state = dict(state)
+        if "__t" not in state:
+            raise ValueError("checkpoint has no '__t' stream clock")
+        t = state.pop("__t")
+        span = self.spec.span
+        if not isinstance(t, (int, np.integer)) or t < 0 or t % span:
+            raise ValueError(
+                f"checkpoint stream clock __t={t!r} is not a non-negative "
+                f"multiple of the partition span {span} — was this saved "
+                "from an engine with a different out_len/out_prec?")
+        sparse_state = state.pop("__sparse", None)
+        if self.policy.sparse and sparse_state is None:
+            raise ValueError(
+                "sparse engine cannot restore a dense checkpoint: no "
+                "'__sparse' change state (dirty tails / snapshots / seed)")
+        if not self.policy.sparse and sparse_state is not None:
+            raise ValueError(
+                "dense engine cannot restore a sparse checkpoint "
+                "(carries '__sparse' change state)")
+        specs = self.spec.input_specs
+        names = set(specs)
+        unknown = sorted(set(state) - names)
+        missing = sorted(n for n in names - set(state)
+                         if specs[n].left_halo > 0) if strict else []
+        if state and (unknown or missing):
+            raise ValueError(
+                f"checkpoint inputs {sorted(state)} != query inputs "
+                f"{sorted(names)} (unknown={unknown}, missing={missing})")
+        K = self._K
+        lead = ((K,) if self.policy.keyed else ())
+
+        def check_lead(name, got, what):
+            want = lead + (specs[name].left_halo,)
+            label = ("(n_keys, left_halo)" if self.policy.keyed
+                     else "(left_halo,)")
+            if tuple(got) != want:
+                raise ValueError(
+                    f"input {name}: checkpoint {what} shape {tuple(got)} != "
+                    f"{label} = {want}")
+
+        for name, (tv, tm) in state.items():
+            check_lead(name, np.shape(tm), "tail")
+            for leaf in jax.tree_util.tree_leaves(tv):
+                want = lead + (specs[name].left_halo,)
+                if tuple(np.shape(leaf)[:len(lead) + 1]) != want:
+                    label = ("(n_keys, left_halo)" if self.policy.keyed
+                             else "(left_halo,)")
+                    raise ValueError(
+                        f"input {name}: checkpoint tail value leaf shape "
+                        f"{tuple(np.shape(leaf))} does not lead with "
+                        f"{label} = {want}")
+        if sparse_state is not None:
+            for name in state:
+                got = np.shape(sparse_state["dirty"].get(name, ()))
+                check_lead(name, got, "dirty-tail")
+
+        self._t = int(t)
+        self._tails = {k: self._place(self._lift(_tm(jnp.asarray, v)))
+                       for k, v in state.items()}
+        if self._sparse is not None:
+            st = {"dirty": {}, "prev": {}, "seed": {}, "started": True}
+            if sparse_state is not None:
+                st["dirty"] = {
+                    k: self._place(self._lift(jnp.asarray(v)))
+                    for k, v in sparse_state["dirty"].items()
+                    if k in names}
+                st["prev"] = {
+                    k: self._place(self._lift(_tm(jnp.asarray, v)))
+                    for k, v in sparse_state["prev"].items() if k in names}
+                seed = sparse_state.get("seed") or {}
+                if not isinstance(seed, dict):
+                    # pre-policy-runner checkpoints (old KeyedEngine format)
+                    # stored the solo hold seed as a bare (value, valid)
+                    # tuple rather than a per-output dict
+                    if not self.spec.solo:
+                        raise ValueError(
+                            "checkpoint hold seed is a bare tuple (single-"
+                            "output format) but this runner serves a union "
+                            "DAG with outputs "
+                            f"{sorted(self.spec.out_precs)}")
+                    seed = {"__out": seed}
+                st["seed"] = {o: self._lift(_tm(jnp.asarray, v))
+                              for o, v in seed.items()
+                              if o in self.spec.out_precs}
+                st["started"] = bool(sparse_state.get("started", True))
+            self._sparse = st

@@ -18,14 +18,19 @@ exactly one place:
   every node's grid covers the union of all consumers' demands, and the
   per-source halo contracts merge across queries into a single partition
   contract.
-* :class:`~repro.multiquery.session.MultiQuerySession` — the runner: one
-  staged step per chunk evaluates the whole union DAG through the same node
-  evaluator the per-query executors use (compile.eval_op), carries one
-  merged halo-state dict as the only cross-chunk state, supports
-  attach/detach of queries between chunks (carried halos re-fit to the new
-  contract deterministically), and composes with the keyed engine — K keyed
-  sub-streams × N queries advance as a single vmapped, optionally
-  mesh-sharded XLA computation.
+* :class:`~repro.multiquery.session.MultiQuerySession` — the serving
+  layer: registered queries advance through the unified policy runner
+  (``repro.engine.Runner`` with ``ExecPolicy(dag="union")``) — one staged
+  step per chunk evaluates the whole union DAG through the same node
+  evaluator the per-query executors use (compile.eval_op), the runner's
+  state pytree under the merged halo contract is the only cross-chunk
+  state, attach/detach between chunks re-fits it deterministically, and
+  the policy axes compose: keyed (K sub-streams × N queries vmapped,
+  optionally mesh-sharded) and sparse (``sparse=True`` — the merged
+  ChangePlan of the union DAG, the per-input union of per-query
+  dilations, lets clean chunks/keys skip the whole union evaluation).
+  :func:`~repro.multiquery.session.union_runner` exposes the same
+  composition without the attach/detach machinery.
 * :func:`~repro.multiquery.session.shard_union_run` — the *time*-sharded
   union executor: the shared timeline is partitioned across mesh devices
   and the merged halo contracts — which get deeper as queries pile on —
@@ -44,8 +49,9 @@ exactly-representable data and within the kernel's documented
 window-bounded error otherwise (see kernels/ops.py; offset-invariant
 blocking is a ROADMAP follow-on).
 """
-from .session import MultiQuerySession, shard_union_run
+from .session import (MultiQuerySession, shard_union_run, union_body_spec,
+                      union_runner)
 from .shared import SharedPlanCache, SharingReport
 
 __all__ = ["MultiQuerySession", "SharedPlanCache", "SharingReport",
-           "shard_union_run"]
+           "shard_union_run", "union_body_spec", "union_runner"]

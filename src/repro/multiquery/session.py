@@ -1,26 +1,32 @@
 """Multi-query session: N concurrent queries, one pass over the stream.
 
-:class:`MultiQuerySession` is the serving-layer counterpart of
-:class:`repro.core.parallel.StreamRunner` / :class:`repro.engine.KeyedEngine`
-for *many* queries at once: registered queries are interned into a
+:class:`MultiQuerySession` is the serving-layer counterpart of the chunked
+runners for *many* queries at once: registered queries are interned into a
 :class:`repro.multiquery.shared.SharedPlanCache`, planned together as one
 union DAG (:func:`repro.core.plan.plan_union`), and advanced chunk by chunk
-through a single staged step — every shared interior node is evaluated once
+through the unified policy runner (:class:`repro.engine.Runner` with
+``ExecPolicy(dag="union")``) — every shared interior node is evaluated once
 per chunk regardless of how many queries read it.
 
-Cross-chunk state is one *merged* halo dict: per source name, the trailing
-``left_halo`` ticks demanded by the union contract (the per-input halo
-contract of plan.py, generalized to the union of all attached queries).
-Queries may attach/detach between chunks; the carried halo is re-fitted to
-the new merged contract deterministically (crop from the left when it
-shrinks, φ-pad on the left when it grows), so a session that changes its
-query set stays bit-identical to a fresh session restored from the same
-checkpoint.
+Cross-chunk state is the runner's unified pytree under the *merged* halo
+contract: per source name, the trailing ``left_halo`` ticks demanded by the
+union of all attached queries.  Queries may attach/detach between chunks;
+the carried halo is re-fitted to the new merged contract deterministically
+(crop from the left when it shrinks, φ-pad on the left when it grows), so a
+session that changes its query set stays bit-identical to a fresh session
+restored from the same checkpoint.
 
-Keyed sources compose exactly as in the keyed engine: chunks carry a leading
-key axis, the union step is vmapped over it, and an optional mesh shards the
-key axis via :func:`repro.engine.wrap_keyed_step` — K keyed sub-streams ×
-N queries advance as a single XLA computation per chunk.
+Keyed sources compose exactly as in the keyed engine: chunks carry a
+leading key axis, the union step is vmapped over it, and an optional mesh
+shards the key axis — K keyed sub-streams × N queries advance as a single
+XLA computation per chunk.
+
+``sparse=True`` composes change-compressed execution with multi-query
+sharing: the merged :class:`~repro.core.plan.ChangePlan` of the union DAG
+is the per-input union of the per-query dilations (derived from the merged
+halo contracts — the same artifact, read backwards), so chunks (and, for
+keyed sessions, keys) whose dilated lineage saw no change skip the whole
+union evaluation and hold every query's previous output.
 """
 from __future__ import annotations
 
@@ -30,15 +36,17 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core import boundary, compile as qcompile, ir, parallel
-from ..core.plan import plan_union
+from ..core.plan import plan_change, plan_union
 from ..core.stream import SnapshotGrid
-from ..engine import wrap_keyed_step
+from ..engine.policy import ExecPolicy, MeshPlacement
+from ..engine.runner import BodySpec, Runner
 from .shared import SharedPlanCache, SharingReport
 
-__all__ = ["MultiQuerySession", "shard_union_run"]
+__all__ = ["MultiQuerySession", "shard_union_run", "union_body_spec",
+           "union_runner"]
 
 
 def _union_body(plan, queries, order, pallas, sum_algo, span,
@@ -46,7 +54,7 @@ def _union_body(plan, queries, order, pallas, sum_algo, span,
     """The union-DAG chunk evaluator (single-key view, time axis 0):
     every node once through the shared evaluator, then per-query output
     windows sliced off each root's (possibly union-widened) grid.  Shared
-    by the session's staged step and :func:`shard_union_run`."""
+    by the session's per-segment body and :func:`shard_union_run`."""
 
     def body(full: Dict[str, tuple]) -> Dict[str, tuple]:
         env: Dict[int, tuple] = {}
@@ -72,6 +80,55 @@ def _union_body(plan, queries, order, pallas, sum_algo, span,
         return outs
 
     return body
+
+
+def union_body_spec(plan, queries: Dict[str, ir.Node], *,
+                    pallas: Optional[bool] = None, sum_algo: str = "block",
+                    jit: bool = True, counts: Optional[dict] = None,
+                    sparse: bool = False) -> BodySpec:
+    """The :class:`repro.engine.runner.BodySpec` of a union DAG: one body
+    evaluating every node once and fanning out per-query output windows.
+
+    With ``sparse=True`` the spec carries the *merged* ChangePlan — the
+    per-input union of the per-query dilations, obtained by reading the
+    union plan's merged halo contracts backwards
+    (:func:`repro.core.plan.plan_change` on the
+    :class:`~repro.core.plan.UnionPlan`).  ``counts`` (a mutable dict)
+    enables per-fingerprint node-evaluation counting — the sharing test
+    hook; pair it with ``jit=False``.
+    """
+    order = ir.topo_order_multi(list(plan.roots))
+    fps = ({id(n): ir.fingerprint(n) for n in order}
+           if counts is not None else None)
+    outs_fn = _union_body(plan, queries, order, pallas, sum_algo, plan.span,
+                          counts=counts, fps=fps)
+    return BodySpec(
+        input_specs=plan.input_specs, out_len=plan.out_len,
+        out_prec=plan.out_prec, outs_fn=outs_fn,
+        out_precs={q: root.prec for q, root in queries.items()},
+        change_plan=plan_change(plan) if sparse else None,
+        root=None, jit=jit, solo=False)
+
+
+def union_runner(queries: Dict[str, object], span: int,
+                 policy: Optional[ExecPolicy] = None, *,
+                 n_keys: Optional[int] = None, segs_per_chunk: int = 1,
+                 pallas: Optional[bool] = None, sum_algo: str = "block"
+                 ) -> Runner:
+    """Build a unified :class:`repro.engine.Runner` over the union DAG of
+    ``queries`` (name → TStream or IR node) — the ``dag='union'`` corner of
+    the policy space, without the session's attach/detach machinery."""
+    queries = {name: getattr(q, "node", q) for name, q in queries.items()}
+    for root in queries.values():
+        ir.validate(root)
+    policy = policy if policy is not None else ExecPolicy(dag="union")
+    if not policy.union:
+        raise ValueError(
+            f"union_runner needs ExecPolicy(dag='union'), got {policy.dag!r}")
+    plan = plan_union(list(queries.values()), span)
+    spec = union_body_spec(plan, queries, pallas=pallas, sum_algo=sum_algo,
+                           sparse=policy.sparse)
+    return Runner(spec, policy, n_keys=n_keys, segs_per_chunk=segs_per_chunk)
 
 
 def shard_union_run(queries: Dict[str, object], span: int,
@@ -147,7 +204,12 @@ class MultiQuerySession:
         emits ``span // root.prec`` ticks per step).
     n_keys / mesh / axis:
         Keyed execution: required key count when sources are ``keyed=True``;
-        optional mesh shards the key axis (as in KeyedEngine).
+        optional mesh shards the key axis (as in the keyed engine).
+    sparse:
+        Change-compressed stepping: chunks — and, when keyed, individual
+        keys — whose dilated input lineage saw no change skip the union
+        evaluation entirely and hold every query's previous output (the
+        merged ChangePlan of the union DAG; see the module docstring).
     pallas / sum_algo:
         Kernel knobs, passed through to the node evaluator.
     jit:
@@ -164,6 +226,7 @@ class MultiQuerySession:
                  mesh: Optional[Mesh] = None, axis: str = "data",
                  pallas: Optional[bool] = None, sum_algo: str = "block",
                  jit: bool = True, instrument: bool = False,
+                 sparse: bool = False,
                  cache: Optional[SharedPlanCache] = None):
         self.span = span
         self.n_keys = n_keys
@@ -173,16 +236,15 @@ class MultiQuerySession:
         self.sum_algo = sum_algo
         self.jit = jit and not instrument
         self.instrument = instrument
+        self.sparse = sparse
         self.cache = cache if cache is not None else SharedPlanCache()
         self.node_eval_counts: Dict[str, int] = {}
         self._queries: Dict[str, ir.Node] = {}   # name -> interned root
         self._plan = None
-        self._order: list = []
-        self._step_fn = None
+        self._runner: Optional[Runner] = None
+        self._pending: Optional[Dict] = None  # state awaiting next rebuild
         self._dirty = True
         self._keyed: Optional[bool] = None
-        self._tails: Dict[str, tuple] = {}
-        self._t = 0  # absolute time of the next chunk's output start
 
     # -- query registry ------------------------------------------------------
     def attach(self, name: str, query) -> ir.Node:
@@ -251,6 +313,10 @@ class MultiQuerySession:
         return self.node_eval_counts.get(ir.fingerprint(node), 0)
 
     # -- planning / staging --------------------------------------------------
+    @property
+    def _taxis(self) -> int:
+        return 1 if self._keyed else 0
+
     def _rebuild(self) -> None:
         if not self._queries:
             raise ValueError("no queries attached")
@@ -260,61 +326,33 @@ class MultiQuerySession:
             if s.right_halo > 0:  # pragma: no cover - guarded per-attach
                 raise NotImplementedError(
                     f"input {name} has lookahead; lookback-only sessions")
-        self._plan = plan
-        self._order = ir.topo_order_multi(roots)
-        self._step_fn = self._build_step()
+        carry = self._pending
+        if carry is None and self._runner is not None:
+            carry = self._runner.state()
+        spec = union_body_spec(
+            plan, self._queries, pallas=self.pallas, sum_algo=self.sum_algo,
+            jit=self.jit,
+            counts=self.node_eval_counts if self.instrument else None,
+            sparse=self.sparse)
+        policy = ExecPolicy(
+            body="sparse" if self.sparse else "dense",
+            keys="vmapped" if self._keyed else "single",
+            # the mesh shards the key axis only (attach() rejects unkeyed
+            # mesh sessions; keep the guard local too so the policy always
+            # mirrors what the old keyed step staged)
+            placement=(MeshPlacement(self.mesh, self.axis)
+                       if self.mesh is not None and self._keyed
+                       else "local"),
+            dag="union")
+        runner = Runner(spec, policy,
+                        n_keys=self.n_keys if self._keyed else None)
+        if carry is not None:
+            runner.restore(self._refit(carry, plan), strict=False)
+        self._plan, self._runner = plan, runner
+        self._pending = None
         self._dirty = False
 
-    @property
-    def _taxis(self) -> int:
-        return 1 if self._keyed else 0
-
-    def _build_step(self):
-        plan = self._plan
-        names = sorted(plan.input_specs)
-        specs = plan.input_specs
-        order = list(self._order)
-        queries = dict(self._queries)
-        fps = {id(n): ir.fingerprint(n) for n in order} if self.instrument \
-            else {}
-        taxis = self._taxis
-        body = _union_body(plan, queries, order, self.pallas, self.sum_algo,
-                           self.span, counts=self.node_eval_counts, fps=fps)
-
-        def step(tails, chunks):
-            full = {}
-            for name in names:
-                tv, tm = tails[name]
-                cv, cm = chunks[name]
-                full[name] = (
-                    jax.tree_util.tree_map(
-                        lambda a, b: jnp.concatenate([a, b], axis=taxis),
-                        tv, cv),
-                    jnp.concatenate([tm, cm], axis=taxis))
-            if taxis:
-                flat = [full[name] for name in names]
-                outs = jax.vmap(
-                    lambda *f: body(dict(zip(names, f))))(*flat)
-            else:
-                outs = body(full)
-            new_tails = {}
-            for name in names:
-                s = specs[name]
-                fv, fm = full[name]
-                new_tails[name] = (
-                    jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, s.core, s.core + s.left_halo, axis=taxis), fv),
-                    jax.lax.slice_in_dim(fm, s.core, s.core + s.left_halo,
-                                         axis=taxis))
-            return outs, new_tails
-
-        if not self.jit:
-            return step
-        return wrap_keyed_step(step, self.mesh if self._keyed else None,
-                               self.axis)
-
-    # -- halo-state plumbing -------------------------------------------------
+    # -- halo-state re-fitting (attach/detach between chunks) ----------------
     def _fit_tail(self, tail, hl: int):
         """Re-fit a carried tail to the current merged contract: keep the
         trailing ``hl`` ticks, φ-padding on the left when history is short.
@@ -322,39 +360,64 @@ class MultiQuerySession:
         and a fresh session restored from the same checkpoint agree."""
         tv, tm = tail
         taxis = self._taxis
-        cur = tm.shape[taxis]
+        cur = np.shape(tm)[taxis]
         if cur == hl:
             return tail
         if cur > hl:
             lo = cur - hl
             return (jax.tree_util.tree_map(
-                lambda x: jax.lax.slice_in_dim(x, lo, cur, axis=taxis), tv),
-                jax.lax.slice_in_dim(tm, lo, cur, axis=taxis))
+                lambda x: jax.lax.slice_in_dim(
+                    jnp.asarray(x), lo, cur, axis=taxis), tv),
+                jax.lax.slice_in_dim(jnp.asarray(tm), lo, cur, axis=taxis))
         pad = hl - cur
         cfg_m = [(0, 0)] * taxis + [(pad, 0)]
 
         def one(x):
+            x = jnp.asarray(x)
             cfg = cfg_m + [(0, 0)] * (x.ndim - taxis - 1)
             return jnp.pad(x, cfg)
 
         return (jax.tree_util.tree_map(one, tv), one(tm))
 
-    def _blank_tail(self, hl: int, proto):
-        pv, pm = proto
+    def _fit_dirty(self, d, hl: int):
+        """Re-fit a carried dirty tail: crop from the left, or pad with
+        *True* (unknown history is conservatively dirty — the φ-padded halo
+        it describes must be recomputed, exactly what dense does there)."""
+        d = jnp.asarray(d)
         taxis = self._taxis
-        lead = (self.n_keys, hl) if taxis else (hl,)
+        cur = d.shape[taxis]
+        if cur == hl:
+            return d
+        if cur > hl:
+            return jax.lax.slice_in_dim(d, cur - hl, cur, axis=taxis)
+        cfg = [(0, 0)] * taxis + [(hl - cur, 0)]
+        return jnp.pad(d, cfg, constant_values=True)
 
-        def one(x):
-            return jnp.zeros(lead + x.shape[taxis + 1:], x.dtype)
-
-        return (jax.tree_util.tree_map(one, pv),
-                jnp.zeros(lead, bool))
-
-    def _place(self, tree):
-        if self.mesh is None:
-            return tree
-        sh = NamedSharding(self.mesh, P(self.axis))
-        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+    def _refit(self, state: Dict, plan) -> Dict:
+        """Translate a carried/checkpointed state onto a (possibly
+        different) union contract: tails re-fit per source, sparse change
+        state filtered to the surviving sources/queries.  Outputs or inputs
+        absent from the state simply start fresh (their first segment is
+        forced to compute), which keeps the rule deterministic."""
+        st = dict(state)
+        t = st.pop("__t")
+        sp = st.pop("__sparse", None)
+        out = {name: self._fit_tail(st[name], spec.left_halo)
+               for name, spec in plan.input_specs.items() if name in st}
+        out["__t"] = t
+        if sp is not None and self.sparse:
+            out["__sparse"] = {
+                "dirty": {n: self._fit_dirty(sp["dirty"][n],
+                                             plan.input_specs[n].left_halo)
+                          for n in plan.input_specs if n in sp["dirty"]},
+                "prev": {n: v for n, v in sp["prev"].items()
+                         if n in plan.input_specs},
+                "seed": {q: v for q, v in sp["seed"].items()
+                         if q in self._queries},
+                "started": sp["started"]}
+        elif sp is not None:
+            out["__sparse"] = sp  # let the runner's validator reject it
+        return out
 
     # -- execution -----------------------------------------------------------
     def step(self, chunks: Dict[str, SnapshotGrid]
@@ -366,32 +429,7 @@ class MultiQuerySession:
         query name."""
         if self._dirty:
             self._rebuild()
-        specs = self._plan.input_specs
-        taxis = self._taxis
-        chunk_in, tails = {}, {}
-        for name, spec in specs.items():
-            g = chunks[name]
-            want = ((self.n_keys, spec.core) if taxis else (spec.core,))
-            if tuple(g.valid.shape) != want:
-                raise ValueError(
-                    f"input {name}: chunk validity shape "
-                    f"{tuple(g.valid.shape)} != expected {want}")
-            chunk_in[name] = self._place((g.value, g.valid))
-            if name in self._tails:
-                tails[name] = self._fit_tail(self._tails[name],
-                                             spec.left_halo)
-            else:
-                tails[name] = self._place(
-                    self._blank_tail(spec.left_halo, chunk_in[name]))
-        outs, new_tails = self._step_fn(tails, chunk_in)
-        self._tails = new_tails
-        results = {}
-        for qname, (v, m) in outs.items():
-            results[qname] = SnapshotGrid(
-                value=v, valid=m, t0=self._t,
-                prec=self._queries[qname].prec)
-        self._t += self.span
-        return results
+        return self._runner.step(chunks)
 
     def run(self, inputs: Dict[str, SnapshotGrid], n_chunks: int
             ) -> Dict[str, SnapshotGrid]:
@@ -399,52 +437,28 @@ class MultiQuerySession:
         stitch each query's outputs along time."""
         if self._dirty:
             self._rebuild()
-        specs = self._plan.input_specs
-        taxis = self._taxis
-        outs: Dict[str, list] = {}
-        for k in range(n_chunks):
-            chunk = {}
-            for name, spec in specs.items():
-                g = inputs[name]
-                lo = k * spec.core
-                chunk[name] = SnapshotGrid(
-                    value=jax.tree_util.tree_map(
-                        lambda x: jax.lax.slice_in_dim(
-                            x, lo, lo + spec.core, axis=taxis), g.value),
-                    valid=jax.lax.slice_in_dim(
-                        g.valid, lo, lo + spec.core, axis=taxis),
-                    t0=g.t0 + lo * spec.prec, prec=spec.prec)
-            for qname, out in self.step(chunk).items():
-                outs.setdefault(qname, []).append(out)
-        stitched = {}
-        for qname, parts in outs.items():
-            value = jax.tree_util.tree_map(
-                lambda *xs: jnp.concatenate(xs, axis=taxis),
-                *[p.value for p in parts])
-            valid = jnp.concatenate([p.valid for p in parts], axis=taxis)
-            stitched[qname] = SnapshotGrid(value=value, valid=valid,
-                                           t0=parts[0].t0,
-                                           prec=parts[0].prec)
-        return stitched
+        return self._runner.run(inputs, n_chunks)
 
     def reset(self) -> None:
         """Drop carried state (and instrumentation counters); the next
         chunk starts a fresh stream at t=0."""
-        self._tails = {}
-        self._t = 0
+        self._pending = None
+        if self._runner is not None:
+            self._runner.reset()
         self.node_eval_counts.clear()
 
     # -- checkpointing -------------------------------------------------------
     def state(self) -> Dict:
         """Checkpointable session state (host arrays): the merged halo dict
-        plus the stream clock.  Restoring into a session with a different
-        query set is well-defined — tails re-fit to the new contract."""
-        return {k: jax.tree_util.tree_map(np.asarray, v)
-                for k, v in self._tails.items()} | {"__t": self._t}
+        plus the stream clock (and change metadata when sparse).  Restoring
+        into a session with a different query set is well-defined — tails
+        re-fit to the new contract."""
+        if self._pending is not None:  # restored but not yet re-staged
+            return dict(self._pending)
+        if self._runner is not None:
+            return self._runner.state()
+        return {"__t": 0}
 
     def restore(self, state: Dict) -> None:
-        state = dict(state)
-        self._t = state.pop("__t")
-        self._tails = {k: self._place(
-            jax.tree_util.tree_map(jnp.asarray, v))
-            for k, v in state.items()}
+        self._pending = dict(state)
+        self._dirty = True

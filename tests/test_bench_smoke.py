@@ -55,6 +55,27 @@ def test_fig_halo_depth_smoke():
     assert "hops=4" in out, out
 
 
+def test_fig_policy_smoke_and_json_results():
+    """The policy-matrix sweep must report a dense and a sparse row for
+    every covered keys×dag point and write BENCH_figpolicy.json with the
+    compaction/speedup columns on the sparse rows."""
+    path = os.path.join(REPO, "BENCH_figpolicy.json")
+    if os.path.exists(path):
+        os.remove(path)
+    out = _run_section("figpolicy")
+    for keys, dag in (("single", "solo"), ("vmapped", "solo"),
+                      ("single", "union")):
+        assert f"figpolicy_dense_{keys}_{dag}," in out, out
+        assert f"figpolicy_sparse_{keys}_{dag}," in out, out
+    doc = json.load(open(path))
+    assert doc["section"] == "figpolicy"
+    sparse_rows = [r for r in doc["rows"] if r.get("body") == "sparse"]
+    assert sparse_rows and all("compact" in r and "speedup" in r
+                               for r in sparse_rows), doc["rows"]
+    # the ~2%-change workload must actually compact
+    assert min(r["compact"] for r in sparse_rows) < 0.5, sparse_rows
+
+
 def test_fig_sparse_smoke_and_json_results():
     """The change-rate sweep must report dense + sparse rows at every rate
     and write the machine-readable BENCH_figsparse.json next to the stdout

@@ -1,0 +1,475 @@
+"""Execution-policy layer tests (repro.engine.policy / repro.engine.runner).
+
+The contract: the four policy axes (body × keys × placement × dag) compose
+freely, and every point of the space is **bit-identical** to the dense
+single-stream reference on integer-valued data — the same invariant each
+silo used to assert on its own, now asserted across the whole matrix.  The
+deprecated entry points (StreamRunner, SparseStreamRunner, KeyedEngine,
+MultiQuerySession) are thin wrappers over the unified runner and must
+produce bit-identical outputs to driving the runner directly.
+
+The ≥4-device mesh compositions live in tests/test_parallel_multidev.py
+(they need a multi-device subprocess); here mesh placement runs on the
+trivial 1-device mesh, which exercises the per-shard compaction and
+shard_map staging paths without SPMD.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.parallel import (SparseStreamRunner, StreamRunner,
+                                 partition_run)
+from repro.core.stream import SnapshotGrid
+from repro.engine import ExecPolicy, KeyedEngine, Runner, keyed_grid, \
+    mesh_placement
+from repro.multiquery import MultiQuerySession, union_runner
+
+# the deprecated wrappers are under test here on purpose
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+N, K = 256, 4
+
+
+def _mesh1():
+    return jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+
+
+def pw_const(shape, rate, seed):
+    """Piecewise-constant integer-valued stream(s): ``rate`` of ticks
+    change, the rest hold — so sparse execution actually compacts."""
+    rng = np.random.default_rng(seed)
+    change = rng.random(shape) < rate
+    change[..., 0] = True
+    raw = np.floor(rng.random(shape) * 100).astype(np.float32)
+    idx = np.maximum.accumulate(
+        np.where(change, np.arange(shape[-1]), -1), axis=-1)
+    return np.take_along_axis(raw, idx, axis=-1) if len(shape) > 1 \
+        else raw[idx], np.ones(shape, bool)
+
+
+def _grid(vals, valid, t0=0):
+    return SnapshotGrid(value=jnp.asarray(vals), valid=jnp.asarray(valid),
+                        t0=t0, prec=1)
+
+
+def _trend(s):
+    return (s.window(16).mean()
+            .join(s.window(32).mean(), lambda a, b: a - b)
+            .where(lambda d: d > 0))
+
+
+def _bands(s):
+    return s.window(24).max().join(s, lambda hi, x: hi - x)
+
+
+def _assert_same(ref, got, ctx=""):
+    m1, m2 = np.asarray(ref.valid), np.asarray(got.valid)
+    assert np.array_equal(m1, m2), (ctx, m1.sum(), m2.sum())
+    assert np.array_equal(np.asarray(ref.value)[m1],
+                          np.asarray(got.value)[m1]), ctx
+
+
+# ---------------------------------------------------------------------------
+# ExecPolicy validation
+# ---------------------------------------------------------------------------
+
+def test_policy_rejects_unknown_axis_values():
+    with pytest.raises(ValueError, match="body"):
+        ExecPolicy(body="chunky")
+    with pytest.raises(ValueError, match="keys"):
+        ExecPolicy(keys="many")
+    with pytest.raises(ValueError, match="dag"):
+        ExecPolicy(dag="forest")
+    with pytest.raises(ValueError, match="placement"):
+        ExecPolicy(placement="cloud")
+
+
+def test_policy_accessors_and_describe():
+    p = ExecPolicy(body="sparse", keys="vmapped",
+                   placement=mesh_placement(_mesh1()), dag="union")
+    assert p.sparse and p.keyed and p.union
+    assert p.mesh is not None and p.axis == "data" and p.n_shards == 1
+    assert p.describe() == "sparse×vmapped×mesh1×union"
+    assert ExecPolicy().describe() == "dense×single×local×solo"
+    # a bare Mesh is accepted and normalized onto its first axis
+    assert ExecPolicy(placement=_mesh1()).axis == "data"
+
+
+def test_runner_requires_n_keys_for_vmapped():
+    exe = qc.compile_query(
+        TStream.source("in", keyed=True).window(8).mean().node,
+        out_len=16, pallas=False)
+    with pytest.raises(ValueError, match="n_keys"):
+        Runner(exe, ExecPolicy(keys="vmapped"))
+
+
+def test_runner_sparse_requires_change_plan():
+    exe = qc.compile_query(TStream.source("in").window(8).mean().node,
+                           out_len=16, pallas=False)
+    with pytest.raises(ValueError, match="sparse=True"):
+        Runner(exe, ExecPolicy(body="sparse"))
+
+
+def test_runner_rejects_lookahead():
+    exe = qc.compile_query(TStream.source("in").shift(-4).node,
+                           out_len=16, pallas=False)
+    with pytest.raises(NotImplementedError, match="lookahead"):
+        Runner(exe, ExecPolicy())
+
+
+# ---------------------------------------------------------------------------
+# satellite: the old constructors are bit-identical to the unified runner
+# ---------------------------------------------------------------------------
+
+def test_stream_runner_wrapper_bit_identical_to_runner():
+    vals, valid = pw_const((N,), 0.05, seed=1)
+    q = _trend(TStream.source("in", prec=1))
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+    old = StreamRunner(exe)
+    new = Runner(exe, ExecPolicy())
+    ref = partition_run(exe, {"in": _grid(vals, valid)}, 0, N // 32)
+    for k in range(N // 32):
+        sl = slice(k * 32, (k + 1) * 32)
+        a = old.step({"in": _grid(vals[sl], valid[sl], t0=k * 32)})
+        b = new.step({"in": _grid(vals[sl], valid[sl], t0=k * 32)})
+        assert a.t0 == b.t0 == k * 32
+        assert np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+        assert np.array_equal(np.asarray(a.value), np.asarray(b.value))
+        # ... and both equal the dense partition reference on this chunk
+        _assert_same(SnapshotGrid(
+            value=np.asarray(ref.value)[sl], valid=np.asarray(ref.valid)[sl],
+            t0=k * 32, prec=1), a, f"chunk {k}")
+
+
+def test_sparse_stream_runner_wrapper_bit_identical_to_runner():
+    vals, valid = pw_const((N,), 0.03, seed=2)
+    q = _trend(TStream.source("in", prec=1))
+    exe = qc.compile_query(q.node, out_len=32, pallas=False, sparse=True)
+    old = SparseStreamRunner(exe, segs_per_chunk=4)
+    new = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=4)
+    for c in range(2):
+        sl = slice(c * 128, (c + 1) * 128)
+        a = old.step({"in": _grid(vals[sl], valid[sl], t0=c * 128)})
+        b = new.step({"in": _grid(vals[sl], valid[sl], t0=c * 128)})
+        assert np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+        assert np.array_equal(np.asarray(a.value), np.asarray(b.value))
+
+
+def test_keyed_engine_wrapper_bit_identical_to_runner():
+    vals, valid = pw_const((K, N), 0.05, seed=3)
+    q = _trend(TStream.source("in", keyed=True))
+    exe = qc.compile_query(q.node, out_len=64, pallas=False)
+    g = {"in": keyed_grid(vals, valid)}
+    a = KeyedEngine(exe, n_keys=K).run(g, N // 64)
+    b = Runner(exe, ExecPolicy(keys="vmapped"), n_keys=K).run(g, N // 64)
+    _assert_same(a, b, "keyed")
+
+
+# ---------------------------------------------------------------------------
+# satellite: KeyedEngine(sparse=True, mesh=...) routes through the composed
+# path instead of raising
+# ---------------------------------------------------------------------------
+
+def test_keyed_engine_sparse_mesh_no_longer_rejected():
+    vals, valid = pw_const((K, N), 0.03, seed=4)
+    q = _trend(TStream.source("in", keyed=True))
+    exe_d = qc.compile_query(q.node, out_len=64, pallas=False)
+    exe_s = qc.compile_query(q.node, out_len=64, pallas=False, sparse=True)
+    g = {"in": keyed_grid(vals, valid)}
+    ref = KeyedEngine(exe_d, n_keys=K).run(g, N // 64)
+    # the composition the old engine rejected with NotImplementedError
+    eng = KeyedEngine(exe_s, n_keys=K, mesh=_mesh1(), sparse=True)
+    _assert_same(ref, eng.run(g, N // 64), "sparse+mesh")
+
+
+def test_runner_sparse_mesh_single_keys_shards_segments():
+    """The acceptance spelling: ExecPolicy(body=sparse, placement=mesh)
+    with default keys='single' — segments shard over the mesh, per-shard
+    compaction, bit-identical to the dense local reference."""
+    vals, valid = pw_const((N,), 0.03, seed=5)
+    q = _trend(TStream.source("in", prec=1))
+    exe_d = qc.compile_query(q.node, out_len=32, pallas=False)
+    exe_s = qc.compile_query(q.node, out_len=32, pallas=False, sparse=True)
+    g = {"in": _grid(vals, valid)}
+    ref = Runner(exe_d, ExecPolicy()).run(g, N // 32)
+    got = Runner(exe_s,
+                 ExecPolicy(body="sparse", placement=mesh_placement(_mesh1())),
+                 segs_per_chunk=4).run(g, N // 128)
+    _assert_same(ref, got, "sparse×single×mesh")
+
+
+# ---------------------------------------------------------------------------
+# sparse × union: the merged ChangePlan skips clean chunks/keys
+# ---------------------------------------------------------------------------
+
+def _union_queries(keyed=False):
+    s = TStream.source("in", prec=1, keyed=keyed)
+    return {"trend": _trend(s), "bands": _bands(s)}
+
+
+def test_sparse_union_session_matches_dense_solo():
+    """MultiQuerySession(sparse=True) ≡ the dense solo StreamRunner per
+    query, bit-for-bit on integer-valued piecewise-constant data — and the
+    union evaluation is actually skipped on clean chunks (compaction
+    capacity below the chunk count appears in the staged-step cache)."""
+    vals, valid = pw_const((N,), 0.02, seed=6)
+    queries = _union_queries()
+    sess = MultiQuerySession(64, pallas=False, sparse=True)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    outs = sess.run({"in": _grid(vals, valid)}, N // 64)
+    for name, q in queries.items():
+        exe = qc.compile_query(q.node, out_len=64, pallas=False)
+        runner = StreamRunner(exe)
+        ref_v, ref_m = [], []
+        for k in range(N // 64):
+            sl = slice(k * 64, (k + 1) * 64)
+            o = runner.step({"in": _grid(vals[sl], valid[sl], t0=k * 64)})
+            ref_v.append(np.asarray(o.value))
+            ref_m.append(np.asarray(o.valid))
+        want = SnapshotGrid(value=np.concatenate(ref_v),
+                            valid=np.concatenate(ref_m), t0=0, prec=1)
+        _assert_same(want, outs[name], name)
+
+
+def test_sparse_union_session_skips_clean_chunks():
+    """On an all-constant stream only the first chunk (hold-seed base case)
+    computes; later chunks hold every query's previous output."""
+    vals = np.full(N, 7.0, np.float32)
+    queries = _union_queries()
+    sess = MultiQuerySession(64, pallas=False, sparse=True)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    outs = sess.run({"in": _grid(vals, np.ones(N, bool))}, N // 64)
+    caps = sorted(k[-1] for k in sess._runner.spec.step_cache
+                  if isinstance(k, tuple) and k[0] == "compute")
+    assert caps == [1], caps  # never more than the forced first segment
+    for name, q in queries.items():
+        exe = qc.compile_query(q.node, out_len=64, pallas=False)
+        ref = partition_run(exe, {"in": _grid(vals, np.ones(N, bool))},
+                            0, N // 64)
+        _assert_same(ref, outs[name], name)
+
+
+def test_sparse_union_session_keyed_attach_detach_deterministic():
+    """Sparse keyed sessions re-fit change state across attach/detach the
+    same way a fresh session restored from the checkpoint does."""
+    vals, valid = pw_const((K, 4 * 64), 0.05, seed=7)
+    g = keyed_grid(vals, valid)
+    queries = _union_queries(keyed=True)
+    names = list(queries)
+
+    def chunk(j):
+        sl = slice(j * 64, (j + 1) * 64)
+        return {"in": keyed_grid(vals[:, sl], valid[:, sl], t0=j * 64)}
+
+    live = MultiQuerySession(64, n_keys=K, pallas=False, sparse=True)
+    live.attach(names[0], queries[names[0]])
+    live.step(chunk(0))
+    ckpt = live.state()
+    assert "__sparse" in ckpt
+    live.attach(names[1], queries[names[1]])      # attach mid-run
+    o1 = live.step(chunk(1))
+    o2 = live.step(chunk(2))
+
+    fresh = MultiQuerySession(64, n_keys=K, pallas=False, sparse=True)
+    for n in names:
+        fresh.attach(n, queries[n])
+    fresh.restore(ckpt)
+    p1 = fresh.step(chunk(1))
+    p2 = fresh.step(chunk(2))
+    for n in names:
+        _assert_same(o1[n], p1[n], ("attach", n))
+        _assert_same(o2[n], p2[n], ("attach2", n))
+
+
+def test_union_runner_direct_matches_session():
+    vals, valid = pw_const((N,), 0.05, seed=8)
+    queries = _union_queries()
+    r = union_runner(queries, 64, ExecPolicy(dag="union"), pallas=False)
+    outs = r.run({"in": _grid(vals, valid)}, N // 64)
+    sess = MultiQuerySession(64, pallas=False)
+    for name, q in queries.items():
+        sess.attach(name, q)
+    ref = sess.run({"in": _grid(vals, valid)}, N // 64)
+    for name in queries:
+        _assert_same(ref[name], outs[name], name)
+
+
+def test_union_runner_rejects_solo_policy():
+    with pytest.raises(ValueError, match="dag"):
+        union_runner(_union_queries(), 64, ExecPolicy())
+
+
+# ---------------------------------------------------------------------------
+# unified checkpoint/restore/validate path
+# ---------------------------------------------------------------------------
+
+def test_runner_restore_validates_across_policies():
+    q = _trend(TStream.source("in", prec=1))
+    exe = qc.compile_query(q.node, out_len=32, pallas=False)
+    exe_s = qc.compile_query(q.node, out_len=32, pallas=False, sparse=True)
+    vals, valid = pw_const((N,), 0.05, seed=9)
+    r = Runner(exe, ExecPolicy())
+    r.step({"in": _grid(vals[:32], valid[:32])})
+    state = r.state()
+    # single-key tail shapes are validated too (not just the keyed engine)
+    bad = dict(state)
+    bad["in"] = (np.zeros((7,), np.float32), np.zeros((7,), bool))
+    with pytest.raises(ValueError, match="left_halo"):
+        Runner(exe, ExecPolicy()).restore(bad)
+    with pytest.raises(ValueError, match="stream clock"):
+        Runner(exe, ExecPolicy()).restore(dict(state, __t=17))
+    with pytest.raises(ValueError, match="unknown="):
+        Runner(exe, ExecPolicy()).restore(
+            {"bogus": state["in"], "__t": state["__t"]})
+    with pytest.raises(ValueError, match="sparse engine cannot restore"):
+        Runner(exe_s, ExecPolicy(body="sparse")).restore(state)
+
+
+def test_runner_restores_pre_policy_tuple_seed_checkpoint():
+    """Checkpoints written by the pre-policy KeyedEngine stored the sparse
+    hold seed as a bare (value, valid) tuple; the unified restore path must
+    keep accepting them through the deprecation window (and reject them
+    with a clear error for union runners, whose seeds are per-query)."""
+    q = _trend(TStream.source("in", keyed=True))
+    exe = qc.compile_query(q.node, out_len=32, pallas=False, sparse=True)
+    vals, valid = pw_const((K, 64), 0.05, seed=10)
+    e1 = KeyedEngine(exe, n_keys=K, sparse=True)
+    e1.step({"in": keyed_grid(vals[:, :32], valid[:, :32])})
+    state = e1.state()
+    # rewrite the seed into the historical tuple format
+    old = dict(state)
+    old["__sparse"] = dict(state["__sparse"],
+                           seed=state["__sparse"]["seed"]["__out"])
+    e2 = KeyedEngine(exe, n_keys=K, sparse=True)
+    e2.restore(old)
+    a = e1.step({"in": keyed_grid(vals[:, 32:], valid[:, 32:], t0=32)})
+    b = e2.step({"in": keyed_grid(vals[:, 32:], valid[:, 32:], t0=32)})
+    assert np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    assert np.array_equal(np.asarray(a.value), np.asarray(b.value))
+    # union runners have per-query seeds: the tuple format must be named
+    r = union_runner(_union_queries(keyed=True), 32,
+                     ExecPolicy(body="sparse", keys="vmapped", dag="union"),
+                     n_keys=K, pallas=False)
+    with pytest.raises(ValueError, match="bare tuple"):
+        r.restore(old)
+
+
+# ---------------------------------------------------------------------------
+# satellite: the policy-matrix property (slow CI split)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_policy_matrix_exhaustive_bit_identity():
+    """Every point of body × keys × placement × dag agrees bit-for-bit with
+    the dense single-stream reference on integer-valued data."""
+    n, k, seg = 128, K, 16
+    data1, _ = pw_const((n,), 0.04, seed=11)
+    datak, _ = pw_const((k, n), 0.04, seed=12)
+    ones1, onesk = np.ones(n, bool), np.ones((k, n), bool)
+
+    def reference(queries, keyed):
+        refs = {}
+        for name, q in queries.items():
+            exe = qc.compile_query(q.node, out_len=n, pallas=False)
+            if keyed:
+                per_key = [partition_run(
+                    exe, {"in": _grid(datak[i], onesk[i])}, 0, 1)
+                    for i in range(k)]
+                refs[name] = SnapshotGrid(
+                    value=np.stack([np.asarray(p.value) for p in per_key]),
+                    valid=np.stack([np.asarray(p.valid) for p in per_key]),
+                    t0=0, prec=1)
+            else:
+                refs[name] = partition_run(
+                    exe, {"in": _grid(data1, ones1)}, 0, 1)
+        return refs
+
+    for body in ("dense", "sparse"):
+        for keys in ("single", "vmapped"):
+            for placement in ("local", "mesh"):
+                for dag in ("solo", "union"):
+                    policy = ExecPolicy(
+                        body=body, keys=keys,
+                        placement=(mesh_placement(_mesh1())
+                                   if placement == "mesh" else "local"),
+                        dag=dag)
+                    keyed = keys == "vmapped"
+                    s = TStream.source("in", prec=1, keyed=keyed)
+                    queries = ({"trend": _trend(s)} if dag == "solo"
+                               else {"trend": _trend(s), "bands": _bands(s)})
+                    if dag == "solo":
+                        exe = qc.compile_query(
+                            queries["trend"].node, out_len=seg, pallas=False,
+                            sparse=(body == "sparse"))
+                        r = Runner(exe, policy,
+                                   n_keys=k if keyed else None,
+                                   segs_per_chunk=2)
+                    else:
+                        r = union_runner(
+                            queries, seg, policy,
+                            n_keys=k if keyed else None,
+                            segs_per_chunk=2, pallas=False)
+                    g = {"in": (keyed_grid(datak, onesk) if keyed
+                                else _grid(data1, ones1))}
+                    out = r.run(g, n // (2 * seg))
+                    refs = reference(queries, keyed)
+                    outs = out if dag == "union" else {"trend": out}
+                    for name in queries:
+                        _assert_same(refs[name], outs[name],
+                                     (policy.describe(), name))
+
+
+@pytest.mark.slow
+def test_policy_matrix_hypothesis_property():
+    """Property: random policy points × random change patterns on a small
+    query zoo never diverge from the dense single-stream reference
+    (integer-valued data)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    n, seg = 128, 16
+    zoo = {"trend": _trend, "bands": _bands,
+           "tumbling": lambda s: s.window(8, stride=8).sum()}
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from(["dense", "sparse"]),
+           st.sampled_from(["single", "vmapped"]),
+           st.booleans(),
+           st.sampled_from(sorted(zoo)),
+           st.integers(0, 2 ** 31 - 1), st.floats(0.0, 1.0))
+    def prop(body, keys, use_mesh, qname, seed, rate):
+        keyed = keys == "vmapped"
+        shape = (K, n) if keyed else (n,)
+        vals, valid = pw_const(shape, rate, seed)
+        s = TStream.source("in", prec=1, keyed=keyed)
+        q = zoo[qname](s)
+        out_len = seg // q.node.prec
+        exe = qc.compile_query(q.node, out_len=out_len, pallas=False,
+                               sparse=(body == "sparse"))
+        policy = ExecPolicy(
+            body=body, keys=keys,
+            placement=mesh_placement(_mesh1()) if use_mesh else "local")
+        r = Runner(exe, policy, n_keys=K if keyed else None,
+                   segs_per_chunk=2)
+        g = {"in": keyed_grid(vals, valid) if keyed else _grid(vals, valid)}
+        got = r.run(g, n // (2 * seg))
+        exe_ref = qc.compile_query(q.node, out_len=n // q.node.prec,
+                                   pallas=False)
+        if keyed:
+            for i in range(0, K, 3):
+                ref = partition_run(
+                    exe_ref, {"in": _grid(vals[i], valid[i])}, 0, 1)
+                _assert_same(ref, SnapshotGrid(
+                    value=np.asarray(got.value)[i],
+                    valid=np.asarray(got.valid)[i], t0=0, prec=q.node.prec),
+                    (body, keys, use_mesh, qname, i))
+        else:
+            ref = partition_run(exe_ref, {"in": _grid(vals, valid)}, 0, 1)
+            _assert_same(ref, got, (body, keys, use_mesh, qname))
+
+    prop()

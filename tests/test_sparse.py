@@ -253,7 +253,9 @@ def test_keyed_engine_sparse_matches_dense():
     got = eng.run(g, P)
     _assert_same(ref, got, "keyed")
     # after the forced-dense first step, later steps compact to <= 16 keys
-    caps = sorted(k[1] for k in exe_s._keyed_sparse_cache
+    # (the staged compute steps live in the unified runner's cache, keyed
+    # ("compute", ..., capacity))
+    caps = sorted(k[-1] for k in exe_s._runner_step_cache
                   if isinstance(k, tuple) and k[0] == "compute")
     assert caps and caps[0] <= K // 2, caps
 
