@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow test-multidev bench bench-sparse \
-	bench-policy clean-bench
+	bench-sparse-scale bench-policy clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -29,6 +29,12 @@ bench:
 # BENCH_figsparse.json alongside the stdout table
 bench-sparse:
 	$(PYTHON) -m benchmarks.run figsparse
+
+# production-scale point of the same sweep: 10^7 events, K up to 16384
+# keyed sub-streams through the chunked runner — the crossover-curve
+# artifact (BENCH_figsparse.json, uploaded by slow CI like the others)
+bench-sparse-scale:
+	REPRO_BENCH_EVENTS=10000000 $(PYTHON) -m benchmarks.run figsparse
 
 # execution-policy matrix sweep (the unified runner across body × keys ×
 # dag points); writes BENCH_figpolicy.json (uploaded as a CI artifact like

@@ -100,6 +100,13 @@ def begin_section(name: str, config: dict | None = None) -> None:
     _SECTION, _ROWS, _CONFIG = name, [], dict(config or {})
 
 
+def set_config(**kv) -> None:
+    """Merge keys into the open section's config — for measured summary
+    values a single row can't carry (e.g. the sparse/dense crossover
+    change rate fig_sparse interpolates from its sweep)."""
+    _CONFIG.update(kv)
+
+
 def _parse_derived(derived: str) -> dict:
     """Lift ``k=v`` pairs out of a derived column ("3.1Mev/s,hops=2") into
     typed JSON columns; bare fragments stay in the raw string only."""

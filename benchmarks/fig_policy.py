@@ -57,7 +57,9 @@ def _bands(s):
     return s.window(48).max().join(s, lambda hi, x: hi - x)
 
 
-def _bench(mk_runner, grids, n_chunks) -> float:
+def _bench(mk_runner, grids, n_chunks):
+    """min-of-REPEATS full-run wall time; returns the last timed runner so
+    sparse points can read its measured ``dirty_stats`` compaction."""
     r = mk_runner()
     out = r.run(grids, n_chunks)           # warmup (compile)
     leaf = out if isinstance(out, SnapshotGrid) else next(iter(out.values()))
@@ -71,17 +73,7 @@ def _bench(mk_runner, grids, n_chunks) -> float:
                 else next(iter(out.values())))
         jax.block_until_ready(leaf.valid)
         best.append(time.perf_counter() - t0)
-    return min(best)
-
-
-def _compaction(exe_or_spec_cache) -> float:
-    """Smallest compaction capacity the staged steps were built for,
-    relative to the work-unit count — the measured skip ratio proxy."""
-    caps = [k[-1] for k in exe_or_spec_cache
-            if isinstance(k, tuple) and k[0] == "compute"]
-    units = [k[1] * k[2] for k in exe_or_spec_cache
-             if isinstance(k, tuple) and k[0] == "compute"]
-    return min(caps) / max(units) if caps else 1.0
+    return min(best), r
 
 
 def run(n_events: int = 1_000_000):
@@ -109,7 +101,6 @@ def run(n_events: int = 1_000_000):
             if dag == "solo":
                 exe = qc.compile_query(_trend(s).node, out_len=seg,
                                        pallas=False, sparse=sparse)
-                cache = exe.__dict__.setdefault("_runner_step_cache", {})
 
                 def mk(exe=exe, policy=policy, keyed=keyed):
                     return Runner(exe, policy, n_keys=K if keyed else None,
@@ -118,19 +109,18 @@ def run(n_events: int = 1_000_000):
                 queries = {"trend": _trend(s), "bands": _bands(s)}
                 proto = union_runner(queries, seg, policy, pallas=False,
                                      segs_per_chunk=SEGS_PER_CHUNK)
-                cache = proto.spec.step_cache
 
                 def mk(proto=proto, policy=policy):
                     proto.reset()
                     return proto
                 ev = ev * len(queries)
-            dt = _bench(mk, grids, n_chunks)
+            dt, r_last = _bench(mk, grids, n_chunks)
             label = f"figpolicy_{body}_{keys}_{dag}"
             derived = (f"{ev / dt / 1e6:.1f}Mev/s,"
                        f"policy={policy.describe()}")
             extra = dict(events=ev, chunks=n_chunks, seg_len=seg)
             if sparse:
-                compact = _compaction(cache)
+                compact = r_last.dirty_stats()["compact"]
                 speedup = dense_dt[(keys, dag)] / dt
                 derived += f",compact={compact:.3f},speedup={speedup:.2f}"
                 extra.update(body="sparse")

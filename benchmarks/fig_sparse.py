@@ -1,24 +1,32 @@
-"""Change-rate × segment-size sweep: dense vs change-compressed execution.
+"""Change-rate × scale sweep: dense vs change-compressed execution.
 
 Real-world streams are change-compressed: fraud and dashboard sources hold
 their value for long spans and change in bursts (sessions, market moves),
-so >90% of grid ticks carry no new information.  This sweep drives the
+so >90% of grid ticks carry no new information.  Two sweeps drive the
 fraud-style windowed app (trailing mean + stddev → threshold → excess →
-where) over piecewise-constant integer-valued streams whose *change rate*
-(fraction of ticks whose value differs from the previous tick, arriving in
-bursts of ``BURST`` ticks) ranges 1%…100%, and compares:
+where) and compare dense against sparse execution:
 
-* ``dense``  — the fused one-shot execution (its best configuration), and
-* ``sparse`` — :func:`repro.core.sparse.sparse_run` at several segment
-  (chunk) sizes: only segments whose dilated lineage saw a change are
-  computed, the rest hold.
+* **one-shot** — a single piecewise-constant stream whose *change rate*
+  (fraction of ticks whose value differs from the previous tick, arriving
+  in bursts of ``BURST`` ticks) ranges 1%…100%;
+  :func:`repro.core.sparse.sparse_run` (the fused single-jit path: change
+  detection, device-resident bucket pick and compute with zero host
+  round-trips) against the fused dense one-shot.
+
+* **scale** — the production shape sparse execution is built for: K keyed
+  sub-streams (K grows with the event budget, up to 16384) through the
+  chunked :class:`repro.engine.Runner`, where the change rate is the
+  fraction of *active* keys (active keys change every tick, idle keys hold
+  — key compaction is the dominant skip axis at scale).  Dense and sparse
+  runners share the executable caches across repeats, exactly as in
+  steady-state operation.
 
 Derived columns report throughput, the measured compaction ratio
-(``compact`` = dirty segments / total segments) and the dense-vs-sparse
-``speedup``.  Expected shape: big wins at 1% (the compaction bound times
-the ``(seg+window)/seg`` halo overhead), break-even somewhere around
-10–50%, and a constant-factor *loss* at 100% — dense mode remains the
-right default for high-change streams (see repro/core/sparse.py).
+(``compact`` = dirty work units / total, from ``Runner.dirty_stats()`` /
+:func:`repro.core.sparse.segment_mask`) and the dense-vs-sparse
+``speedup``.  The sparse↔dense crossover change rate, interpolated from
+the scale sweep, lands in the section config (``scale_crossover_rate``) —
+see docs/architecture.md for the body=sparse guidance it backs.
 """
 from __future__ import annotations
 
@@ -33,12 +41,17 @@ from repro.core.frontend import TStream
 from repro.core.parallel import partition_run
 from repro.core.sparse import segment_mask, sparse_run
 from repro.core.stream import SnapshotGrid
+from repro.engine import ExecPolicy, Runner, keyed_grid
 
-from .common import row
+from .common import row, set_config
 
 REPEATS = 3
 RATES = (0.01, 0.10, 0.50, 1.00)
 BURST = 128  # change-burst length (a fraud session / market move)
+
+SCALE_RATES = (0.01, 0.05, 0.10, 0.25, 0.50, 1.00)
+SCALE_SEG = 64       # segment (out_len) of the chunked runners
+SCALE_SPC = 2        # segments per chunk
 
 
 def _pow2_ticks(n_events: int) -> int:
@@ -65,8 +78,8 @@ def burst_stream(n: int, rate: float, seed: int,
     return raw[idx]
 
 
-def _fraud_query(window: int):
-    s = TStream.source("in", prec=1)
+def _fraud_query(window: int, keyed: bool = False):
+    s = TStream.source("in", prec=1, keyed=keyed)
     mu = s.window(window).mean().shift(1)
     sd = s.window(window).stddev().shift(1)
     thr = mu.join(sd, lambda m, d: m + 3.0 * d, name="thr")
@@ -84,16 +97,31 @@ def _bench(fn) -> float:
     return min(best)
 
 
-def run(n_events: int = 1_000_000):
-    N = _pow2_ticks(n_events)
+def _bench_runner(mk_runner, grids, n_chunks):
+    """min-of-REPEATS wall time of a fresh runner's full run (compiled
+    steps shared via the executable's caches); returns the last timed
+    runner so callers can read its measured ``dirty_stats``."""
+    r = mk_runner()
+    jax.block_until_ready(r.run(grids, n_chunks).valid)  # warmup (compile)
+    best = []
+    for _ in range(REPEATS):
+        r = mk_runner()
+        t0 = time.perf_counter()
+        jax.block_until_ready(r.run(grids, n_chunks).valid)
+        best.append(time.perf_counter() - t0)
+    return min(best), r
+
+
+def _one_shot_sweep(n_events: int) -> None:
+    # pinned at the 4k-tick anchor (the sweep's historical point) so every
+    # BENCH_figsparse.json — smoke or production scale — carries the same
+    # small-scale overhead row next to the scale sweep's crossover curve
+    N = min(4096, _pow2_ticks(n_events))
     window = min(64, N // 8)
-    segs = sorted({max(128, N // 2048), max(256, N // 1024)})
+    seg = min(512, N // 8)
     q = _fraud_query(window)
     exe_dense = qc.compile_query(q.node, out_len=N, pallas=False)
-    # one sparse executable per segment size, shared across rates so the
-    # bucketed jit caches stay warm exactly as in steady-state operation
-    exe_sparse = {seg: qc.compile_query(q.node, out_len=seg, pallas=False,
-                                        sparse=True) for seg in segs}
+    exe_s = qc.compile_query(q.node, out_len=seg, pallas=False, sparse=True)
 
     for rate in RATES:
         vals = burst_stream(N, rate, seed=7)
@@ -104,17 +132,82 @@ def run(n_events: int = 1_000_000):
         row(f"figsparse_dense_r{r}", dt_d * 1e6,
             f"{N / dt_d / 1e6:.1f}Mev/s,mode=dense,rate={rate}",
             events=N, window=window)
-        for seg in segs:
-            exe_s = exe_sparse[seg]
-            n_segs = N // seg
-            dt_s = _bench(lambda: sparse_run(exe_s, g, 0, n_segs))
-            n_dirty = int(np.asarray(
-                segment_mask(exe_s, g, 0, n_segs)).sum())
-            row(f"figsparse_sparse_r{r}_c{seg}", dt_s * 1e6,
-                f"{N / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
-                f"compact={n_dirty / n_segs:.3f},speedup={dt_d / dt_s:.2f}",
-                events=N, window=window, seg_len=seg,
-                dirty_segments=n_dirty, total_segments=n_segs)
+        n_segs = N // seg
+        dt_s = _bench(lambda: sparse_run(exe_s, g, 0, n_segs))
+        n_dirty = int(np.asarray(segment_mask(exe_s, g, 0, n_segs)).sum())
+        row(f"figsparse_sparse_r{r}_c{seg}", dt_s * 1e6,
+            f"{N / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
+            f"compact={n_dirty / n_segs:.3f},speedup={dt_d / dt_s:.2f}",
+            events=N, window=window, seg_len=seg,
+            dirty_segments=n_dirty, total_segments=n_segs)
+
+
+def _scale_sweep(n_events: int) -> None:
+    span = SCALE_SEG * SCALE_SPC
+    # target ~20 chunks so the all-dirty first chunk (conservative stream
+    # start: every key's initial dirty tail forces a full compute) amortizes
+    # out of the steady-state compaction ratio
+    k_target = max(16, min(16384, n_events // (20 * span)))
+    K = 1 << (k_target - 1).bit_length()
+    n_chunks = max(1, round(n_events / K / span))
+    T = n_chunks * span
+    events = K * T
+    window = 64
+
+    q = _fraud_query(window, keyed=True)
+    exe_d = qc.compile_query(q.node, out_len=SCALE_SEG, pallas=False)
+    exe_s = qc.compile_query(q.node, out_len=SCALE_SEG, pallas=False,
+                             sparse=True)
+
+    def mk_dense():
+        return Runner(exe_d, ExecPolicy(body="dense", keys="vmapped"),
+                      n_keys=K, segs_per_chunk=SCALE_SPC)
+
+    def mk_sparse():
+        return Runner(exe_s, ExecPolicy(body="sparse", keys="vmapped"),
+                      n_keys=K, segs_per_chunk=SCALE_SPC)
+
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, 100, size=(K, 1)).astype(np.float32)
+    curve = []
+    for rate in SCALE_RATES:
+        vals = np.broadcast_to(base, (K, T)).copy()
+        n_act = max(1, int(round(K * rate)))
+        act = rng.choice(K, size=n_act, replace=False)
+        vals[act] = rng.integers(0, 100,
+                                 size=(n_act, T)).astype(np.float32)
+        grids = {"in": keyed_grid(vals, np.ones((K, T), bool))}
+
+        dt_d, _ = _bench_runner(mk_dense, grids, n_chunks)
+        pct = int(rate * 100)
+        row(f"figsparse_scale_dense_r{pct}", dt_d * 1e6,
+            f"{events / dt_d / 1e6:.1f}Mev/s,mode=dense,rate={rate},"
+            f"scale={events}",
+            events=events, keys=K, chunks=n_chunks, seg_len=SCALE_SEG)
+        dt_s, rs = _bench_runner(mk_sparse, grids, n_chunks)
+        compact = rs.dirty_stats()["compact"]
+        speedup = dt_d / dt_s
+        curve.append((rate, speedup))
+        row(f"figsparse_scale_sparse_r{pct}", dt_s * 1e6,
+            f"{events / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
+            f"scale={events},compact={compact:.3f},speedup={speedup:.2f}",
+            events=events, keys=K, chunks=n_chunks, seg_len=SCALE_SEG)
+
+    cross = None
+    for (r0, s0), (r1, s1) in zip(curve, curve[1:]):
+        if s0 >= 1.0 > s1:
+            cross = r0 + (r1 - r0) * (s0 - 1.0) / (s0 - s1)
+            break
+    set_config(scale_events=events, scale_keys=K,
+               scale_crossover_rate=(round(cross, 4) if cross is not None
+                                     else None),
+               scale_sparse_wins_everywhere=cross is None
+               and all(s >= 1.0 for _, s in curve))
+
+
+def run(n_events: int = 1_000_000):
+    _one_shot_sweep(n_events)
+    _scale_sweep(n_events)
 
 
 if __name__ == "__main__":

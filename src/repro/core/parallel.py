@@ -213,6 +213,77 @@ def stage_exchange_step(specs: Dict[str, "qcompile.InputSpec"], body,
         out_specs=out_specs, check_rep=False))
 
 
+def _hold_variant(exe: "qcompile.CompiledQuery") -> "qcompile.CompiledQuery":
+    """The minimal-``out_len`` recompile of ``exe`` used by the clean-shard
+    hold body: ``m`` is the smallest output count whose span is a multiple
+    of every input precision (so the variant's windows stay tick-aligned).
+    Because every input's left extent (``spec.t0``) is independent of
+    ``out_len``, the variant's windows are exact *prefixes* of the full
+    slab — same buffer origin, so scan/block decompositions associate
+    identically and output tick 0 is bit-identical to the full body's.
+    Cached on the CompiledQuery; raises ``ValueError`` when no smaller
+    variant exists."""
+    import math
+    if "_hold_variant" not in exe.__dict__:
+        q = exe.out_prec
+        m = 1
+        for s in exe.input_specs.values():
+            need = s.prec // math.gcd(s.prec, q)
+            m = m * need // math.gcd(m, need)
+        if m >= exe.out_len:
+            raise ValueError(
+                f"hold variant out_len {m} is not smaller than {exe.out_len}")
+        exe.__dict__["_hold_variant"] = qcompile.compile_query(
+            exe.root, m, opt=False, jit=False)
+    return exe.__dict__["_hold_variant"]
+
+
+def _stage_sparse_step(exe: "qcompile.CompiledQuery",
+                       vexe: "qcompile.CompiledQuery",
+                       mesh: Mesh, axis: str):
+    """The change-compressed SPMD step: same halo exchange as
+    :func:`stage_exchange_step` (collectives stay unconditional — every
+    shard participates in every hop), then a per-shard ``lax.cond`` on the
+    precomputed dirty flag.  Dirty shards run the full partition body;
+    clean shards run the hold body — the minimal-``out_len`` variant on the
+    slab prefix, tick 0 broadcast over the shard's span (a clean shard's
+    outputs provably all equal its first output; see
+    :mod:`repro.core.sparse`)."""
+    specs = exe.input_specs
+    n = mesh.shape[axis]
+    names = sorted(specs)
+    scheds = {name: specs[name].halo_schedule() for name in names}
+    S = exe.out_len
+    vspecs = vexe.input_specs
+
+    def dense_body(full):
+        return exe.trace_fn(full)
+
+    def hold_body(full):
+        pref = {}
+        for name, (v, m) in full.items():
+            L = vspecs[name].length
+            pref[name] = (
+                jax.tree_util.tree_map(
+                    lambda x: jax.lax.slice_in_dim(x, 0, L, axis=0), v),
+                jax.lax.slice_in_dim(m, 0, L, axis=0))
+        ov, om = vexe.trace_fn(pref)
+        bv = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[:1], (S,) + x.shape[1:]), ov)
+        return bv, jnp.broadcast_to(om[:1], (S,))
+
+    def local_body(flag, *flat):
+        full = {name: halo_mod.exchange(scheds[name], v, m, axis, n)
+                for name, (v, m) in zip(names, flat)}
+        return jax.lax.cond(flag[0], dense_body, hold_body, full)
+
+    from jax.experimental.shard_map import shard_map
+    return jax.jit(shard_map(
+        local_body, mesh=mesh,
+        in_specs=(P(axis),) + tuple(P(axis) for _ in names),
+        out_specs=(P(axis), P(axis)), check_rep=False))
+
+
 def lru_step_get(cache: "collections.OrderedDict", key, build,
                  max_entries: int):
     """Bounded staged-step cache: move-to-front on hit, build + evict the
@@ -230,7 +301,8 @@ def lru_step_get(cache: "collections.OrderedDict", key, build,
 
 def shard_map_run(exe: qcompile.CompiledQuery,
                   inputs: Dict[str, SnapshotGrid],
-                  mesh: Mesh, axis: str = "data") -> SnapshotGrid:
+                  mesh: Mesh, axis: str = "data",
+                  sparse: bool = None) -> SnapshotGrid:
     """SPMD partitioned execution: one partition per device along ``axis``.
 
     Each input supplies exactly its *core* region (no halo, one output
@@ -242,21 +314,60 @@ def shard_map_run(exe: qcompile.CompiledQuery,
     mesh.shape[axis]``.  The output grid starts where the inputs' core
     region starts (``inputs[*].t0``), so sharded outputs stitch against
     :func:`partition_run` at any origin.
+
+    ``sparse`` selects the per-shard dirty fast path: shards whose dilated
+    input lineage saw no change (fused change-detection mask of
+    :func:`repro.core.sparse.segment_mask`, one flag per shard) skip the
+    partition body and broadcast their locally computed first output tick
+    instead — bit-identical, since a clean shard's outputs all equal its
+    first output.  ``None`` (default) enables it automatically for queries
+    compiled with ``sparse=True`` when a smaller hold variant exists;
+    ``True`` requires it (raising when it cannot be built); ``False``
+    forces the dense body.
     """
     specs = exe.input_specs
     placed, out_t0 = place_core_inputs(specs, inputs, mesh, axis)
+    use_sparse = ((exe.change_plan is not None) if sparse is None
+                  else bool(sparse))
+    vexe = None
+    if use_sparse:
+        try:
+            from .sparse import _change_plan
+            _change_plan(exe)
+            vexe = _hold_variant(exe)
+        except ValueError:
+            if sparse:
+                raise
+            use_sparse = False
 
-    # the staged SPMD step depends only on (exe, mesh, axis) — cache it on
-    # the CompiledQuery so repeated calls (streaming chunks, benchmark
-    # repeats) reuse the traced+compiled computation
+    # the staged SPMD step depends only on (exe, mesh, axis, sparse) —
+    # cache it on the CompiledQuery so repeated calls (streaming chunks,
+    # benchmark repeats) reuse the traced+compiled computation
     cache = exe.__dict__.setdefault("_shard_step_cache",
                                     collections.OrderedDict())
+    if not use_sparse:
+        step = lru_step_get(
+            cache, (mesh, axis),
+            lambda: stage_exchange_step(specs, exe.trace_fn, mesh, axis,
+                                        (P(axis), P(axis))),
+            _SHARD_STEP_CACHE_MAX)
+        val, msk = step(*placed)
+        return SnapshotGrid(value=val, valid=msk, t0=out_t0,
+                            prec=exe.out_prec)
+
+    from ..kernels import ops as kops
+    from .sparse import segment_mask
+    # per-shard flags resolve on the global grids (cross-shard lineage is
+    # just index arithmetic there, no communication), then shard P(axis) —
+    # no force_first: the hold body is locally self-sufficient
+    flags = segment_mask(exe, inputs, out_t0, mesh.shape[axis],
+                         force_first=False, pallas=kops.use_pallas())
+    flags = jax.device_put(flags, NamedSharding(mesh, P(axis)))
     step = lru_step_get(
-        cache, (mesh, axis),
-        lambda: stage_exchange_step(specs, exe.trace_fn, mesh, axis,
-                                    (P(axis), P(axis))),
+        cache, (mesh, axis, "sparse"),
+        lambda: _stage_sparse_step(exe, vexe, mesh, axis),
         _SHARD_STEP_CACHE_MAX)
-    val, msk = step(*placed)
+    val, msk = step(flags, *placed)
     return SnapshotGrid(value=val, valid=msk, t0=out_t0, prec=exe.out_prec)
 
 

@@ -44,7 +44,7 @@ from . import boundary, halo, ir
 
 __all__ = ["GridPlan", "AlignSpec", "InputSpec", "QueryPlan", "UnionPlan",
            "ChangeSpec", "ChangePlan", "plan_query", "plan_union",
-           "plan_change"]
+           "plan_change", "seg_range_affine"]
 
 
 def _ceil_div(a, b):
@@ -273,6 +273,34 @@ def plan_change(qp: "QueryPlan") -> ChangePlan:
                               lookahead=s.right_halo * s.prec, prec=s.prec)
              for name, s in qp.input_specs.items()}
     return ChangePlan(out_len=qp.out_len, out_prec=qp.out_prec, specs=specs)
+
+
+def seg_range_affine(lookback_t: int, lookahead_t: int, prec: int,
+                     grid_t0: int, out_t0: int, out_prec: int,
+                     seg_len: int) -> tuple:
+    """Affine lowering of the dilated-lineage ranges: ``(a0, step, width)``
+    such that segment ``k``'s dirty input-tick range is the half-open
+    ``[a0 + k·step, a0 + k·step + width)``.
+
+    This is :func:`repro.core.sparse.seg_ranges` specialized to the case
+    every chunked executor already enforces (segment span a multiple of the
+    input precision), in the closed form the fused change-detection kernel
+    needs: a *fixed-width* window sliding by a *fixed stride* per segment,
+    so a 1-D Pallas grid can map segment ``k`` straight to its input block.
+    Raises ``ValueError`` when the span is not stride-aligned (callers fall
+    back to the general per-segment ranges).
+    """
+    span = seg_len * out_prec
+    if span % prec:
+        raise ValueError(
+            f"segment span {span} not a multiple of input precision {prec}"
+            " — no affine lowering; use seg_ranges")
+    step = span // prec
+    lo_t = out_t0 + 1 - lookback_t
+    hi_t = out_t0 + span + lookahead_t + prec - 1
+    a0 = _ceil_div(lo_t - grid_t0, prec) - 1
+    width = (hi_t - grid_t0) // prec - a0
+    return a0, step, width
 
 
 @dataclasses.dataclass

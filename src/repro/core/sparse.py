@@ -71,10 +71,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import sparse_compact
+from .plan import seg_range_affine
 from .stream import SnapshotGrid
 
-__all__ = ["source_dirty", "bucket_capacity", "segment_mask", "sparse_run",
-           "seg_ranges", "range_any"]
+__all__ = ["source_dirty", "bucket_capacity", "capacity_ladder",
+           "segment_mask", "sparse_run", "seg_ranges", "range_any"]
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +115,25 @@ def bucket_capacity(n: int, n_max: int) -> int:
     ``n_max`` — the bucketing policy that bounds the number of distinct
     shapes the jitted sparse step is traced for."""
     return min(1 << max(n - 1, 0).bit_length(), max(n_max, 1))
+
+
+def capacity_ladder(n_max: int) -> list:
+    """All capacities :func:`bucket_capacity` can return for ``n_max`` work
+    units, ascending: ``[1, 2, 4, ..., n_max]`` (≤ log2+1 entries).
+
+    This is the branch table of the device-resident bucket pick: with
+    ``caps = capacity_ladder(n_max)``, ``jnp.searchsorted(caps, count,
+    side='left')`` indexes the same bucket ``bucket_capacity(count, n_max)``
+    names — but as a traced scalar, so a ``lax.switch`` over per-capacity
+    branches replaces the host round-trip that used to resolve the count.
+    """
+    n_max = max(n_max, 1)
+    caps, c = [], 1
+    while c < n_max:
+        caps.append(c)
+        c <<= 1
+    caps.append(n_max)
+    return caps
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +207,8 @@ def _gather_starts(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
 
 def segment_mask(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
                  n_parts: int, dirty: Optional[Dict[str, jax.Array]] = None,
-                 force_first: bool = True) -> jax.Array:
+                 force_first: bool = True,
+                 pallas: Optional[bool] = None) -> jax.Array:
     """Dirty mask over ``n_parts`` output segments of ``exe.out_len`` ticks.
 
     ``dirty`` optionally supplies explicit per-input change masks (aligned
@@ -194,6 +216,14 @@ def segment_mask(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
     come from :func:`source_dirty` on the grids themselves.  With
     ``force_first`` the first segment is always dirty (the hold-fill base
     case when no carried output seeds the chunk).
+
+    ``pallas`` routes the value-diff inputs through the fused
+    change-detection kernel (:func:`repro.kernels.sparse_compact.seg_dirty`):
+    ``None`` keeps the staged :func:`source_dirty` + :func:`range_any`
+    reference, ``True``/``False`` forces the Pallas kernel / its jnp oracle.
+    Bit-identical either way (asserted by the kernel tests); explicit-dirty
+    inputs and non-affine lineages (segment span not a multiple of the
+    input precision) always take the staged path.
     """
     cp = _change_plan(exe)
     S, q = exe.out_len, exe.out_prec
@@ -203,12 +233,24 @@ def segment_mask(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
     tau_max = out_t0 + (k + 1) * S * q      # last output time per segment
     for name, spec in exe.input_specs.items():
         g = inputs[name]
-        d = (dirty[name] if dirty is not None and name in dirty
-             else source_dirty(g.value, g.valid))
         sp = cp.specs[name]
-        i_lo, i_hi1 = seg_ranges(sp.lookback, sp.lookahead, spec.prec, g.t0,
-                                 out_t0, q, S, n_parts)
-        seg = seg | range_any(d, jnp.asarray(i_lo), jnp.asarray(i_hi1))
+        explicit = dirty is not None and name in dirty
+        if explicit or pallas is None or (S * q) % spec.prec:
+            d = dirty[name] if explicit else source_dirty(g.value, g.valid)
+            i_lo, i_hi1 = seg_ranges(sp.lookback, sp.lookahead, spec.prec,
+                                     g.t0, out_t0, q, S, n_parts)
+            seg = seg | range_any(d, jnp.asarray(i_lo), jnp.asarray(i_hi1))
+        else:
+            a0, stp, width = seg_range_affine(
+                sp.lookback, sp.lookahead, spec.prec, g.t0, out_t0, q, S)
+            mats = sparse_compact.grid_mats(g.value, g.valid)
+            seg = seg | sparse_compact.seg_dirty(
+                mats, [(a0, stp, width)] * len(mats), n_parts, pallas=pallas)
+            # the kernel never counts tick 0 (no diff partner); stream
+            # start makes it unconditionally dirty, so the segments whose
+            # dilated lineage covers index 0 flip statically
+            lo = a0 + k * stp
+            seg = seg | jnp.asarray((lo <= 0) & (lo + width > 0))
         # the supplied grid's edges are virtual changes: beyond-grid reads
         # are φ, so the real→φ transition one tick past the end (and the
         # φ→real transition at tick 0) enters nearby lineages — outputs
@@ -245,22 +287,10 @@ def _bc(mask, x):
     return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
 
 
-def staged_step(exe, n_segs: int, capacity: int):
-    """The jitted sparse chunk step for a fixed (segment count, compaction
-    capacity) geometry — cached on the CompiledQuery so repeated chunks with
-    the same bucket reuse the compiled executable.
-
-    ``step(flat, starts, seg_dirty, seed_v, seed_m)`` takes the full input
-    grids (``(value, valid)`` in sorted-name order), per-input segment start
-    indices, the dirty-segment mask and a 1-tick hold seed; it returns the
-    chunk output ``(value, valid)`` plus the new seed (the chunk's last
-    output tick).
-    """
-    cache = exe.__dict__.setdefault("_sparse_step_cache", {})
-    key = (n_segs, capacity)
-    if key in cache:
-        return cache[key]
-
+def _step_body(exe, n_segs: int, capacity: int):
+    """The raw (unjitted) staged-step closure — see :func:`staged_step` for
+    the signature.  The fused one-shot runner embeds one of these per
+    capacity bucket as ``lax.switch`` branches inside a single jit."""
     names = sorted(exe.input_specs)
     specs = exe.input_specs
     S = exe.out_len
@@ -319,7 +349,70 @@ def staged_step(exe, n_segs: int, capacity: int):
         new_seed = (jax.tree_util.tree_map(lambda x: x[-1], ov), om[-1])
         return ov, om, new_seed
 
-    cache[key] = jax.jit(step)
+    return step
+
+
+def _dense_body(exe, n_segs: int):
+    """The full-capacity ``lax.switch`` branch: every segment computes.
+
+    At ``capacity == n_segs`` the compaction machinery (``nonzero`` gather,
+    cumsum scatter, hold fill) is pure overhead — the bucket already pays
+    for every segment.  Computing the clean segments directly is
+    bit-identical to holding them (a clean segment's output provably equals
+    the previous output tick, which is exactly what dense evaluation of its
+    unchanged lineage yields — the module-level exactness contract), so this
+    branch returns the same bits as :func:`_step_body` at full capacity
+    while skipping the data movement.
+    """
+    names = sorted(exe.input_specs)
+    specs = exe.input_specs
+    S = exe.out_len
+
+    def step(flat, starts, seg_dirty, seed_v, seed_m):
+        del seg_dirty, seed_v, seed_m      # every segment computes
+        gath = []
+        for name, (v, m) in zip(names, flat):
+            L = specs[name].length
+            idx = starts[name][:, None] + jnp.arange(L)[None, :]
+            T = m.shape[0]
+            ok = (idx >= 0) & (idx < T)
+            idxc = jnp.clip(idx, 0, T - 1)
+            gm = jnp.take(m, idxc) & ok
+
+            def gather(x, ok=ok, idxc=idxc):
+                gx = jnp.take(x, idxc, axis=0)
+                return jnp.where(_bc(ok, gx), gx, jnp.zeros((), x.dtype))
+
+            gath.append((jax.tree_util.tree_map(gather, v), gm))
+
+        def one(*f):
+            return exe.trace_fn(dict(zip(names, f)))
+
+        out_v, out_m = jax.vmap(one)(*gath)                 # (n_segs, S, ...)
+        ov = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_segs * S,) + x.shape[2:]), out_v)
+        om = out_m.reshape(n_segs * S)
+        new_seed = (jax.tree_util.tree_map(lambda x: x[-1], ov), om[-1])
+        return ov, om, new_seed
+
+    return step
+
+
+def staged_step(exe, n_segs: int, capacity: int):
+    """The jitted sparse chunk step for a fixed (segment count, compaction
+    capacity) geometry — cached on the CompiledQuery so repeated chunks with
+    the same bucket reuse the compiled executable.
+
+    ``step(flat, starts, seg_dirty, seed_v, seed_m)`` takes the full input
+    grids (``(value, valid)`` in sorted-name order), per-input segment start
+    indices, the dirty-segment mask and a 1-tick hold seed; it returns the
+    chunk output ``(value, valid)`` plus the new seed (the chunk's last
+    output tick).
+    """
+    cache = exe.__dict__.setdefault("_sparse_step_cache", {})
+    key = (n_segs, capacity)
+    if key not in cache:
+        cache[key] = jax.jit(_step_body(exe, n_segs, capacity))
     return cache[key]
 
 
@@ -352,9 +445,104 @@ def zero_seed(exe, flat):
 # entry point: the change-compressed mirror of partition_run
 # ---------------------------------------------------------------------------
 
+def _fused_run(exe, n_parts: int, out_t0: int, meta: tuple,
+               dirty_names: tuple):
+    """One jit for the whole one-shot sparse run: fused change detection
+    (:mod:`repro.kernels.sparse_compact`), device-resident bucket pick
+    (``searchsorted`` over :func:`capacity_ladder` + ``lax.switch`` over
+    per-capacity staged-step bodies), gather/compute/scatter/hold — zero
+    host round-trips between mask and compute.  Cached on the CompiledQuery
+    per static geometry: ``meta`` is the per-input ``(t0, n_ticks, prec)``
+    of the supplied grids in sorted-name order, ``dirty_names`` the inputs
+    whose change masks the caller supplies explicitly."""
+    cache = exe.__dict__.setdefault("_sparse_run_cache", {})
+    key = (n_parts, out_t0, meta, dirty_names)
+    if key in cache:
+        return cache[key]
+
+    cp = _change_plan(exe)
+    names = sorted(exe.input_specs)
+    specs = exe.input_specs
+    S, q = exe.out_len, exe.out_prec
+
+    # segment start indices are pure geometry — fold them into the cached
+    # closure as jit constants instead of re-deriving them per call
+    span = S * q
+    starts = {}
+    for name, (g_t0, T, g_prec) in zip(names, meta):
+        spec = specs[name]
+        if g_prec != spec.prec:
+            raise ValueError(f"input {name}: grid precision {g_prec} != "
+                             f"planned precision {spec.prec}")
+        if (out_t0 + spec.t0 - g_t0) % spec.prec:
+            raise ValueError(
+                f"partition window start {out_t0 + spec.t0} misaligned with "
+                f"input grid (t0={g_t0}, prec={g_prec})")
+        if span % spec.prec:
+            raise ValueError(
+                f"input {name}: segment span {span} not a multiple of "
+                f"input precision {spec.prec}")
+        kk = np.arange(n_parts, dtype=np.int64)
+        starts[name] = jnp.asarray(
+            (out_t0 + kk * span + spec.t0 - g_t0) // spec.prec)
+
+    k = np.arange(n_parts, dtype=np.int64)
+    tau_min = out_t0 + k * S * q + q        # first output time per segment
+    tau_max = out_t0 + (k + 1) * S * q      # last output time per segment
+    # everything data-independent folds into one static mask: the forced
+    # first segment (hold base case), grid-edge virtual changes (see
+    # segment_mask), and — for value-diff inputs — stream start's
+    # unconditionally-dirty tick 0, which the kernel never counts
+    static = np.zeros((n_parts,), bool)
+    static[0] = True
+    geom, ranges = {}, {}
+    for name, (g_t0, T, _prec) in zip(names, meta):
+        spec, sp = specs[name], cp.specs[name]
+        for t_edge in (g_t0 + spec.prec, g_t0 + (T + 1) * spec.prec):
+            static |= ((tau_max > t_edge - sp.lookahead - spec.prec)
+                       & (tau_min < t_edge + sp.lookback + q))
+        if name in dirty_names:
+            i_lo, i_hi1 = seg_ranges(sp.lookback, sp.lookahead, spec.prec,
+                                     g_t0, out_t0, q, S, n_parts)
+            ranges[name] = (jnp.asarray(i_lo), jnp.asarray(i_hi1))
+        else:
+            a0, stp, width = seg_range_affine(
+                sp.lookback, sp.lookahead, spec.prec, g_t0, out_t0, q, S)
+            geom[name] = (a0, stp, width)
+            lo = a0 + k * stp
+            static |= (lo <= 0) & (lo + width > 0)
+
+    ladder = capacity_ladder(n_parts)
+    caps = np.asarray(ladder, np.int32)
+    # the full-capacity bucket (count > n_parts/2) takes the dense-all body:
+    # at that point compaction saves nothing, so skip its data movement
+    branches = [_step_body(exe, n_parts, c) for c in ladder[:-1]]
+    branches.append(_dense_body(exe, n_parts))
+
+    def run(flat, dmasks, seed_v, seed_m):
+        seg = jnp.asarray(static)
+        for name, (v, m) in zip(names, flat):
+            if name in dirty_names:
+                seg = seg | range_any(dmasks[name], *ranges[name])
+            else:
+                mats = sparse_compact.grid_mats(v, m)
+                seg = seg | sparse_compact.seg_dirty(
+                    mats, [geom[name]] * len(mats), n_parts)
+        if not names:
+            seg = jnp.ones((n_parts,), bool)  # input-free query: dense
+        cnt = jnp.sum(seg.astype(jnp.int32))
+        b = jnp.searchsorted(jnp.asarray(caps), cnt, side="left")
+        ov, om, _ = jax.lax.switch(b, branches, flat, starts, seg,
+                                   seed_v, seed_m)
+        return ov, om
+
+    cache[key] = jax.jit(run)
+    return cache[key]
+
+
 def sparse_run(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
-               n_parts: int, dirty: Optional[Dict[str, jax.Array]] = None
-               ) -> SnapshotGrid:
+               n_parts: int, dirty: Optional[Dict[str, jax.Array]] = None,
+               fused: bool = True) -> SnapshotGrid:
     """Run ``n_parts`` partitions of ``exe.out_len`` output ticks starting
     at ``out_t0`` — the change-compressed mirror of
     :func:`repro.core.parallel.partition_run`: only partitions whose dilated
@@ -362,18 +550,32 @@ def sparse_run(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
 
     ``exe`` must be compiled with ``sparse=True``.  ``dirty`` optionally
     supplies explicit per-input change masks (one bool per tick of the
-    supplied grid) in place of the value diff.  The single data-dependent
-    decision — how many segments are dirty — is resolved on the host and
-    bucketed to a power of two, so the jitted step's shapes stay static.
+    supplied grid) in place of the value diff.
+
+    ``fused=True`` (default) runs mask, bucket pick and compute as one jit
+    with the single data-dependent decision — how many segments are dirty —
+    resolved on-device (``lax.switch`` over the :func:`capacity_ladder`
+    buckets), so the call issues no device→host transfer.  ``fused=False``
+    keeps the three-phase staged path (mask → host-resolved
+    :func:`bucket_capacity` → :func:`staged_step`) — the semantics of
+    record the kernel tests assert bit-identity against.
     """
     _change_plan(exe)
     names = sorted(exe.input_specs)
-    seg_dirty = segment_mask(exe, inputs, out_t0, n_parts, dirty=dirty)
-    n = int(jnp.sum(seg_dirty))
-    cap = bucket_capacity(n, n_parts)
-    step = staged_step(exe, n_parts, cap)
     flat = [(inputs[nm].value, inputs[nm].valid) for nm in names]
-    starts = _gather_starts(exe, inputs, out_t0, n_parts)
     seed_v, seed_m = zero_seed(exe, flat)
-    ov, om, _ = step(flat, starts, seg_dirty, seed_v, seed_m)
+    if not fused:
+        starts = _gather_starts(exe, inputs, out_t0, n_parts)
+        seg_dirty = segment_mask(exe, inputs, out_t0, n_parts, dirty=dirty)
+        n = int(jnp.sum(seg_dirty))
+        step = staged_step(exe, n_parts, bucket_capacity(n, n_parts))
+        ov, om, _ = step(flat, starts, seg_dirty, seed_v, seed_m)
+        return SnapshotGrid(value=ov, valid=om, t0=out_t0,
+                            prec=exe.out_prec)
+    meta = tuple((inputs[nm].t0, int(inputs[nm].valid.shape[0]),
+                  inputs[nm].prec) for nm in names)
+    dnames = tuple(sorted(set(dirty or ()) & set(names)))
+    run = _fused_run(exe, n_parts, out_t0, meta, dnames)
+    dmasks = {nm: dirty[nm] for nm in dnames}
+    ov, om = run(flat, dmasks, seed_v, seed_m)
     return SnapshotGrid(value=ov, valid=om, t0=out_t0, prec=exe.out_prec)

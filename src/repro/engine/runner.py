@@ -59,8 +59,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import ir
 from ..core import sparse as sparse_mod
-from ..core.plan import ChangePlan, InputSpec
+from ..core.plan import ChangePlan, InputSpec, seg_range_affine
 from ..core.stream import SnapshotGrid
+from ..kernels import sparse_compact
 from .policy import ExecPolicy
 
 __all__ = ["BodySpec", "Runner", "body_spec_of"]
@@ -203,6 +204,12 @@ class Runner:
             {"dirty": {}, "prev": {}, "seed": {}, "started": False}
             if policy.sparse else None)
         self._t = 0
+        # -- sparse-body diagnostics (device-resident: reading them via
+        # dirty_stats() syncs, accumulating them does not) ------------------
+        self.last_seg_dirty = None
+        self._dirty_units = None
+        self._total_units = 0
+        self._chunks_run = 0
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -222,9 +229,6 @@ class Runner:
             return tree
         sh = NamedSharding(self.policy.mesh, P(self.policy.axis))
         return _tm(lambda x: jax.device_put(x, sh), tree)
-
-    def _maybe_jit(self, fn):
-        return jax.jit(fn) if self.spec.jit else fn
 
     def _cache_key(self, kind, *extra):
         return (kind, self._K, self.n_segs, self.policy.mesh,
@@ -336,66 +340,31 @@ class Runner:
                     jax.lax.slice_in_dim(fm, lo, lo + s.left_halo, axis=1))
             return outs, new_tails
 
-        cache[key] = self._maybe_jit(step)
+        # the carried tails are runner-owned (step outputs, or zeros /
+        # restore-copies) — donate them so steady-state chunks update the
+        # halo buffers in place instead of reallocating
+        cache[key] = (jax.jit(step, donate_argnums=(0,)) if self.spec.jit
+                      else step)
         return cache[key]
 
-    # -- sparse phases -------------------------------------------------------
-    def _mask_step(self):
-        """Phase 1: assemble buffers, diff the chunk against carried
-        snapshots, dilate dirtiness through the DAG (ChangePlan) and reduce
-        to one flag per (key, segment) unit; also derives the next carried
-        change state."""
-        key = self._cache_key("mask")
-        cache = self.spec.step_cache
-        if key in cache:
-            return cache[key]
-        names, specs = self._names(), self.spec.input_specs
-        cp = self.spec.change_plan
-        S, q = self.spec.out_len, self.spec.out_prec
-        K, n_segs = self._K, self.n_segs
+    # -- sparse body (one fused jitted step per chunk) -----------------------
+    #
+    # The three phases that used to run as separate jitted calls — mask
+    # (diff + ChangePlan dilation + per-unit reduction), compute (per-shard
+    # compaction gather → vmapped body → scatter) and hold — are traced into
+    # ONE step: the capacity bucket is picked on device (`searchsorted` over
+    # the ladder + `lax.switch`), so a steady-state chunk issues zero
+    # device→host transfers, and the carried state pytree is donated so
+    # tails/snapshots/seeds update in place.
 
-        def mask(tails, dirty, prev, chunks):
-            bufs, new_tails, new_dirty, new_prev = {}, {}, {}, {}
-            seg_dirty = jnp.zeros((K, n_segs), bool)
-            for name in names:
-                s = specs[name]
-                hl = s.left_halo
-                tv, tm = tails[name]
-                cv, cm = chunks[name]
-                fv = _tm(lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
-                fm = jnp.concatenate([tm, cm], axis=1)
-                bufs[name] = (fv, fm)
-                pv, pm = prev[name]
-                d_chunk = jax.vmap(
-                    lambda v, m, p0, p1: sparse_mod.source_dirty(
-                        v, m, (p0, p1)))(cv, cm, pv, pm)
-                full_d = jnp.concatenate([dirty[name], d_chunk], axis=1)
-                sp = cp.specs[name]
-                i_lo, i_hi1 = sparse_mod.seg_ranges(
-                    sp.lookback, sp.lookahead, s.prec,
-                    grid_t0=-hl * s.prec, out_t0=0, out_prec=q,
-                    seg_len=S, n_segs=n_segs)
-                ilo, ihi = jnp.asarray(i_lo), jnp.asarray(i_hi1)
-                seg_dirty = seg_dirty | jax.vmap(
-                    lambda d: sparse_mod.range_any(d, ilo, ihi))(full_d)
-                lo = s.core * n_segs
-                new_tails[name] = (
-                    _tm(lambda x: jax.lax.slice_in_dim(
-                        x, lo, lo + hl, axis=1), fv),
-                    jax.lax.slice_in_dim(fm, lo, lo + hl, axis=1))
-                new_dirty[name] = jax.lax.slice_in_dim(
-                    full_d, lo, lo + hl, axis=1)
-                new_prev[name] = (_tm(lambda x: x[:, -1:], cv), cm[:, -1:])
-            return bufs, seg_dirty, new_tails, new_dirty, new_prev
-
-        cache[key] = self._maybe_jit(mask)
-        return cache[key]
-
-    def _compute_step(self, cap: int):
-        """Phase 2 for one compaction capacity: per shard, resolve the local
-        dirty units (local ``nonzero`` into the power-of-two bucket), gather
-        their halo windows, run the vmapped body on them only, scatter the
-        results back over the local unit axis."""
+    def _compute_local(self, cap: int):
+        """Per-shard compute body for one compaction capacity: resolve the
+        local dirty units (local ``nonzero`` into the power-of-two bucket),
+        gather their halo windows, run the vmapped body on them only,
+        scatter the results back over the local unit axis.  Cached per
+        capacity — these are the branches of the fused step's
+        ``lax.switch`` ladder (and the observable record of which buckets
+        this geometry can run)."""
         key = self._cache_key("compute", cap)
         cache = self.spec.step_cache
         if key in cache:
@@ -407,8 +376,19 @@ class Runner:
         mesh, axis = self.policy.mesh, self.policy.axis
         U_loc = self._U // self.policy.n_shards
 
+        full_cap = cap == U_loc
+
         def local(w, *flat):
-            ids = jnp.nonzero(w, size=cap, fill_value=0)[0]
+            if full_cap:
+                # full-capacity bucket (count > U_loc/2): compaction saves
+                # nothing, so compute every unit in place — static ids, no
+                # nonzero, identity scatter.  Bit-identical: computing a
+                # clean unit yields exactly its hold value (the sparse
+                # exactness contract), and the hold fill downstream still
+                # overwrites clean units from the dirty chain.
+                ids = jnp.arange(cap)
+            else:
+                ids = jnp.nonzero(w, size=cap, fill_value=0)[0]
             if keyed:
                 k_ids, s_ids = ids // n_segs, ids % n_segs
             else:
@@ -427,22 +407,20 @@ class Runner:
                 return outs_fn(dict(zip(names, f)))
 
             outs = jax.vmap(one)(*gath)                  # {o: (cap, S_o, …)}
+            if full_cap:
+                return outs
             pos = jnp.clip(jnp.cumsum(w) - 1, 0, cap - 1)
             return {o: (_tm(lambda x: jnp.take(x, pos, axis=0), ov),
                         jnp.take(om, pos, axis=0))
                     for o, (ov, om) in outs.items()}     # {o: (U_loc, S_o, …)}
 
-        cache[key] = self._maybe_jit(self._shard_body(local, len(names)))
+        cache[key] = local
         return cache[key]
 
-    def _hold_step(self):
-        """Phase 3 (global): clean units take the last tick of the nearest
-        preceding dirty segment of the same key, or the key's carried hold
-        seed; dirty units keep their computed results."""
-        key = self._cache_key("hold")
-        cache = self.spec.step_cache
-        if key in cache:
-            return cache[key]
+    def _hold_local(self):
+        """Hold fill (global): clean units take the last tick of the
+        nearest preceding dirty segment of the same key, or the key's
+        carried hold seed; dirty units keep their computed results."""
         K, n_segs = self._K, self.n_segs
 
         def hold(full_outs, seg_dirty, seeds):
@@ -473,7 +451,139 @@ class Runner:
                 new_seeds[o] = (_tm(lambda x: x[:, -1], ov), om[:, -1])
             return outs, new_seeds
 
-        cache[key] = self._maybe_jit(hold)
+        return hold
+
+    def _fused_sparse_step(self, force_first: bool):
+        """The whole sparse chunk as one traced step: mask → device-side
+        bucket pick → per-shard compacted compute → hold.
+
+        ``step(tails, dirty, prev, seeds, chunks)`` returns ``(outs,
+        new_tails, new_dirty, new_prev, new_seeds, seg_dirty)``.  Two
+        variants per geometry: ``force_first=True`` (stream start / missing
+        hold seed: segment 0 of every key is forced dirty, nothing is
+        donated because the zero seeds are cached) and the steady-state
+        variant, which donates the carried state pytree — every donated
+        argument is an output of the previous step (or a restore-time
+        copy), so the tails, dirty tails, snapshots and hold seeds update
+        in place.
+        """
+        key = self._cache_key("sparse_fused", force_first)
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        names, specs = self._names(), self.spec.input_specs
+        cp = self.spec.change_plan
+        S, q = self.spec.out_len, self.spec.out_prec
+        K, n_segs, U = self._K, self.n_segs, self._U
+
+        # static per-input lineage geometry (the ChangePlan lowered to the
+        # affine form the fused kernel consumes) + the segments a carried
+        # position-0 change flag dirties (tick 0 is outside the kernel's
+        # convention: its diff partner lives before the buffer)
+        geom, hits0 = {}, {}
+        ks = np.arange(n_segs)
+        for name in names:
+            s, sp = specs[name], cp.specs[name]
+            a0, stp, width = seg_range_affine(
+                sp.lookback, sp.lookahead, s.prec,
+                grid_t0=-s.left_halo * s.prec, out_t0=0, out_prec=q,
+                seg_len=S)
+            geom[name] = (a0, stp, width)
+            lo = a0 + ks * stp
+            hits0[name] = (lo <= 0) & (lo + width > 0)
+
+        ladder = sparse_mod.capacity_ladder(U // self.policy.n_shards)
+        branches = [self._compute_local(c) for c in ladder]
+        caps = np.asarray(ladder, np.int32)
+        hold = self._hold_local()
+
+        def switched(w, *flat):
+            cnt = jnp.sum(w.astype(jnp.int32))
+            b = jnp.searchsorted(jnp.asarray(caps), cnt, side="left")
+            return jax.lax.switch(b, branches, w, *flat)
+
+        sharded = self._shard_body(switched, len(names))
+
+        def tick0_diff(cv, cm, pv, pm):
+            d = cm[:, 0] != pm[:, 0]
+            for x, p in zip(jax.tree_util.tree_leaves(cv),
+                            jax.tree_util.tree_leaves(pv)):
+                neq = x[:, 0] != p[:, 0].astype(x.dtype)
+                if neq.ndim > 1:
+                    neq = neq.reshape(neq.shape[0], -1).any(axis=1)
+                d = d | neq
+            return d
+
+        def adj_diff(sv, sm):
+            nd = sm[:, 1:] != sm[:, :-1]
+            for x in jax.tree_util.tree_leaves(sv):
+                neq = x[:, 1:] != x[:, :-1]
+                if neq.ndim > 2:
+                    neq = neq.reshape(neq.shape[:2] + (-1,)).any(axis=2)
+                nd = nd | neq
+            return nd
+
+        def step(tails, dirty, prev, seeds, chunks):
+            bufs, new_tails, new_dirty, new_prev = {}, {}, {}, {}
+            seg_dirty = jnp.zeros((K, n_segs), bool)
+            for name in names:
+                s = specs[name]
+                hl = s.left_halo
+                tv, tm = tails[name]
+                cv, cm = chunks[name]
+                fv = _tm(lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
+                fm = jnp.concatenate([tm, cm], axis=1)
+                bufs[name] = (fv, fm)
+                g = geom[name]
+
+                def one_key(v, m, g=g):
+                    mats = sparse_compact.grid_mats(v, m)
+                    return sparse_compact.seg_dirty(
+                        mats, [g] * len(mats), n_segs)
+
+                sd = jax.vmap(one_key)(fv, fm)           # (K, n_segs)
+                # buffer position 0: carried change flag (its diff partner
+                # is one tick before the buffer); with no tail the carried
+                # 1-tick snapshot supplies the partner
+                d0 = (dirty[name][:, 0] if hl
+                      else tick0_diff(cv, cm, *prev[name]))
+                seg_dirty = (seg_dirty | sd
+                             | (d0[:, None] & jnp.asarray(hits0[name])))
+                lo = s.core * n_segs
+                new_tails[name] = (
+                    _tm(lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + hl, axis=1), fv),
+                    jax.lax.slice_in_dim(fm, lo, lo + hl, axis=1))
+                if hl:
+                    # carried dirty tail = adjacent diffs of the buffer's
+                    # last hl+1 ticks (identical to the flags a full-length
+                    # mask would carry: every tail position has its diff
+                    # partner in the buffer, since lo >= 1)
+                    new_dirty[name] = adj_diff(
+                        _tm(lambda x: jax.lax.slice_in_dim(
+                            x, lo - 1, lo + hl, axis=1), fv),
+                        jax.lax.slice_in_dim(fm, lo - 1, lo + hl, axis=1))
+                else:
+                    new_dirty[name] = dirty[name]
+                new_prev[name] = (_tm(lambda x: x[:, -1:], cv), cm[:, -1:])
+            if not names:
+                seg_dirty = jnp.ones((K, n_segs), bool)  # input-free: dense
+            if force_first:
+                seg_dirty = seg_dirty.at[:, 0].set(True)
+            full = sharded(seg_dirty.reshape(U),
+                           *[bufs[nm] for nm in names])
+            full = {o: (_tm(lambda x: x.reshape(
+                            (K, n_segs) + x.shape[1:]), fv),
+                        fm.reshape((K, n_segs) + fm.shape[1:]))
+                    for o, (fv, fm) in full.items()}
+            outs, new_seeds = hold(full, seg_dirty, seeds)
+            return outs, new_tails, new_dirty, new_prev, new_seeds, seg_dirty
+
+        if self.spec.jit:
+            donate = () if force_first else (0, 1, 2, 3)
+            cache[key] = jax.jit(step, donate_argnums=donate)
+        else:
+            cache[key] = step
         return cache[key]
 
     def _zero_seeds(self, chunk_in):
@@ -499,32 +609,23 @@ class Runner:
 
     def _sparse_chunk(self, chunk_in):
         st = self._sparse
-        names = self._names()
-        K, n_segs, U = self._K, self.n_segs, self._U
-        if names:
-            bufs, seg_dirty, new_tails, new_dirty, new_prev = \
-                self._mask_step()(self._tails, st["dirty"], st["prev"],
-                                  chunk_in)
-            sd = np.asarray(seg_dirty)
-        else:  # input-free (const) query: nothing to skip
-            bufs, new_tails, new_dirty, new_prev = {}, {}, {}, {}
-            sd = np.ones((K, n_segs), bool)
         missing_seed = any(o not in st["seed"] for o in self.spec.out_precs)
-        if not st["started"] or missing_seed:
-            sd = sd.copy()
-            sd[:, 0] = True  # hold-fill base case: no carried output yet
-        n_shards = self.policy.n_shards
-        U_loc = U // n_shards
-        cnt = int(sd.reshape(n_shards, U_loc).sum(axis=1).max())
-        cap = sparse_mod.bucket_capacity(cnt, U_loc)
-        w = jnp.asarray(sd.reshape(-1))
-        full = self._compute_step(cap)(w, *[bufs[nm] for nm in names])
-        full = {o: (_tm(lambda x: x.reshape((K, n_segs) + x.shape[1:]), fv),
-                    fm.reshape((K, n_segs) + fm.shape[1:]))
-                for o, (fv, fm) in full.items()}
-        seeds = dict(self._zero_seeds(chunk_in))
-        seeds.update(st["seed"])
-        outs, new_seeds = self._hold_step()(full, jnp.asarray(sd), seeds)
+        force_first = (not st["started"]) or missing_seed
+        if force_first:
+            seeds = dict(self._zero_seeds(chunk_in))
+            seeds.update(st["seed"])
+        else:
+            seeds = st["seed"]
+        outs, new_tails, new_dirty, new_prev, new_seeds, seg_dirty = \
+            self._fused_sparse_step(force_first)(
+                self._tails, st["dirty"], st["prev"], seeds, chunk_in)
+        # device-resident diagnostics: no transfer, no dispatch stall
+        self.last_seg_dirty = seg_dirty
+        cnt = seg_dirty.sum(dtype=jnp.int32)
+        self._dirty_units = (cnt if self._dirty_units is None
+                             else self._dirty_units + cnt)
+        self._total_units += self._U
+        self._chunks_run += 1
 
         def commit():
             self._tails = new_tails
@@ -556,7 +657,11 @@ class Runner:
         result = {}
         for o, (v, m) in outs.items():
             if not self.policy.keyed:
-                v, m = _tm(lambda x: x[0], v), m[0]
+                # reshape, not x[0]: eager indexing binds a dynamic_slice
+                # whose start-index scalars are host→device transfers on
+                # every chunk — reshape is metadata-only
+                v = _tm(lambda x: x.reshape(x.shape[1:]), v)
+                m = m.reshape(m.shape[1:])
             result[o] = SnapshotGrid(value=v, valid=m, t0=self._t,
                                      prec=self.spec.out_precs[o])
         commit()
@@ -601,6 +706,26 @@ class Runner:
             self._sparse = {"dirty": {}, "prev": {}, "seed": {},
                             "started": False}
         self._t = 0
+        self.last_seg_dirty = None
+        self._dirty_units = None
+        self._total_units = 0
+        self._chunks_run = 0
+
+    def dirty_stats(self) -> Optional[Dict]:
+        """Measured compaction of the sparse body since construction/reset:
+        ``{chunks, units, dirty_units, compact}`` where ``compact`` is the
+        fraction of (key × segment) work units that actually computed
+        (forced-dirty first segments included).  ``None`` for dense bodies
+        or before the first chunk.  Reading this syncs the device-resident
+        counter — a diagnostic call, not part of the steady-state path
+        (``last_seg_dirty`` holds the raw per-unit flags of the newest
+        chunk, also device-resident)."""
+        if self._sparse is None or self._total_units == 0:
+            return None
+        dirty = int(self._dirty_units)
+        return {"chunks": self._chunks_run, "units": self._total_units,
+                "dirty_units": dirty,
+                "compact": dirty / self._total_units}
 
     # -- checkpointing (the one state/validate path) -------------------------
     def _strip(self, tree):
@@ -702,17 +827,19 @@ class Runner:
                 check_lead(name, got, "dirty-tail")
 
         self._t = int(t)
-        self._tails = {k: self._place(self._lift(_tm(jnp.asarray, v)))
+        # jnp.array (copy), not asarray: restored state feeds the donating
+        # steady-state step, which must never consume the caller's buffers.
+        self._tails = {k: self._place(self._lift(_tm(jnp.array, v)))
                        for k, v in state.items()}
         if self._sparse is not None:
             st = {"dirty": {}, "prev": {}, "seed": {}, "started": True}
             if sparse_state is not None:
                 st["dirty"] = {
-                    k: self._place(self._lift(jnp.asarray(v)))
+                    k: self._place(self._lift(jnp.array(v)))
                     for k, v in sparse_state["dirty"].items()
                     if k in names}
                 st["prev"] = {
-                    k: self._place(self._lift(_tm(jnp.asarray, v)))
+                    k: self._place(self._lift(_tm(jnp.array, v)))
                     for k, v in sparse_state["prev"].items() if k in names}
                 seed = sparse_state.get("seed") or {}
                 if not isinstance(seed, dict):
@@ -726,7 +853,7 @@ class Runner:
                             "DAG with outputs "
                             f"{sorted(self.spec.out_precs)}")
                     seed = {"__out": seed}
-                st["seed"] = {o: self._lift(_tm(jnp.asarray, v))
+                st["seed"] = {o: self._lift(_tm(jnp.array, v))
                               for o, v in seed.items()
                               if o in self.spec.out_precs}
                 st["started"] = bool(sparse_state.get("started", True))

@@ -15,7 +15,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["prefix_sum_ref", "sliding_sum_ref", "sliding_assoc_ref"]
+__all__ = ["prefix_sum_ref", "sliding_sum_ref", "sliding_assoc_ref",
+           "seg_dirty_fused_ref"]
 
 
 def prefix_sum_ref(x: jax.Array) -> jax.Array:
@@ -97,3 +98,36 @@ def sliding_assoc_block_ref(x: jax.Array, window: int, combine, identity,
          jnp.full((C, suffix.shape[1], 1), identity, x.dtype)], axis=2)
     out = combine(suf, prefix).reshape(C, Tp)
     return out[:, :T]
+
+
+def seg_dirty_fused_ref(mats, geoms, n_segs: int) -> jax.Array:
+    """Oracle for kernels/sparse_compact.seg_dirty: fused per-source tick
+    diff → dilated-lineage range reduction → per-segment dirty flags.
+
+    Args:
+      mats:   list of (C, T) channel matrices (one or more per source —
+              value leaves flattened to rows, validity folded in as a row).
+      geoms:  matching list of static ``(a0, step, width)`` triples
+              (:func:`repro.core.plan.seg_range_affine`): segment ``k`` is
+              dirty iff any tick in ``[a0 + k·step, a0 + k·step + width)``
+              changed.
+      n_segs: number of output segments.
+
+    Tick ``t`` of a mat *changed* iff any row differs from tick ``t-1``;
+    tick 0 never changed (diffs against carried state are the caller's to
+    OR in — see the position-0 contract in engine/runner).  Out-of-range
+    ticks never changed.
+    """
+    seg = jnp.zeros((n_segs,), bool)
+    k = jnp.arange(n_segs)
+    for x, (a0, step, width) in zip(mats, geoms):
+        if width <= 0:
+            continue
+        T = x.shape[-1]
+        d = (x[:, 1:] != x[:, :-1]).any(axis=0)          # d[t-1] = tick t
+        c = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(d.astype(jnp.int32))])
+        lo = jnp.clip(a0 + k * step - 1, 0, T - 1)       # d index of tick
+        hi = jnp.clip(a0 + k * step + width - 1, 0, T - 1)
+        seg = seg | ((c[hi] - c[jnp.minimum(lo, hi)]) > 0)
+    return seg

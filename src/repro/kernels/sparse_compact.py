@@ -1,0 +1,148 @@
+"""Fused change-detection kernel (paper §5's skip test off the critical
+path).
+
+Sparse execution resolves, per output segment, one bit: *did any input tick
+in this segment's dilated lineage change?*  The staged implementation
+(engine/runner phases, core/sparse one-shot) answers it in three jitted
+passes — per-source tick diff, `ChangePlan` dilation via cumsum range
+queries, per-segment reduction — materializing a full-length dirty mask
+between them.  This kernel fuses all three into a single ``pallas_call``:
+
+* Every source grid is flattened into per-dtype channel matrices ``(C, T)``
+  (:func:`grid_mats`): value leaves become rows, the validity mask is cast
+  in as one more row, so "any leaf or validity changed" is one vectorized
+  ``!=`` across rows.
+* The dilated lineage of segment ``k`` is the *affine* input range
+  ``[a0 + k·step, a0 + k·step + width)``
+  (:func:`repro.core.plan.seg_range_affine`) — a fixed-width window
+  sliding a fixed stride per segment.  The 1-D grid maps segment ``k``
+  straight onto its input blocks (``⌈(width+1)/step⌉`` consecutive
+  ``step``-wide blocks of the same padded matrix, the multi-``in_specs``
+  idiom of kernels/window_reduce), diffs adjacent ticks in registers and
+  reduces to the segment's flag — the tick-level mask never exists in
+  memory.
+* Out-of-range and tick-0 pairs are masked by position (NaN-safe: padding
+  content is never compared), matching the reference convention that tick
+  0 never changed — carried cross-chunk flags are the caller's to OR in.
+
+Semantics of record: :func:`repro.kernels.ref.seg_dirty_fused_ref` (the
+dispatcher's jnp fallback on non-TPU backends, and what CI asserts
+bit-identity against in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ops, ref
+
+__all__ = ["grid_mats", "seg_dirty"]
+
+
+def grid_mats(value, valid) -> list:
+    """Flatten one source grid's ``(value, valid)`` into channel matrices
+    ``(C, T)`` for :func:`seg_dirty` — one matrix per value dtype (rows
+    can only be compared vectorized within a dtype), validity cast in as a
+    row of the first.  Time axis 0 in, time axis last out; bool leaves are
+    widened to int32 (exact).  Traceable (vmap-safe over a leading key
+    axis)."""
+    groups: dict = {}
+    for leaf in jax.tree_util.tree_leaves(value):
+        x = leaf.astype(jnp.int32) if leaf.dtype == jnp.bool_ else leaf
+        rows = x.reshape(x.shape[0], -1).T if x.ndim > 1 else x[None, :]
+        groups.setdefault(str(rows.dtype), []).append(rows)
+    if not groups:
+        return [valid[None, :].astype(jnp.int32)]
+    first = next(iter(groups))
+    groups[first].append(valid[None, :].astype(groups[first][0].dtype))
+    return [rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+            for rows in groups.values()]
+
+
+def _lower(a0: int, step: int, width: int, T: int, n_segs: int):
+    """Static block geometry for one matrix: segment ``k`` must see ticks
+    ``[a0 - 1 + k·step, a0 + k·step + width)`` (the extra leading tick is
+    the diff partner).  Returns ``(pad_left, pad_to, m, NB, B)``: left-pad
+    so that window start lands exactly on block ``k + m`` of ``B``-wide
+    blocks, ``NB`` consecutive blocks cover the window."""
+    B = max(int(step), 1)
+    shift = a0 - 1
+    pad_left = (-shift) % B
+    m = (pad_left + shift) // B
+    if m < 0:
+        pad_left += -m * B
+        m = 0
+    NB = -(-(width + 1) // B)
+    need = (n_segs + m + NB - 1) * B
+    pad_to = -(-max(need, pad_left + T) // B) * B
+    return pad_left, pad_to, m, NB, B
+
+
+def _kernel(*refs, geoms):
+    """One grid step = one segment: per matrix, concatenate its blocks,
+    diff adjacent ticks, mask to the in-range pairs, reduce, OR across
+    matrices."""
+    out_ref = refs[-1]
+    k = pl.program_id(0)
+    flag = jnp.zeros((1, 1), jnp.int32)
+    i = 0
+    for a0, step, width, T, NB in geoms:
+        x = jnp.concatenate([refs[i + j][...] for j in range(NB)], axis=-1)
+        i += NB
+        d = x[:, 1:] != x[:, :-1]
+        p = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        t = a0 + k * step + p            # global tick index of pair p
+        ok = (p < width) & (t >= 1) & (t <= T - 1)
+        flag = flag | jnp.any(d & ok).astype(jnp.int32).reshape(1, 1)
+    out_ref[...] = flag
+
+
+def _seg_dirty_pallas(mats, geoms, n_segs: int, interpret: bool):
+    args, in_specs, kgeoms = [], [], []
+    for x, (a0, step, width) in zip(mats, geoms):
+        if width <= 0:
+            continue
+        C, T = x.shape
+        pad_left, pad_to, m, NB, B = _lower(a0, step, width, T, n_segs)
+        xp = jnp.pad(x, ((0, 0), (pad_left, pad_to - pad_left - T)))
+        for j in range(NB):
+            args.append(xp)
+            in_specs.append(pl.BlockSpec(
+                (C, B), functools.partial(lambda k, b: (0, k + b), b=m + j)))
+        kgeoms.append((a0, step, width, T, NB))
+    if not args:
+        return jnp.zeros((n_segs,), bool)
+    out = pl.pallas_call(
+        functools.partial(_kernel, geoms=tuple(kgeoms)),
+        grid=(n_segs,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((1, n_segs), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out[0] > 0
+
+
+def seg_dirty(mats, geoms, n_segs: int, pallas: bool | None = None
+              ) -> jax.Array:
+    """Per-segment dirty flags ``(n_segs,) bool``: segment ``k`` is dirty
+    iff any tick in ``[a0 + k·step, a0 + k·step + width)`` of any matrix
+    differs from its predecessor tick (tick 0 and out-of-range ticks never
+    count — carried flags are the caller's to OR in).
+
+    ``mats``/``geoms`` are parallel lists — (C, T) channel matrices
+    (:func:`grid_mats`) and their static ``(a0, step, width)`` lineage
+    triples (:func:`repro.core.plan.seg_range_affine`); a source with
+    several dtype matrices repeats its triple.  Dispatch follows
+    kernels/ops: the Pallas kernel on TPU (or under
+    ``REPRO_PALLAS_INTERPRET=1``), the jnp oracle
+    :func:`repro.kernels.ref.seg_dirty_fused_ref` elsewhere.
+    """
+    if pallas is None:
+        pallas = ops.use_pallas()
+    if pallas:
+        return _seg_dirty_pallas(mats, geoms, n_segs, ops._interpret())
+    return ref.seg_dirty_fused_ref(mats, geoms, n_segs)

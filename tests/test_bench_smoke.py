@@ -91,9 +91,23 @@ def test_fig_sparse_smoke_and_json_results():
     doc = json.load(open(path))
     assert doc["section"] == "figsparse"
     assert doc["config"]["events"] == 4096
-    sparse_rows = [r for r in doc["rows"] if r.get("mode") == "sparse"]
-    assert sparse_rows and all("compact" in r and "speedup" in r
-                               for r in sparse_rows), doc["rows"]
-    # at 1% change rate the sweep must actually compact
-    assert min(r["compact"] for r in sparse_rows
-               if r["rate"] == 0.01) < 0.5, sparse_rows
+    rows = doc["rows"]
+    one_shot = [r for r in rows if r.get("mode") == "sparse"
+                and "scale" not in r]
+    assert one_shot and all("compact" in r and "speedup" in r
+                            for r in one_shot), rows
+    # at 1% change rate the one-shot sweep must actually compact
+    assert min(r["compact"] for r in one_shot
+               if r["rate"] == 0.01) < 0.5, one_shot
+    # the scale sweep (keyed runner crossover curve) rides in the same
+    # JSON: dense+sparse rows per rate with the scale/compact/speedup
+    # schema, and the interpolated crossover in the section config
+    scale = [r for r in rows if r["name"].startswith("figsparse_scale_")]
+    assert {r["mode"] for r in scale} == {"dense", "sparse"}, rows
+    for r in scale:
+        assert {"rate", "scale", "events", "keys", "chunks"} <= set(r), r
+        if r["mode"] == "sparse":
+            assert "compact" in r and "speedup" in r, r
+            assert 0.0 < r["compact"] <= 1.0, r
+    assert "scale_crossover_rate" in doc["config"], doc["config"]
+    assert "scale_keys" in doc["config"], doc["config"]

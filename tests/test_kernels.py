@@ -75,6 +75,59 @@ def test_block_beats_soe_numerics():
     assert err_soe > err_block * 10, (err_soe, err_block)
 
 
+# (T, C, n_segs, a0, step, width): negative window starts, width > T,
+# step > width (strided outputs) and single-tick widths all included
+SEG_DIRTY_GEOMS = [
+    (256, 1, 8, 0, 32, 32),
+    (256, 3, 8, -31, 32, 64),      # window runs off the left edge
+    (200, 2, 4, 7, 48, 17),        # step > width: gaps between lineages
+    (64, 1, 4, -5, 16, 128),       # width > T: every segment sees the end
+    (512, 4, 16, 1, 32, 33),
+    (96, 2, 12, -8, 8, 1),         # single-pair windows
+]
+
+
+@pytest.mark.parametrize("T,C,n_segs,a0,step,width", SEG_DIRTY_GEOMS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_seg_dirty_kernel_matches_ref(T, C, n_segs, a0, step, width, dtype):
+    """The fused change-detection kernel (interpret mode on CPU) must be
+    bit-identical to the jnp oracle on piecewise-constant channel matrices
+    across lineage geometries, including out-of-range and tick-0 pairs
+    (which never count, by convention)."""
+    from repro.kernels import sparse_compact
+    rng = np.random.default_rng(T * 31 + n_segs)
+    # piecewise-constant rows (~5% change rate) so flags actually vary
+    change = rng.random((C, T)) < 0.05
+    raw = rng.integers(0, 50, size=(C, T))
+    idx = np.maximum.accumulate(np.where(change, np.arange(T)[None, :], -1),
+                                axis=1)
+    x = jnp.asarray(raw[np.arange(C)[:, None], np.clip(idx, 0, None)], dtype)
+    geoms = [(a0, step, width)]
+    got = sparse_compact.seg_dirty([x], geoms, n_segs, pallas=True)
+    want = ref.seg_dirty_fused_ref([x], geoms, n_segs)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_seg_dirty_kernel_multiple_matrices_and_nan():
+    """Several matrices of different dtypes OR into one flag set; NaN
+    payloads compare unequal to themselves and are always dirty —
+    conservative in kernel and oracle alike (padding must NOT leak in)."""
+    from repro.kernels import sparse_compact
+    T, n_segs = 128, 4
+    a = np.zeros((1, T), np.float32)
+    a[0, 60] = np.nan                      # NaN tick: always dirty
+    b = np.zeros((2, T), np.int32)
+    b[1, 100:] = 7                         # int change in the last segment
+    geoms = [(0, 32, 32), (0, 32, 32)]
+    mats = [jnp.asarray(a), jnp.asarray(b)]
+    got = sparse_compact.seg_dirty(mats, geoms, n_segs, pallas=True)
+    want = ref.seg_dirty_fused_ref(mats, geoms, n_segs)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # the NaN at tick 60 dirties segment 1 only (pairs (59,60) and (60,61)
+    # both land in ticks 32..63); the int change dirties segment 3
+    assert list(np.asarray(want)) == [False, True, False, True]
+
+
 def test_vanherk_block_ref_matches_reduce_window():
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.normal(size=(2, 300)).astype(np.float32))

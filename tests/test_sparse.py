@@ -115,6 +115,46 @@ def test_sparse_run_bit_identical_to_partition_run(name):
     assert n_dirty < n_parts, (name, n_dirty, n_parts)
 
 
+@pytest.mark.parametrize("name", sorted(QUERIES))
+def test_fused_run_bit_identical_to_three_phase(name):
+    """The fused single-jit path (kernel mask + device-resident bucket pick
+    + switch) must reproduce the three-phase staged path — the semantics of
+    record — bit-for-bit, at a compacting change rate AND at the all-dirty
+    extreme (which exercises the dense-all full-capacity switch branch
+    against the staged gather/scatter/hold body)."""
+    fn, out_len = QUERIES[name]
+    q = fn(TStream.source("in", prec=1))
+    exe = qc.compile_query(q.node, out_len=out_len, pallas=False,
+                           sparse=True)
+    n_parts = N // (out_len * exe.out_prec)
+    for rate, seed in ((0.02, 3), (1.0, 5)):
+        vals, valid = pw_const(N, rate, seed, invalid_spans=((40, 70),))
+        g = {"in": _grid(vals, valid)}
+        got = sp.sparse_run(exe, g, 0, n_parts, fused=True)
+        ref = sp.sparse_run(exe, g, 0, n_parts, fused=False)
+        _assert_same(ref, got, f"{name} rate={rate}")
+
+
+@pytest.mark.parametrize("name", sorted(QUERIES))
+def test_segment_mask_pallas_kernel_matches_staged(name):
+    """The fused change-detection kernel (interpret mode on CPU) resolves
+    the same per-segment dirty flags as the staged source_dirty +
+    seg_ranges + range_any reference, across the query zoo's dilation
+    shapes (window, strided output, shift, lookahead interp)."""
+    fn, out_len = QUERIES[name]
+    q = fn(TStream.source("in", prec=1))
+    exe = qc.compile_query(q.node, out_len=out_len, pallas=False,
+                           sparse=True)
+    n_parts = N // (out_len * exe.out_prec)
+    vals, valid = pw_const(N, 0.03, seed=17, invalid_spans=((200, 230),))
+    g = {"in": _grid(vals, valid)}
+    staged = np.asarray(sp.segment_mask(exe, g, 0, n_parts))
+    kernel = np.asarray(sp.segment_mask(exe, g, 0, n_parts, pallas=True))
+    oracle = np.asarray(sp.segment_mask(exe, g, 0, n_parts, pallas=False))
+    assert np.array_equal(staged, kernel), (name, staged, kernel)
+    assert np.array_equal(staged, oracle), (name, staged, oracle)
+
+
 def test_strided_output_dilation_covers_stride_gap():
     """Regression: with out_prec > input prec the hold rule compares ticks
     one *output stride* apart, so the dilation must widen by
