@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow test-multidev bench bench-sparse \
-	bench-sparse-scale bench-policy clean-bench
+	bench-sparse-scale bench-policy bench-metrics clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -41,6 +41,13 @@ bench-sparse-scale:
 # the other sections)
 bench-policy:
 	$(PYTHON) -m benchmarks.run figpolicy
+
+# telemetry export smoke: drives an instrumented sparse runner and
+# validates the repro.obs/v1 snapshot schema plus the JSONL/Prometheus
+# exporters (exits non-zero on schema problems — nightly CI gates on it);
+# writes BENCH_metricssmoke.json
+bench-metrics:
+	$(PYTHON) -m benchmarks.run metricssmoke
 
 # drop the gitignored machine-readable benchmark results
 clean-bench:

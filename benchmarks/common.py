@@ -122,15 +122,22 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def row(name: str, us_per_call: float, derived: str, **extra):
+def row(name: str, us_per_call: float, derived: str, metrics=None, **extra):
     """Print one CSV row and record it (plus parsed/extra derived columns)
-    into the open section's JSON."""
+    into the open section's JSON.  ``metrics=`` attaches an engine telemetry
+    snapshot (``repro.obs.Metrics.snapshot()`` dict, or a ``Metrics``
+    instance which is snapshotted here) under the row's ``metrics`` key so
+    BENCH_*.json carries the measured compaction/latency/recompile data the
+    derived columns summarize."""
     print(f"{name},{us_per_call:.3f},{derived}")
     if _SECTION is not None:
         entry = {"name": name, "us_per_call": float(us_per_call),
                  "derived": str(derived)}
         entry.update(_parse_derived(derived))
         entry.update(extra)
+        if metrics is not None:
+            entry["metrics"] = (metrics.snapshot()
+                                if hasattr(metrics, "snapshot") else metrics)
         _ROWS.append(entry)
 
 

@@ -14,8 +14,11 @@ unified chunked runner (repro/engine/runner.py):
   whole union evaluation
 
 Derived columns report throughput (events/s through the policy's work
-axis), the measured compaction ratio for sparse points, and the speedup
-over the dense point with the same keys/dag axes.  Mesh placements are
+axis), the measured compaction ratio for sparse points (read from the
+runner's own telemetry registry, ``runner.metrics`` — see
+:mod:`repro.obs`), and the speedup over the dense point with the same
+keys/dag axes; sparse rows carry the full metrics snapshot (compaction,
+per-chunk latency histogram, compile counts) under ``metrics``.  Mesh placements are
 covered by the multidev tests and ``benchmarks/fig_halo_depth.py`` (this
 container is 1 core; an in-process 8-device host mesh measures dispatch
 overhead, not parallel speedup).
@@ -59,7 +62,7 @@ def _bands(s):
 
 def _bench(mk_runner, grids, n_chunks):
     """min-of-REPEATS full-run wall time; returns the last timed runner so
-    sparse points can read its measured ``dirty_stats`` compaction."""
+    sparse points can read its measured telemetry (``runner.metrics``)."""
     r = mk_runner()
     out = r.run(grids, n_chunks)           # warmup (compile)
     leaf = out if isinstance(out, SnapshotGrid) else next(iter(out.values()))
@@ -120,10 +123,14 @@ def run(n_events: int = 1_000_000):
                        f"policy={policy.describe()}")
             extra = dict(events=ev, chunks=n_chunks, seg_len=seg)
             if sparse:
-                compact = r_last.dirty_stats()["compact"]
+                # compaction from the runner's telemetry registry (the
+                # union proto resets per repeat, so the gauge covers the
+                # last timed run only)
+                snap = r_last.metrics.snapshot()
+                compact = snap["gauges"]["runner.compact"]["value"]
                 speedup = dense_dt[(keys, dag)] / dt
                 derived += f",compact={compact:.3f},speedup={speedup:.2f}"
-                extra.update(body="sparse")
+                extra.update(body="sparse", metrics=snap)
             else:
                 dense_dt[(keys, dag)] = dt
                 extra.update(body="dense")

@@ -22,11 +22,17 @@ where) and compare dense against sparse execution:
   steady-state operation.
 
 Derived columns report throughput, the measured compaction ratio
-(``compact`` = dirty work units / total, from ``Runner.dirty_stats()`` /
-:func:`repro.core.sparse.segment_mask`) and the dense-vs-sparse
-``speedup``.  The sparse↔dense crossover change rate, interpolated from
-the scale sweep, lands in the section config (``scale_crossover_rate``) —
-see docs/architecture.md for the body=sparse guidance it backs.
+(``compact`` = dirty work units / total) and the dense-vs-sparse
+``speedup`` — both read from the engine's own telemetry
+(:mod:`repro.obs`: the ``sparse.*`` counters of the one-shot path, the
+``runner.*`` registry of the chunked runners), not recomputed ad hoc;
+sparse rows carry the full schema-versioned snapshot under ``metrics``.
+The anchor sweep also times its sparse points with instrumentation
+off (:func:`repro.obs.disabled`) and records the measured metrics
+overhead in the section config (``metrics_overhead_pct``).  The
+sparse↔dense crossover change rate, interpolated from the scale sweep,
+lands in the section config (``scale_crossover_rate``) — see
+docs/architecture.md for the body=sparse guidance it backs.
 """
 from __future__ import annotations
 
@@ -36,10 +42,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compile as qc
 from repro.core.frontend import TStream
 from repro.core.parallel import partition_run
-from repro.core.sparse import segment_mask, sparse_run
+from repro.core.sparse import sparse_run
 from repro.core.stream import SnapshotGrid
 from repro.engine import ExecPolicy, Runner, keyed_grid
 
@@ -97,10 +104,26 @@ def _bench(fn) -> float:
     return min(best)
 
 
+def _bench_loop(fn, inner: int = 20) -> float:
+    """Per-call seconds averaged over ``inner`` back-to-back calls
+    (min of REPEATS samples) — sub-ms calls need batched timing for the
+    instrumentation-overhead comparison to beat scheduler noise."""
+    jax.block_until_ready(fn().valid)  # warmup (compile)
+    best = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn()
+        jax.block_until_ready(out.valid)
+        best.append((time.perf_counter() - t0) / inner)
+    return min(best)
+
+
 def _bench_runner(mk_runner, grids, n_chunks):
     """min-of-REPEATS wall time of a fresh runner's full run (compiled
     steps shared via the executable's caches); returns the last timed
-    runner so callers can read its measured ``dirty_stats``."""
+    runner so callers can read its measured telemetry
+    (``runner.metrics.snapshot()``)."""
     r = mk_runner()
     jax.block_until_ready(r.run(grids, n_chunks).valid)  # warmup (compile)
     best = []
@@ -123,6 +146,11 @@ def _one_shot_sweep(n_events: int) -> None:
     exe_dense = qc.compile_query(q.node, out_len=N, pallas=False)
     exe_s = qc.compile_query(q.node, out_len=seg, pallas=False, sparse=True)
 
+    # the one-shot sparse path reports into the process-global registry;
+    # scope it to this sweep so per-rate snapshot deltas are exact
+    reg = obs.default()
+    reg.reset()
+    on_us = off_us = 0.0
     for rate in RATES:
         vals = burst_stream(N, rate, seed=7)
         g = {"in": SnapshotGrid(value=jnp.asarray(vals),
@@ -133,13 +161,26 @@ def _one_shot_sweep(n_events: int) -> None:
             f"{N / dt_d / 1e6:.1f}Mev/s,mode=dense,rate={rate}",
             events=N, window=window)
         n_segs = N // seg
-        dt_s = _bench(lambda: sparse_run(exe_s, g, 0, n_segs))
-        n_dirty = int(np.asarray(segment_mask(exe_s, g, 0, n_segs)).sum())
+        # instrumentation-off timing first (same compiled fn), then the
+        # production path with metrics on — the anchor overhead measurement
+        with obs.disabled():
+            dt_off = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs))
+        snap0 = reg.snapshot()
+        dt_s = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs))
+        snap1 = reg.snapshot()
+        runs = max(int(obs.counter_delta(snap0, snap1, "sparse.runs")), 1)
+        n_dirty = int(obs.counter_delta(snap0, snap1,
+                                        "sparse.dirty_segments")) // runs
+        on_us += dt_s * 1e6
+        off_us += dt_off * 1e6
         row(f"figsparse_sparse_r{r}_c{seg}", dt_s * 1e6,
             f"{N / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
             f"compact={n_dirty / n_segs:.3f},speedup={dt_d / dt_s:.2f}",
             events=N, window=window, seg_len=seg,
-            dirty_segments=n_dirty, total_segments=n_segs)
+            dirty_segments=n_dirty, total_segments=n_segs,
+            metrics=snap1)
+    set_config(metrics_on_us=round(on_us, 3), metrics_off_us=round(off_us, 3),
+               metrics_overhead_pct=round((on_us - off_us) / off_us * 100, 2))
 
 
 def _scale_sweep(n_events: int) -> None:
@@ -185,13 +226,19 @@ def _scale_sweep(n_events: int) -> None:
             f"scale={events}",
             events=events, keys=K, chunks=n_chunks, seg_len=SCALE_SEG)
         dt_s, rs = _bench_runner(mk_sparse, grids, n_chunks)
-        compact = rs.dirty_stats()["compact"]
+        # compaction and per-chunk latency straight from the runner's own
+        # telemetry (the last timed runner — fresh registry, warm caches)
+        snap = rs.metrics.snapshot()
+        compact = snap["gauges"]["runner.compact"]["value"]
+        p50 = snap["histograms"]["runner.step_seconds"]["p50"]
         speedup = dt_d / dt_s
         curve.append((rate, speedup))
         row(f"figsparse_scale_sparse_r{pct}", dt_s * 1e6,
             f"{events / dt_s / 1e6:.1f}Mev/s,mode=sparse,rate={rate},"
-            f"scale={events},compact={compact:.3f},speedup={speedup:.2f}",
-            events=events, keys=K, chunks=n_chunks, seg_len=SCALE_SEG)
+            f"scale={events},compact={compact:.3f},speedup={speedup:.2f},"
+            f"p50_chunk_us={p50 * 1e6:.1f}",
+            events=events, keys=K, chunks=n_chunks, seg_len=SCALE_SEG,
+            metrics=snap)
 
     cross = None
     for (r0, s0), (r1, s1) in zip(curve, curve[1:]):

@@ -1,0 +1,101 @@
+"""Telemetry export smoke: validate the ``repro.obs/v1`` exporters.
+
+Drives a small keyed sparse runner (the most heavily instrumented path:
+device-resident dirty counters, bucket picks, dirty-fraction and latency
+histograms, compile tracing), snapshots its registry and checks:
+
+* the snapshot passes :func:`repro.obs.validate_snapshot` (schema smoke);
+* ``export_jsonl`` → ``read_jsonl`` round-trips the snapshot bit-exactly
+  and appends (two lines after two exports);
+* ``export_prometheus`` renders the samples a scraper needs: counter
+  ``_total``s, cumulative histogram ``_bucket{le=...}`` ending at
+  ``+Inf``, ``_sum``/``_count``, gauges, and ``compiles_total`` keys.
+
+Exits non-zero on any schema problem, so CI's ``bench-metrics`` job fails
+loudly instead of uploading a malformed artifact.  The single row carries
+the full snapshot under ``metrics`` (BENCH_metricssmoke.json is itself a
+schema example).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.engine import ExecPolicy, Runner, keyed_grid
+
+from .common import row, set_config
+
+SEG = 64
+SPC = 2
+K = 8
+
+
+def _query():
+    s = TStream.source("in", prec=1, keyed=True)
+    return (s.window(16).mean()
+            .join(s.window(32).mean(), lambda a, b: a - b)
+            .where(lambda d: d > 0))
+
+
+def run(n_events: int = 100_000) -> None:
+    span = SEG * SPC
+    n_chunks = max(2, min(8, n_events // (K * span)))
+    T = n_chunks * span
+
+    exe = qc.compile_query(_query().node, out_len=SEG, pallas=False,
+                           sparse=True)
+    r = Runner(exe, ExecPolicy(body="sparse", keys="vmapped"), n_keys=K,
+               segs_per_chunk=SPC)
+    rng = np.random.default_rng(5)
+    vals = np.broadcast_to(rng.integers(0, 100, (K, 1)).astype(np.float32),
+                           (K, T)).copy()
+    vals[:2] = rng.integers(0, 100, (2, T)).astype(np.float32)  # 2 active
+    grids = {"in": keyed_grid(vals, np.ones((K, T), bool))}
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(r.run(grids, n_chunks).valid)
+    dt = time.perf_counter() - t0
+
+    snap = r.metrics.snapshot()
+    problems = obs.validate_snapshot(snap)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "metrics.jsonl")
+        obs.export_jsonl(snap, path)
+        obs.export_jsonl(r.metrics.snapshot(), path)
+        back = obs.read_jsonl(path)
+        jsonl_ok = (len(back) == 2
+                    and back[0] == json.loads(json.dumps(snap))
+                    and not obs.validate_snapshot(back[0]))
+
+    text = obs.export_prometheus(snap)
+    needed = ("runner_chunks_total", "runner_step_seconds_bucket",
+              'le="+Inf"', "runner_step_seconds_count",
+              "runner_step_seconds_sum", "runner_compact",
+              "compiles_total")
+    prom_ok = all(s in text for s in needed)
+
+    ok = not problems and jsonl_ok and prom_ok
+    row("metrics_smoke", dt * 1e6,
+        f"ok={int(ok)},jsonl_ok={int(jsonl_ok)},prom_ok={int(prom_ok)},"
+        f"problems={len(problems)},chunks={n_chunks}",
+        events=K * T, keys=K, metrics=snap)
+    set_config(schema=obs.SCHEMA, prom_lines=len(text.splitlines()))
+    for p in problems:
+        print(f"# schema problem: {p}")
+    if not ok:
+        raise SystemExit("metrics smoke failed: "
+                         f"problems={problems}, jsonl_ok={jsonl_ok}, "
+                         f"prom_ok={prom_ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -41,7 +41,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["HaloSchedule", "HopReport", "schedule", "hop_count", "exchange"]
+__all__ = ["HaloSchedule", "HopReport", "schedule", "hop_count", "exchange",
+           "exchange_cost"]
 
 
 def hop_count(halo: int, core: int) -> int:
@@ -110,6 +111,22 @@ def schedule(left_halo: int, right_halo: int, core: int) -> HaloSchedule:
     contract.  Cached — schedules are tiny and shared across executors."""
     return HaloSchedule(core=core, left_hops=_hops(left_halo, core),
                         right_hops=_hops(right_halo, core))
+
+
+def exchange_cost(sched: HaloSchedule, n: int) -> dict:
+    """Static cost of one :func:`exchange` on an ``n``-shard axis:
+    ``{"hops", "ticks"}`` — collectives issued and ticks moved *per
+    shard* (every shard sends/receives the same slabs in SPMD).  Pure
+    planning arithmetic, mirroring :func:`_pull`: hops beyond ``n - 1``
+    have no possible source shard and are filled with φ locally (no
+    collective), and every live hop forwards the current buffer — the
+    full core slab until the final hop's pre-send trim."""
+    hops = ticks = 0
+    for side in (sched.left_hops, sched.right_hops):
+        live = 0 if n <= 1 else min(len(side), n - 1)
+        hops += live
+        ticks += sum(side[:live])
+    return {"hops": hops, "ticks": ticks}
 
 
 def _phi(value, valid, take: int):

@@ -39,15 +39,17 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compile as qcompile
 from . import halo as halo_mod
+from ..obs import default as _obs_default
 from .stream import SnapshotGrid
 
 __all__ = ["partition_run", "shard_map_run", "batch_run", "StreamRunner",
            "SparseStreamRunner", "slice_grid", "check_single_hop_halo",
-           "place_core_inputs"]
+           "place_core_inputs", "record_exchange"]
 
 # per-CompiledQuery bound on cached (mesh, axis) SPMD steps — each retains
 # a compiled executable (see shard_map_run)
@@ -190,6 +192,36 @@ def place_core_inputs(specs: Dict[str, "qcompile.InputSpec"],
     return placed, out_t0
 
 
+def record_exchange(specs: Dict[str, "qcompile.InputSpec"], placed,
+                    mesh: Mesh, axis: str) -> None:
+    """Accumulate halo-exchange telemetry for one time-sharded run into
+    the default :class:`repro.obs.Metrics` registry: hop counts and moved
+    ticks from the static :func:`repro.core.halo.exchange_cost` of every
+    input's schedule, byte volume from the placed grids' dtypes.  Pure
+    host arithmetic over planning artifacts — never touches device data.
+    Shared by :func:`shard_map_run` and
+    :func:`repro.multiquery.shard_union_run`."""
+    m = _obs_default()
+    n = mesh.shape[axis]
+    hops = ticks = nbytes = 0
+    for (v, _mk), name in zip(placed, sorted(specs)):
+        cost = halo_mod.exchange_cost(specs[name].halo_schedule(), n)
+        # bytes per exchanged tick: every value leaf's per-tick elements
+        # plus the 1-byte validity flag
+        bpt = 1 + sum(
+            np.dtype(x.dtype).itemsize * int(np.prod(x.shape[1:], dtype=int))
+            for x in jax.tree_util.tree_leaves(v))
+        hops += cost["hops"]
+        ticks += cost["ticks"]
+        nbytes += cost["ticks"] * bpt
+    m.counter("halo.runs", "time-sharded SPMD runs").add(1)
+    m.counter("halo.hops", "ppermute collectives issued", "hops").add(hops)
+    m.counter("halo.exchange_ticks", "halo ticks moved per shard",
+              "ticks").add(ticks)
+    m.counter("halo.exchange_bytes", "halo bytes moved per shard",
+              "bytes").add(nbytes)
+
+
 def stage_exchange_step(specs: Dict[str, "qcompile.InputSpec"], body,
                         mesh: Mesh, axis: str, out_specs):
     """Build the jitted SPMD step shared by both time-sharded entry points:
@@ -201,6 +233,8 @@ def stage_exchange_step(specs: Dict[str, "qcompile.InputSpec"], body,
     n = mesh.shape[axis]
     names = sorted(specs)
     scheds = {name: specs[name].halo_schedule() for name in names}
+    _obs_default().counter(
+        "halo.stagings", "SPMD exchange steps staged (trace+compile)").add(1)
 
     def local_body(*flat):
         full = {name: halo_mod.exchange(scheds[name], v, m, axis, n)
@@ -253,6 +287,8 @@ def _stage_sparse_step(exe: "qcompile.CompiledQuery",
     n = mesh.shape[axis]
     names = sorted(specs)
     scheds = {name: specs[name].halo_schedule() for name in names}
+    _obs_default().counter(
+        "halo.stagings", "SPMD exchange steps staged (trace+compile)").add(1)
     S = exe.out_len
     vspecs = vexe.input_specs
 
@@ -351,6 +387,7 @@ def shard_map_run(exe: qcompile.CompiledQuery,
             lambda: stage_exchange_step(specs, exe.trace_fn, mesh, axis,
                                         (P(axis), P(axis))),
             _SHARD_STEP_CACHE_MAX)
+        record_exchange(specs, placed, mesh, axis)
         val, msk = step(*placed)
         return SnapshotGrid(value=val, valid=msk, t0=out_t0,
                             prec=exe.out_prec)
@@ -367,6 +404,7 @@ def shard_map_run(exe: qcompile.CompiledQuery,
         cache, (mesh, axis, "sparse"),
         lambda: _stage_sparse_step(exe, vexe, mesh, axis),
         _SHARD_STEP_CACHE_MAX)
+    record_exchange(specs, placed, mesh, axis)
     val, msk = step(flags, *placed)
     return SnapshotGrid(value=val, valid=msk, t0=out_t0, prec=exe.out_prec)
 

@@ -72,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import sparse_compact
+from ..obs import default as _obs_default
 from .plan import seg_range_affine
 from .stream import SnapshotGrid
 
@@ -459,6 +460,8 @@ def _fused_run(exe, n_parts: int, out_t0: int, meta: tuple,
     key = (n_parts, out_t0, meta, dirty_names)
     if key in cache:
         return cache[key]
+    _obs_default().tracer.record_compile(
+        f"sparse_run(n_parts={n_parts},t0={out_t0})")
 
     cp = _change_plan(exe)
     names = sorted(exe.input_specs)
@@ -534,7 +537,9 @@ def _fused_run(exe, n_parts: int, out_t0: int, meta: tuple,
         b = jnp.searchsorted(jnp.asarray(caps), cnt, side="left")
         ov, om, _ = jax.lax.switch(b, branches, flat, starts, seg,
                                    seed_v, seed_m)
-        return ov, om
+        # cnt rides along as a device scalar so callers can accumulate
+        # compaction telemetry without a sync
+        return ov, om, cnt
 
     cache[key] = jax.jit(run)
     return cache[key]
@@ -564,10 +569,17 @@ def sparse_run(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
     names = sorted(exe.input_specs)
     flat = [(inputs[nm].value, inputs[nm].valid) for nm in names]
     seed_v, seed_m = zero_seed(exe, flat)
+    m = _obs_default()
+    m.counter("sparse.runs", "one-shot sparse_run calls").add(1)
+    m.counter("sparse.segments", "segments presented to sparse_run",
+              "segments").add(n_parts)
+    dirty_c = m.counter("sparse.dirty_segments",
+                        "segments that actually computed", "segments")
     if not fused:
         starts = _gather_starts(exe, inputs, out_t0, n_parts)
         seg_dirty = segment_mask(exe, inputs, out_t0, n_parts, dirty=dirty)
         n = int(jnp.sum(seg_dirty))
+        dirty_c.add(n)
         step = staged_step(exe, n_parts, bucket_capacity(n, n_parts))
         ov, om, _ = step(flat, starts, seg_dirty, seed_v, seed_m)
         return SnapshotGrid(value=ov, valid=om, t0=out_t0,
@@ -577,5 +589,6 @@ def sparse_run(exe, inputs: Dict[str, SnapshotGrid], out_t0: int,
     dnames = tuple(sorted(set(dirty or ()) & set(names)))
     run = _fused_run(exe, n_parts, out_t0, meta, dnames)
     dmasks = {nm: dirty[nm] for nm in dnames}
-    ov, om = run(flat, dmasks, seed_v, seed_m)
+    ov, om, cnt = run(flat, dmasks, seed_v, seed_m)
+    dirty_c.add(cnt)  # lazy device add — no sync until snapshot()
     return SnapshotGrid(value=ov, valid=om, t0=out_t0, prec=exe.out_prec)

@@ -43,7 +43,10 @@ State pytree (the *only* cross-chunk state, host-roundtrippable through
       "__t": int,                             # stream clock
       "__sparse": {                           # body='sparse' only
          "dirty": {input_name: dirty_tail},   # change flags for those ticks
-         "prev":  {input_name: 1-tick snapshot},  # next chunk diffs vs this
+         "prev":  {input_name: 1-tick snapshot},  # halo-free inputs only:
+                                              # next chunk's tick 0 diffs
+                                              # vs this (halo-carrying
+                                              # inputs read the dirty tail)
          "seed":  {out_name: last output tick},   # hold seed per output
          "started": bool } }
 """
@@ -57,11 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import time
+
 from ..core import ir
 from ..core import sparse as sparse_mod
 from ..core.plan import ChangePlan, InputSpec, seg_range_affine
 from ..core.stream import SnapshotGrid
 from ..kernels import sparse_compact
+from ..obs import Metrics, log_buckets
 from .policy import ExecPolicy
 
 __all__ = ["BodySpec", "Runner", "body_spec_of"]
@@ -140,10 +146,19 @@ class Runner:
     segs_per_chunk:
         Segments consumed per :meth:`step`; each chunk supplies
         ``segs_per_chunk · spec.core`` fresh ticks per input.
+    metrics:
+        An :class:`repro.obs.Metrics` registry to accumulate runtime
+        telemetry into (``runner.*`` metric names — see
+        docs/architecture.md "Observability").  Default: a fresh private
+        registry on ``self.metrics``.  Pass a shared registry to pool
+        telemetry across runners (e.g. a session rebuilding its runner
+        across attach/detach): device-resident accumulations of the
+        previous owner are folded to host first, so nothing is lost.
     """
 
     def __init__(self, exe_or_spec, policy: ExecPolicy = ExecPolicy(), *,
-                 n_keys: Optional[int] = None, segs_per_chunk: int = 1):
+                 n_keys: Optional[int] = None, segs_per_chunk: int = 1,
+                 metrics: Optional[Metrics] = None):
         spec = (exe_or_spec if isinstance(exe_or_spec, BodySpec)
                 else body_spec_of(exe_or_spec))
         if policy.union != (not spec.solo):
@@ -210,6 +225,135 @@ class Runner:
         self._dirty_units = None
         self._total_units = 0
         self._chunks_run = 0
+        self._mstate = None  # (dirty_total, bucket_picks, frac_counts)
+        self._obs_init(metrics)
+
+    # -- telemetry -----------------------------------------------------------
+    def _obs_init(self, metrics: Optional[Metrics]) -> None:
+        """Create/bind the runner's metric handles (see the metric-names
+        reference in docs/architecture.md).  Device-resident metrics hold
+        references into ``self._mstate``, the per-runner device
+        accumulator state updated by one jitted dispatch per sparse chunk
+        (:meth:`_obs_accum`); host metrics are plain Python arithmetic."""
+        self.metrics = m = metrics if metrics is not None else Metrics()
+        self._m_chunks = m.counter(
+            "runner.chunks", "chunks stepped", "chunks")
+        self._m_units = m.counter(
+            "runner.units", "work units (keys x segments) presented",
+            "units")
+        self._m_keys = m.gauge("runner.keys", "keyed sub-streams", "keys")
+        self._m_keys.set(self.n_keys)
+        self._m_donated = m.counter(
+            "runner.donated_steps",
+            "steps run through a buffer-donating jitted step", "steps")
+        self._m_lat = m.histogram(
+            "runner.step_seconds", log_buckets(1e-5, 10.0, per_decade=3),
+            "per-chunk step wall time (dispatch, not device completion)",
+            "s", log_scale=True)
+        # device-resident handles: fold any previous owner's device refs
+        # into the host base before this runner's mstate takes over
+        self._m_dirty = m.counter(
+            "runner.dirty_units", "work units that actually computed",
+            "units")
+        self._m_dirty.fold_device()
+        ladder = (sparse_mod.capacity_ladder(self._U // self.policy.n_shards)
+                  if self.policy.sparse else [])
+        self._obs_caps = np.asarray(ladder, np.int32)
+        if ladder:
+            labels = [str(c) for c in ladder]
+            prior = m.get("runner.bucket_picks")
+            if prior is not None and prior.labels != labels:
+                # a rebuilt runner at a new geometry has a new ladder —
+                # the old slots don't mean anything anymore
+                m.drop("runner.bucket_picks")
+            self._m_picks = m.vector(
+                "runner.bucket_picks", labels,
+                "per-shard capacity-bucket selections (slot = capacity)",
+                "picks")
+            self._m_picks.fold_device()
+        else:
+            self._m_picks = None
+        self._obs_frac_edges = np.linspace(1 / 16, 1.0, 16)
+        self._m_frac = m.histogram(
+            "runner.dirty_fraction", [round(float(e), 6)
+                                      for e in self._obs_frac_edges],
+            "per-chunk dirty work-unit fraction", "fraction")
+        self._m_frac.fold_device()
+        m.register_collector("runner", self._obs_collect)
+
+    def _obs_collect(self) -> None:
+        """Pre-snapshot hook: derived gauges (syncs — off the hot path)."""
+        m = self.metrics
+        entries = 0
+        for f in self.spec.step_cache.values():
+            size = getattr(f, "_cache_size", None)
+            if callable(size):
+                entries += size()
+        # jax's own jit-cache entry count across this query's staged
+        # steps: together with the tracer's per-key compile counts this
+        # catches shape-driven retraces *inside* one staged step
+        m.gauge("runner.jit_entries",
+                "live jax jit-cache entries across staged steps").set(entries)
+        stats = self.dirty_stats()
+        if stats is not None:
+            m.gauge("runner.compact",
+                    "dirty fraction since construction/reset",
+                    "fraction").set(stats["compact"])
+
+    def _obs_accum(self):
+        """The per-chunk device metric accumulator: ONE jitted dispatch
+        folds every device-resident metric update (dirty total, per-shard
+        bucket picks, dirty-fraction histogram) into the running mstate.
+        Donates mstate, so the buffers update in place; the metric
+        handles then just re-point at the new leaves (no dispatch, no
+        transfer)."""
+        key = self._cache_key("obs_accum")
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        caps = self._obs_caps
+        edges = self._obs_frac_edges
+        U = self._U
+        n_shards = self.policy.n_shards
+        U_loc = U // n_shards
+
+        def accum(mstate, seg_dirty):
+            total, picks, frac = mstate
+            # exact per-shard counts: the unit axis splits contiguously
+            # over shards, so this mirrors the fused step's in-shard pick
+            per_shard = seg_dirty.reshape(n_shards, U_loc).sum(
+                axis=1, dtype=jnp.int32)
+            cnt = per_shard.sum()
+            b = jnp.clip(jnp.searchsorted(jnp.asarray(caps), per_shard,
+                                          side="left"),
+                         0, len(caps) - 1)
+            f = cnt.astype(jnp.float32) / U
+            fi = jnp.searchsorted(jnp.asarray(edges, jnp.float32), f,
+                                  side="left")
+            return (total + cnt,
+                    picks.at[b].add(1),
+                    frac.at[fi].add(1))
+
+        self.metrics.tracer.record_compile(self._compile_label(key))
+        cache[key] = (jax.jit(accum, donate_argnums=(0,)) if self.spec.jit
+                      else accum)
+        return cache[key]
+
+    def _obs_sparse_chunk(self, seg_dirty) -> None:
+        """Per-sparse-chunk device metric update: one jitted accumulator
+        dispatch plus reference re-binds — zero device→host transfers."""
+        if self._mstate is None:
+            self._mstate = (jnp.zeros((), jnp.int32),
+                            jnp.zeros((len(self._obs_caps),), jnp.int32),
+                            jnp.zeros((len(self._obs_frac_edges) + 1,),
+                                      jnp.int32))
+        self._mstate = self._obs_accum()(self._mstate, seg_dirty)
+        total, picks, frac = self._mstate
+        self._m_dirty.set_device(total)
+        self._m_picks.set_device(picks)
+        self._m_frac.set_device(frac)
+        # dirty_stats() reads the same accumulator (runner-local view)
+        self._dirty_units = total
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -233,6 +377,16 @@ class Runner:
     def _cache_key(self, kind, *extra):
         return (kind, self._K, self.n_segs, self.policy.mesh,
                 self.policy.axis, self.spec.jit) + extra
+
+    def _compile_label(self, key) -> str:
+        """Human-readable compile-counter key for a step_cache key (the
+        recompile detector's unit of accounting)."""
+        kind, K, n_segs, mesh, axis = key[0], key[1], key[2], key[3], key[4]
+        parts = [f"K={K}", f"segs={n_segs}"]
+        if mesh is not None:
+            parts.append(f"mesh={axis}")
+        parts += [str(x) for x in key[6:]]
+        return f"{kind}({','.join(parts)})"
 
     def _shard_body(self, fn, n_buf_args: int, unit_bufs: bool = False):
         """Wrap the per-unit compute ``fn(w, bufs...)`` in shard_map over
@@ -280,10 +434,15 @@ class Runner:
             self._tails[name] = self._place((tv, jnp.zeros((K, hl), bool)))
             if self._sparse is not None and name not in self._sparse["dirty"]:
                 self._sparse["dirty"][name] = jnp.zeros((K, hl), bool)
-                self._sparse["prev"][name] = (
-                    _tm(lambda x: jnp.zeros((K, 1) + x.shape[2:], x.dtype),
-                        cv),
-                    jnp.zeros((K, 1), bool))
+                if hl == 0:
+                    # the 1-tick snapshot is only ever read for halo-free
+                    # inputs (tick 0's diff partner); halo-carrying inputs
+                    # get their position-0 flag from the dirty tail, so
+                    # carrying a snapshot for them would be dead state
+                    self._sparse["prev"][name] = (
+                        _tm(lambda x: jnp.zeros((K, 1) + x.shape[2:],
+                                                x.dtype), cv),
+                        jnp.zeros((K, 1), bool))
 
     # -- dense step ----------------------------------------------------------
     def _dense_step(self):
@@ -291,6 +450,7 @@ class Runner:
         cache = self.spec.step_cache
         if key in cache:
             return cache[key]
+        self.metrics.tracer.record_compile(self._compile_label(key))
         names, specs = self._names(), self.spec.input_specs
         outs_fn = self.spec.outs_fn
         K, n_segs, U = self._K, self.n_segs, self._U
@@ -369,6 +529,7 @@ class Runner:
         cache = self.spec.step_cache
         if key in cache:
             return cache[key]
+        self.metrics.tracer.record_compile(self._compile_label(key))
         names, specs = self._names(), self.spec.input_specs
         outs_fn = self.spec.outs_fn
         n_segs = self.n_segs
@@ -471,6 +632,7 @@ class Runner:
         cache = self.spec.step_cache
         if key in cache:
             return cache[key]
+        self.metrics.tracer.record_compile(self._compile_label(key))
         names, specs = self._names(), self.spec.input_specs
         cp = self.spec.change_plan
         S, q = self.spec.out_len, self.spec.out_prec
@@ -565,7 +727,11 @@ class Runner:
                         jax.lax.slice_in_dim(fm, lo - 1, lo + hl, axis=1))
                 else:
                     new_dirty[name] = dirty[name]
-                new_prev[name] = (_tm(lambda x: x[:, -1:], cv), cm[:, -1:])
+                if not hl:
+                    # snapshot carried (and donated in-place) only where it
+                    # will be read: halo-free inputs' next tick-0 diff
+                    new_prev[name] = (_tm(lambda x: x[:, -1:], cv),
+                                      cm[:, -1:])
             if not names:
                 seg_dirty = jnp.ones((K, n_segs), bool)  # input-free: dense
             if force_first:
@@ -621,9 +787,14 @@ class Runner:
                 self._tails, st["dirty"], st["prev"], seeds, chunk_in)
         # device-resident diagnostics: no transfer, no dispatch stall
         self.last_seg_dirty = seg_dirty
-        cnt = seg_dirty.sum(dtype=jnp.int32)
-        self._dirty_units = (cnt if self._dirty_units is None
-                             else self._dirty_units + cnt)
+        if self.metrics.on:
+            self._obs_sparse_chunk(seg_dirty)
+            if not force_first:
+                self._m_donated.add(1)
+        else:
+            cnt = seg_dirty.sum(dtype=jnp.int32)
+            self._dirty_units = (cnt if self._dirty_units is None
+                                 else self._dirty_units + cnt)
         self._total_units += self._U
         self._chunks_run += 1
 
@@ -644,12 +815,15 @@ class Runner:
         state commits only after the step succeeded, so a raise leaves the
         runner exactly as it was.
         """
+        t0 = time.perf_counter()
         chunk_in = self._ingest(chunks)
         self._init_missing_tails(chunk_in)
         if self.policy.sparse:
             outs, commit = self._sparse_chunk(chunk_in)
         else:
             outs, new_tails = self._dense_step()(self._tails, chunk_in)
+            if self.metrics.on and self.spec.jit:
+                self._m_donated.add(1)
 
             def commit(new_tails=new_tails):
                 self._tails = new_tails
@@ -666,6 +840,12 @@ class Runner:
                                      prec=self.spec.out_precs[o])
         commit()
         self._t += self.n_segs * self.spec.span
+        if self.metrics.on:
+            # host-side arithmetic only (perf_counter + numpy bisect):
+            # wall time around the async dispatch, never a device read
+            self._m_chunks.add(1)
+            self._m_units.add(self._U)
+            self._m_lat.observe(time.perf_counter() - t0)
         return result["__out"] if self.spec.solo else result
 
     def run(self, inputs: Dict[str, SnapshotGrid], n_chunks: int):
@@ -710,14 +890,28 @@ class Runner:
         self._dirty_units = None
         self._total_units = 0
         self._chunks_run = 0
+        if self._mstate is not None:
+            # preserve the registry's running totals (syncs — off-path),
+            # then drop this runner's device accumulator state
+            self._m_dirty.fold_device()
+            if self._m_picks is not None:
+                self._m_picks.fold_device()
+            self._m_frac.fold_device()
+            self._mstate = None
 
     def dirty_stats(self) -> Optional[Dict]:
         """Measured compaction of the sparse body since construction/reset:
         ``{chunks, units, dirty_units, compact}`` where ``compact`` is the
         fraction of (key × segment) work units that actually computed
         (forced-dirty first segments included).  ``None`` for dense bodies
-        or before the first chunk.  Reading this syncs the device-resident
-        counter — a diagnostic call, not part of the steady-state path
+        or before the first chunk.
+
+        Compat wrapper over the runner-local view of the metrics
+        registry's device accumulator (``runner.dirty_units`` et al. —
+        prefer ``runner.metrics.snapshot()``, which carries the same
+        numbers plus bucket picks, dirty-fraction and latency
+        histograms).  Reading syncs the device-resident counter — a
+        diagnostic call, not part of the steady-state path
         (``last_seg_dirty`` holds the raw per-unit flags of the newest
         chunk, also device-resident)."""
         if self._sparse is None or self._total_units == 0:
@@ -825,6 +1019,17 @@ class Runner:
             for name in state:
                 got = np.shape(sparse_state["dirty"].get(name, ()))
                 check_lead(name, got, "dirty-tail")
+            if strict:
+                # halo-free inputs carry their whole change lineage in the
+                # 1-tick snapshot; restoring one without it would silently
+                # treat an unchanged tick 0 as clean against φ
+                no_prev = sorted(
+                    n for n in state if specs[n].left_halo == 0
+                    and n not in (sparse_state.get("prev") or {}))
+                if no_prev:
+                    raise ValueError(
+                        f"checkpoint is missing the 1-tick 'prev' snapshot "
+                        f"for halo-free inputs {no_prev}")
 
         self._t = int(t)
         # jnp.array (copy), not asarray: restored state feeds the donating
@@ -838,9 +1043,12 @@ class Runner:
                     k: self._place(self._lift(jnp.array(v)))
                     for k, v in sparse_state["dirty"].items()
                     if k in names}
+                # older checkpoints carried (dead) snapshots for
+                # halo-carrying inputs too — drop them on the way in
                 st["prev"] = {
                     k: self._place(self._lift(_tm(jnp.array, v)))
-                    for k, v in sparse_state["prev"].items() if k in names}
+                    for k, v in sparse_state["prev"].items()
+                    if k in names and specs[k].left_halo == 0}
                 seed = sparse_state.get("seed") or {}
                 if not isinstance(seed, dict):
                     # pre-policy-runner checkpoints (old KeyedEngine format)
@@ -857,4 +1065,13 @@ class Runner:
                               for o, v in seed.items()
                               if o in self.spec.out_precs}
                 st["started"] = bool(sparse_state.get("started", True))
+            # φ-init any halo-free snapshot the checkpoint didn't carry
+            # (strict mode rejected this above): the next chunk's tick 0
+            # then diffs against φ, the stream-start rule
+            for name, (tv, tm) in self._tails.items():
+                if specs[name].left_halo == 0 and name not in st["prev"]:
+                    st["prev"][name] = (
+                        _tm(lambda x: jnp.zeros((x.shape[0], 1)
+                                                + x.shape[2:], x.dtype), tv),
+                        jnp.zeros((tm.shape[0], 1), bool))
             self._sparse = st

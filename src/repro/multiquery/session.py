@@ -43,6 +43,7 @@ from ..core.plan import plan_change, plan_union
 from ..core.stream import SnapshotGrid
 from ..engine.policy import ExecPolicy, MeshPlacement
 from ..engine.runner import BodySpec, Runner
+from ..obs import Metrics
 from .shared import SharedPlanCache, SharingReport
 
 __all__ = ["MultiQuerySession", "shard_union_run", "union_body_spec",
@@ -178,6 +179,7 @@ def shard_union_run(queries: Dict[str, object], span: int,
 
     placed, out_t0 = parallel.place_core_inputs(
         plan.input_specs, inputs, mesh, axis)
+    parallel.record_exchange(plan.input_specs, placed, mesh, axis)
     outs = sharded(*placed)
     return {qname: SnapshotGrid(value=v, valid=m, t0=out_t0,
                                 prec=queries[qname].prec)
@@ -220,6 +222,11 @@ class MultiQuerySession:
     cache:
         A shared :class:`SharedPlanCache`; sessions may share one so interned
         plans persist across sessions.  A private cache by default.
+    metrics:
+        An :class:`repro.obs.Metrics` registry for session + runner
+        telemetry (``session.*`` and ``runner.*`` metric names).  The
+        session passes it through every runner it builds, so counters and
+        histograms survive attach/detach rebuilds; private by default.
     """
 
     def __init__(self, span: int, *, n_keys: Optional[int] = None,
@@ -227,7 +234,8 @@ class MultiQuerySession:
                  pallas: Optional[bool] = None, sum_algo: str = "block",
                  jit: bool = True, instrument: bool = False,
                  sparse: bool = False,
-                 cache: Optional[SharedPlanCache] = None):
+                 cache: Optional[SharedPlanCache] = None,
+                 metrics: Optional[Metrics] = None):
         self.span = span
         self.n_keys = n_keys
         self.mesh = mesh
@@ -238,6 +246,7 @@ class MultiQuerySession:
         self.instrument = instrument
         self.sparse = sparse
         self.cache = cache if cache is not None else SharedPlanCache()
+        self.metrics = metrics if metrics is not None else Metrics()
         self.node_eval_counts: Dict[str, int] = {}
         self._queries: Dict[str, ir.Node] = {}   # name -> interned root
         self._plan = None
@@ -281,6 +290,7 @@ class MultiQuerySession:
         canon = self.cache.intern(root)
         self._queries[name] = canon
         self._dirty = True
+        self.metrics.counter("session.attaches", "queries attached").add(1)
         return canon
 
     def detach(self, name: str) -> None:
@@ -296,6 +306,7 @@ class MultiQuerySession:
                  for n in ir.free_inputs(root)}
         self._keyed = flags.pop() if len(flags) == 1 else None
         self._dirty = True
+        self.metrics.counter("session.detaches", "queries detached").add(1)
 
     @property
     def queries(self) -> Dict[str, ir.Node]:
@@ -321,36 +332,56 @@ class MultiQuerySession:
         if not self._queries:
             raise ValueError("no queries attached")
         roots = list(self._queries.values())
-        plan = plan_union(roots, self.span)
-        for name, s in plan.input_specs.items():
-            if s.right_halo > 0:  # pragma: no cover - guarded per-attach
-                raise NotImplementedError(
-                    f"input {name} has lookahead; lookback-only sessions")
-        carry = self._pending
-        if carry is None and self._runner is not None:
-            carry = self._runner.state()
-        spec = union_body_spec(
-            plan, self._queries, pallas=self.pallas, sum_algo=self.sum_algo,
-            jit=self.jit,
-            counts=self.node_eval_counts if self.instrument else None,
-            sparse=self.sparse)
-        policy = ExecPolicy(
-            body="sparse" if self.sparse else "dense",
-            keys="vmapped" if self._keyed else "single",
-            # the mesh shards the key axis only (attach() rejects unkeyed
-            # mesh sessions; keep the guard local too so the policy always
-            # mirrors what the old keyed step staged)
-            placement=(MeshPlacement(self.mesh, self.axis)
-                       if self.mesh is not None and self._keyed
-                       else "local"),
-            dag="union")
-        runner = Runner(spec, policy,
-                        n_keys=self.n_keys if self._keyed else None)
-        if carry is not None:
-            runner.restore(self._refit(carry, plan), strict=False)
+        tracer = self.metrics.tracer
+        with tracer.span("session.rebuild"):
+            with tracer.span("plan"):
+                plan = plan_union(roots, self.span)
+            for name, s in plan.input_specs.items():
+                if s.right_halo > 0:  # pragma: no cover - guarded per-attach
+                    raise NotImplementedError(
+                        f"input {name} has lookahead; lookback-only sessions")
+            carry = self._pending
+            if carry is None and self._runner is not None:
+                carry = self._runner.state()
+            spec = union_body_spec(
+                plan, self._queries, pallas=self.pallas,
+                sum_algo=self.sum_algo, jit=self.jit,
+                counts=self.node_eval_counts if self.instrument else None,
+                sparse=self.sparse)
+            policy = ExecPolicy(
+                body="sparse" if self.sparse else "dense",
+                keys="vmapped" if self._keyed else "single",
+                # the mesh shards the key axis only (attach() rejects
+                # unkeyed mesh sessions; keep the guard local too so the
+                # policy always mirrors what the old keyed step staged)
+                placement=(MeshPlacement(self.mesh, self.axis)
+                           if self.mesh is not None and self._keyed
+                           else "local"),
+                dag="union")
+            runner = Runner(spec, policy,
+                            n_keys=self.n_keys if self._keyed else None,
+                            metrics=self.metrics)
+            if carry is not None:
+                with tracer.span("refit"):
+                    runner.restore(self._refit(carry, plan), strict=False)
+                self.metrics.counter(
+                    "session.refits",
+                    "carried state re-fits onto a changed contract").add(1)
         self._plan, self._runner = plan, runner
         self._pending = None
         self._dirty = False
+        m = self.metrics
+        m.counter("session.rebuilds", "plan+runner rebuilds").add(1)
+        m.gauge("session.queries", "attached queries").set(len(self._queries))
+        rep = self.sharing_report()
+        m.gauge("session.union_nodes", "nodes in the union DAG").set(
+            rep.union_nodes)
+        m.gauge("session.shared_nodes",
+                "union nodes read by more than one query").set(
+            rep.shared_nodes)
+        m.gauge("session.sharing_ratio",
+                "independent-plan nodes per union node").set(
+            float(rep.sharing_ratio))
 
     # -- halo-state re-fitting (attach/detach between chunks) ----------------
     def _fit_tail(self, tail, hl: int):
@@ -406,12 +437,24 @@ class MultiQuerySession:
                for name, spec in plan.input_specs.items() if name in st}
         out["__t"] = t
         if sp is not None and self.sparse:
+            # 1-tick snapshots exist only for halo-free inputs.  When the
+            # merged contract *shrinks* an input to halo-free (its deepest
+            # reader detached), derive the snapshot from the old tail's
+            # last tick — that is the tick the next chunk's tick 0 must
+            # diff against — instead of dropping the history.
+            prev = {}
+            for n, s in plan.input_specs.items():
+                if s.left_halo != 0:
+                    continue
+                if n in sp["prev"]:
+                    prev[n] = sp["prev"][n]
+                elif n in st and np.shape(st[n][1])[self._taxis] >= 1:
+                    prev[n] = self._fit_tail(st[n], 1)
             out["__sparse"] = {
                 "dirty": {n: self._fit_dirty(sp["dirty"][n],
                                              plan.input_specs[n].left_halo)
                           for n in plan.input_specs if n in sp["dirty"]},
-                "prev": {n: v for n, v in sp["prev"].items()
-                         if n in plan.input_specs},
+                "prev": prev,
                 "seed": {q: v for q, v in sp["seed"].items()
                          if q in self._queries},
                 "started": sp["started"]}

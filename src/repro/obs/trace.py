@@ -1,0 +1,92 @@
+"""Phase tracing: wall-time span trees and a recompile detector.
+
+Spans answer "where does the wall time go" at phase granularity —
+plan / compile / execute / refit — without a profiler run.  ``span()``
+is a context manager; nesting builds slash-separated paths
+(``session.rebuild/plan``), and each path aggregates count / total / max
+seconds.  This is *host* wall time around dispatch boundaries: spans
+never touch device values, so they are safe anywhere, including around
+the transfer-guarded hot path.
+
+The recompile detector rides the engine's own staging discipline: every
+jit-cache miss in ``Runner``'s ``step_cache`` (one entry per (policy,
+geometry) point) calls :meth:`Tracer.record_compile` with the cache key.
+A key compiled **more than once** means the cache was dropped and
+rebuilt — an unexpected retrace; :meth:`Tracer.retraces` surfaces
+exactly those.  The runner additionally cross-checks jax's own cache via
+``jitted._cache_size()`` at snapshot time (``runner.jit_entries`` gauge),
+which catches shape-driven retraces *inside* one staged step.
+
+Optional passthrough: with ``REPRO_OBS_JAX_TRACE=1``, spans also open
+``jax.profiler.TraceAnnotation`` so they appear on the TensorBoard /
+Perfetto timeline when a profiler trace is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Dict, List
+
+__all__ = ["Tracer"]
+
+
+def _jax_annotation(name: str):
+    if os.environ.get("REPRO_OBS_JAX_TRACE", "0") != "1":
+        return contextlib.nullcontext()
+    try:
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()
+
+
+class Tracer:
+    """Aggregating span recorder + per-key compile counter."""
+
+    def __init__(self):
+        self._stack: List[str] = []
+        self._spans: Dict[str, Dict] = {}
+        self._compiles: Dict[str, int] = {}
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        """Time a phase.  Nested spans build ``outer/inner`` paths."""
+        path = "/".join(self._stack + [name])
+        self._stack.append(name)
+        t0 = time.perf_counter()
+        try:
+            with _jax_annotation(path):
+                yield
+        finally:
+            dt = time.perf_counter() - t0
+            self._stack.pop()
+            s = self._spans.setdefault(
+                path, {"count": 0, "total_s": 0.0, "max_s": 0.0})
+            s["count"] += 1
+            s["total_s"] += dt
+            s["max_s"] = max(s["max_s"], dt)
+
+    def record_compile(self, key: str) -> None:
+        """Note a jit-cache miss at a policy point (a staged compile)."""
+        self._compiles[key] = self._compiles.get(key, 0) + 1
+
+    def compiles(self) -> Dict[str, int]:
+        return dict(self._compiles)
+
+    def retraces(self) -> Dict[str, int]:
+        """Keys compiled more than once — unexpected retraces: the
+        runner's step_cache holds exactly one step per key, so a second
+        compile means the cache was dropped and the step re-staged."""
+        return {k: n - 1 for k, n in self._compiles.items() if n > 1}
+
+    def span_report(self) -> Dict[str, Dict]:
+        return {k: dict(v) for k, v in sorted(self._spans.items())}
+
+    def compile_report(self) -> Dict:
+        return {"counts": self.compiles(), "retraces": self.retraces()}
+
+    def reset(self) -> None:
+        self._spans.clear()
+        self._compiles.clear()
+        self._stack.clear()

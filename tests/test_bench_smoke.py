@@ -32,6 +32,22 @@ def _run_section(section: str) -> str:
     return out.stdout
 
 
+def _assert_engine_telemetry(rows):
+    """Every row carries a valid ``repro.obs/v1`` snapshot under
+    ``metrics`` (validated with the library's own schema smoke)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    try:
+        from repro.obs import SCHEMA, validate_snapshot
+    finally:
+        sys.path.pop(0)
+    assert rows
+    for r in rows:
+        snap = r.get("metrics")
+        assert isinstance(snap, dict) and snap.get("schema") == SCHEMA, r
+        assert validate_snapshot(snap) == [], (r["name"],
+                                               validate_snapshot(snap))
+
+
 def test_fig_multiquery_sharing_smoke():
     out = _run_section("figmq")
     # all three N points reported, shared and independent
@@ -74,6 +90,9 @@ def test_fig_policy_smoke_and_json_results():
                                for r in sparse_rows), doc["rows"]
     # the ~2%-change workload must actually compact
     assert min(r["compact"] for r in sparse_rows) < 0.5, sparse_rows
+    # sparse rows carry the runner's schema-versioned telemetry snapshot
+    # (the compact column is read from it, not recomputed)
+    _assert_engine_telemetry(sparse_rows)
 
 
 def test_fig_sparse_smoke_and_json_results():
@@ -111,3 +130,23 @@ def test_fig_sparse_smoke_and_json_results():
             assert 0.0 < r["compact"] <= 1.0, r
     assert "scale_crossover_rate" in doc["config"], doc["config"]
     assert "scale_keys" in doc["config"], doc["config"]
+    # compact/latency columns come from engine telemetry now: sparse rows
+    # (one-shot and scale) carry the snapshot, and the anchor sweep records
+    # its measured instrumentation overhead in the config
+    _assert_engine_telemetry(one_shot)
+    _assert_engine_telemetry([r for r in scale if r["mode"] == "sparse"])
+    assert "metrics_overhead_pct" in doc["config"], doc["config"]
+
+
+def test_metrics_smoke_section_validates_exporters():
+    """``bench-metrics`` (the nightly CI gate): the metrics_smoke section
+    must pass its own schema/exporter validation (it exits non-zero on any
+    problem) and write a BENCH json whose row embeds the snapshot."""
+    path = os.path.join(REPO, "BENCH_metricssmoke.json")
+    if os.path.exists(path):
+        os.remove(path)
+    out = _run_section("metricssmoke")
+    assert "ok=1" in out, out
+    doc = json.load(open(path))
+    assert doc["config"]["schema"] == "repro.obs/v1"
+    _assert_engine_telemetry(doc["rows"])

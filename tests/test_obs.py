@@ -1,0 +1,248 @@
+"""Unit tests for the telemetry substrate (repro/obs/).
+
+The registry's one contract — accumulating never syncs, ``snapshot()`` is
+the single device→host read — is asserted end-to-end in
+tests/test_runner_hotpath.py under ``jax.transfer_guard``; here the metric
+types, tracer and exporters are covered in isolation: get-or-create
+semantics, histogram bucketing and quantile interpolation, device
+fold/pending behaviour, the ``disabled()`` kill switch, span/compile
+reports, and the schema-versioned JSONL/Prometheus round-trip.
+"""
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import (Metrics, counter_delta, disabled, export_jsonl,
+                       export_prometheus, log_buckets, read_jsonl,
+                       validate_snapshot)
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_get_or_create_and_type_guard():
+    m = Metrics()
+    c = m.counter("x.count", "help text", "items")
+    assert m.counter("x.count") is c
+    assert m.get("x.count") is c and m.get("missing") is None
+    with pytest.raises(ValueError):
+        m.gauge("x.count")
+    m.drop("x.count")
+    assert m.get("x.count") is None
+
+
+def test_counter_host_device_and_pending_adds():
+    m = Metrics()
+    c = m.counter("c")
+    c.add(2)
+    c.add(3)
+    assert c.value == 5
+    # jax scalars queue as pending references (no eager device arithmetic)
+    c.add(jnp.int32(7))
+    c.add(jnp.int32(1))
+    assert c._pending and c.value == 13
+    c.fold_device()
+    assert c._base == 13 and not c._pending and c._dev is None
+    # set_device swaps in a jitted accumulator's running total
+    c.set_device(jnp.int32(4))
+    assert c.value == 17
+    c.reset()
+    assert c.value == 0
+
+
+def test_counter_pending_collapse_stays_lazy():
+    c = Metrics().counter("c")
+    for _ in range(c._COLLAPSE + 5):
+        c.add(jnp.int32(1))
+    # collapsed into the lazy device part, remainder still pending
+    assert c._dev is not None and len(c._pending) == 5
+    assert c.value == c._COLLAPSE + 5
+
+
+def test_gauge_and_vector():
+    m = Metrics()
+    g = m.gauge("g")
+    g.set(2.5)
+    assert g.value == 2.5
+    v = m.vector("v", labels=["64", "128", "256"])
+    v.add(1)
+    v.add(1, 4)
+    v.set_device(jnp.asarray([1, 0, 2]))
+    assert v.values == [1, 5, 2]
+    v.fold_device()
+    assert v.values == [1, 5, 2]
+
+
+def test_histogram_bucketing_and_quantiles():
+    m = Metrics()
+    h = m.histogram("h", edges=[1.0, 2.0, 4.0])
+    for x in (0.5, 1.5, 1.5, 3.0, 100.0):
+        h.observe(x)
+    assert list(h.counts()) == [1, 2, 1, 1]
+    snap = h.to_snapshot()
+    assert snap["count"] == 5 and snap["sum"] == pytest.approx(106.5)
+    # p99 falls in the overflow bucket → clamps to the top edge
+    assert snap["p99"] == 4.0
+    assert 1.0 <= snap["p50"] <= 2.0
+
+
+def test_log_histogram_quantile_interpolates_geometrically():
+    m = Metrics()
+    edges = log_buckets(1e-4, 1.0, per_decade=1)
+    h = m.histogram("lat", edges=edges, log_scale=True)
+    for _ in range(100):
+        h.observe(3e-3)  # all in the (1e-3, 1e-2] bucket
+    p50 = h.quantile(0.5)
+    assert 1e-3 <= p50 <= 1e-2
+    # log interpolation: the quantile moves geometrically inside the bucket
+    assert math.isclose(p50, 1e-3 * 10 ** 0.5, rel_tol=1e-6)
+    assert m.histogram("lat", edges=edges) is h
+    with pytest.raises(ValueError):
+        Metrics().histogram("bad", edges=[2.0, 1.0])
+
+
+def test_empty_histogram_quantiles_are_none():
+    h = Metrics().histogram("h", edges=[1.0])
+    assert h.quantile(0.5) is None
+    assert h.to_snapshot()["p50"] is None
+
+
+def test_disabled_makes_updates_noops():
+    m = Metrics()
+    c, g = m.counter("c"), m.gauge("g")
+    h = m.histogram("h", edges=[1.0])
+    with disabled():
+        c.add(5)
+        g.set(9)
+        h.observe(0.5)
+        assert not m.on
+    assert c.value == 0 and g.value == 0 and int(h.counts().sum()) == 0
+    assert m.on
+    m.enabled = False
+    assert not m.on
+
+
+def test_counter_delta_between_snapshots():
+    m = Metrics()
+    c = m.counter("c")
+    c.add(2)
+    s0 = m.snapshot()
+    c.add(5)
+    s1 = m.snapshot()
+    assert counter_delta(s0, s1, "c") == 5
+    assert counter_delta(s0, s1, "absent") == 0
+
+
+def test_collector_runs_before_snapshot():
+    m = Metrics()
+    m.register_collector("derived", lambda: m.gauge("d").set(42))
+    assert m.snapshot()["gauges"]["d"]["value"] == 42
+    # re-registering a name replaces the hook (session-rebuild path)
+    m.register_collector("derived", lambda: m.gauge("d").set(7))
+    assert m.snapshot()["gauges"]["d"]["value"] == 7
+
+
+# -- tracer -----------------------------------------------------------------
+
+def test_tracer_spans_nest_and_report():
+    m = Metrics()
+    t = m.tracer
+    with t.span("rebuild"):
+        with t.span("plan"):
+            pass
+        with t.span("plan"):
+            pass
+    rep = t.span_report()
+    assert rep["rebuild"]["count"] == 1
+    assert rep["rebuild/plan"]["count"] == 2
+    assert rep["rebuild"]["total_s"] >= rep["rebuild/plan"]["total_s"]
+
+
+def test_tracer_compile_counts_and_retraces():
+    t = Metrics().tracer
+    t.record_compile("step(a)")
+    t.record_compile("step(b)")
+    t.record_compile("step(b)")
+    assert t.compiles() == {"step(a)": 1, "step(b)": 2}
+    assert t.retraces() == {"step(b)": 1}
+    rep = t.compile_report()
+    assert rep["counts"]["step(b)"] == 2 and rep["retraces"] == {"step(b)": 1}
+
+
+# -- snapshot + exporters ---------------------------------------------------
+
+def _sample_metrics():
+    m = Metrics()
+    m.counter("runner.chunks", "chunks stepped").add(3)
+    m.gauge("runner.compact").set(0.25)
+    h = m.histogram("runner.step_seconds", log_buckets(1e-4, 1.0, 2),
+                    "per-chunk latency", "s", log_scale=True)
+    h.observe(2e-3)
+    h.observe(8e-3)
+    v = m.vector("runner.bucket_picks", labels=["1", "2", "4"])
+    v.add(2, 5)
+    with m.tracer.span("chunk"):
+        pass
+    m.tracer.record_compile("sparse_fused(K=1)")
+    return m
+
+
+def test_snapshot_schema_is_valid_and_sections_complete():
+    snap = _sample_metrics().snapshot()
+    assert snap["schema"] == obs.SCHEMA
+    assert validate_snapshot(snap) == []
+    assert snap["counters"]["runner.chunks"]["value"] == 3
+    hist = snap["histograms"]["runner.step_seconds"]
+    assert len(hist["counts"]) == len(hist["edges"]) + 1
+    assert snap["vectors"]["runner.bucket_picks"]["values"][2] == 5
+    assert snap["compiles"]["counts"] == {"sparse_fused(K=1)": 1}
+    assert "chunk" in snap["spans"]
+
+
+def test_validate_snapshot_flags_problems():
+    snap = _sample_metrics().snapshot()
+    assert validate_snapshot({"schema": "nope"})  # wrong schema + missing
+    bad = json.loads(json.dumps(snap))
+    bad["histograms"]["runner.step_seconds"]["counts"].append(1)
+    assert any("counts" in p for p in validate_snapshot(bad))
+
+
+def test_jsonl_round_trip(tmp_path):
+    m = _sample_metrics()
+    path = os.path.join(tmp_path, "metrics.jsonl")
+    snap = m.snapshot()
+    export_jsonl(snap, path)
+    export_jsonl(m.snapshot(), path)
+    back = read_jsonl(path)
+    assert len(back) == 2
+    assert back[0] == json.loads(json.dumps(snap))
+    assert validate_snapshot(back[0]) == []
+
+
+def test_prometheus_exposition_format():
+    text = export_prometheus(_sample_metrics().snapshot())
+    assert "# TYPE runner_chunks_total counter" in text
+    assert "runner_chunks_total 3" in text
+    assert "runner_compact 0.25" in text
+    # histogram: cumulative buckets ending at +Inf, then _sum/_count
+    assert 'runner_step_seconds_bucket{le="+Inf"} 2' in text
+    assert "runner_step_seconds_count 2" in text
+    assert 'runner_bucket_picks_total{slot="4"} 5' in text
+    assert 'compiles_total{key="sparse_fused_K_1_"} 1' in text
+    # buckets are cumulative (monotone non-decreasing)
+    cum = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+           if line.startswith("runner_step_seconds_bucket")]
+    assert cum == sorted(cum)
+
+
+def test_reset_clears_metrics_and_tracer():
+    m = _sample_metrics()
+    m.reset()
+    snap = m.snapshot()
+    assert snap["counters"]["runner.chunks"]["value"] == 0
+    assert snap["histograms"]["runner.step_seconds"]["count"] == 0
+    assert snap["compiles"]["counts"] == {} and snap["spans"] == {}

@@ -13,8 +13,11 @@ Two properties the fused sparse step is built around, asserted directly:
   buffers update in place: after a step, the previous state's arrays are
   deleted (consumed), not merely dereferenced.
 
-Diagnostics stay device-resident too: reading ``dirty_stats()`` is the one
-syncing call, and it is *not* on the chunk path.
+Diagnostics stay device-resident too: the metrics registry accumulates
+through the guarded steps without syncing (``Metrics.snapshot()`` /
+``dirty_stats()`` are the explicit off-path reads), and the tracer's
+compile counter pins exactly one compile per (policy, geometry) staging
+key across repeated chunks — a retrace would show up as a count > 1.
 """
 import jax
 import jax.numpy as jnp
@@ -76,6 +79,16 @@ def test_steady_state_sparse_chunk_issues_zero_transfers():
     # transfer, and it still reflects every chunk run
     stats = r.dirty_stats()
     assert stats["chunks"] == 3 and stats["units"] == 3 * SPC
+    # same numbers through the metrics registry (snapshot = the one read),
+    # plus the per-chunk latency histogram and capacity-bucket picks the
+    # compat wrapper doesn't carry
+    snap = r.metrics.snapshot()
+    assert snap["counters"]["runner.chunks"]["value"] == 3
+    assert snap["counters"]["runner.units"]["value"] == 3 * SPC
+    assert (snap["counters"]["runner.dirty_units"]["value"]
+            == stats["dirty_units"])
+    assert snap["histograms"]["runner.step_seconds"]["count"] == 3
+    assert sum(snap["vectors"]["runner.bucket_picks"]["values"]) == 3
 
 
 def test_steady_state_sparse_chunk_zero_transfers_keyed():
@@ -102,13 +115,12 @@ def test_steady_state_sparse_chunk_zero_transfers_keyed():
 
 
 def _state_leaves(r):
-    # tails, dirty tails and hold seeds are read by every steady-state step
-    # and must be consumed by donation; the 1-tick `prev` snapshots are
-    # donation-eligible too but only *read* by halo-free inputs, and XLA
-    # may keep an unread donated buffer alive — so they are not asserted
+    # everything the steady-state step donates: halo tails, dirty tails,
+    # hold seeds, and the 1-tick `prev` snapshots (which exist exactly for
+    # the halo-free inputs that read them, so donation always consumes)
     st = r._sparse
     return jax.tree_util.tree_leaves(
-        (r._tails, st["dirty"], st["seed"]))
+        (r._tails, st["dirty"], st["seed"], st["prev"]))
 
 
 @pytest.mark.skipif(jax.default_backend() not in ("cpu", "tpu", "gpu"),
@@ -136,6 +148,68 @@ def test_dense_step_donates_tails():
     old = jax.tree_util.tree_leaves(r._tails)
     jax.block_until_ready(r.step(chunks[1]).valid)
     assert all(x.is_deleted() for x in old)
+
+
+def test_exactly_one_compile_per_policy_geometry_key():
+    """The recompile detector must see every staging key compiled exactly
+    once across repeated chunks — the step_cache holds one step per
+    (policy, geometry) point, so a second compile of any key means the
+    cache was dropped and the step re-staged (a retrace)."""
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    for c in _device_chunks(6, seed=21):
+        jax.block_until_ready(r.step(c).valid)
+    snap = r.metrics.snapshot()
+    counts = snap["compiles"]["counts"]
+    # both sparse step variants staged (force-first + steady-state), the
+    # capacity-ladder compute buckets, and the metric accumulator
+    assert any(k.startswith("sparse_fused(") for k in counts), counts
+    assert any(k.startswith("compute(") for k in counts), counts
+    assert all(n == 1 for n in counts.values()), counts
+    assert snap["compiles"]["retraces"] == {}, counts
+
+
+def test_prev_snapshots_exist_and_donate_for_halo_free_inputs_only():
+    """1-tick `prev` snapshots are kept exactly for halo-free inputs (the
+    only ones whose change detection reads them — halo-carrying inputs
+    diff tick 0 against the tail instead), and the steady-state step
+    donates them through like the rest of the carried state."""
+    a = TStream.source("a", prec=1)
+    b = TStream.source("b", prec=1)
+    q = a.window(16).mean().join(b, lambda m, x: x - m)
+    exe = qc.compile_query(q.node, out_len=SEG, pallas=False, sparse=True)
+    assert exe.input_specs["a"].left_halo > 0
+    assert exe.input_specs["b"].left_halo == 0
+    r = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+
+    rng = np.random.default_rng(17)
+
+    def chunk(c):
+        g = {}
+        for nm in ("a", "b"):
+            sg = SnapshotGrid(
+                value=jnp.asarray(
+                    np.floor(rng.random(SPAN) * 10).astype(np.float32)),
+                valid=jnp.ones(SPAN, bool), t0=c * SPAN, prec=1)
+            jax.block_until_ready((sg.value, sg.valid))
+            g[nm] = sg
+        return g
+
+    chunks = [chunk(c) for c in range(4)]
+    jax.block_until_ready(r.step(chunks[0]).valid)
+    jax.block_until_ready(r.step(chunks[1]).valid)
+    assert list(r._sparse["prev"]) == ["b"]
+    old_prev = jax.tree_util.tree_leaves(r._sparse["prev"])
+    with jax.transfer_guard("disallow"):   # prev upkeep can't sync either
+        out = r.step(chunks[2])
+        jax.block_until_ready(out.valid)
+    if jax.default_backend() in ("cpu", "tpu", "gpu"):
+        assert all(x.is_deleted() for x in old_prev), (
+            "steady-state step must donate the prev snapshots through")
+    # the carried prev really is b's last tick (next chunk diffs against it)
+    np.testing.assert_array_equal(
+        np.asarray(r._sparse["prev"]["b"][0]).ravel(),
+        np.asarray(chunks[2]["b"].value)[-1:])
+    jax.block_until_ready(r.step(chunks[3]).valid)
 
 
 def test_restore_copies_state_out_of_donation_reach():
