@@ -1,8 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow test-multidev bench bench-sparse \
-	bench-sparse-scale bench-policy bench-metrics clean-bench
+.PHONY: test test-fast test-slow test-multidev lint-plans bench \
+	bench-sparse bench-sparse-scale bench-policy bench-metrics clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -12,6 +12,13 @@ test:
 # excludes the multi-device subprocess tests and heavy arch smoke suites
 test-fast:
 	$(PYTHON) -m pytest -q -m "not slow"
+
+# static hot-path audit + temporal-plan verification over the full
+# 16-point ExecPolicy lattice (repro.analysis); findings land in
+# out/analysis.jsonl and any error-severity finding fails the target —
+# the fast CI job runs this right after the fast test split
+lint-plans:
+	$(PYTHON) -m repro.analysis --fail-on=error
 
 # --durations=20 so test/benchmark rot shows up in the CI log over time
 test-slow:

@@ -122,13 +122,17 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def row(name: str, us_per_call: float, derived: str, metrics=None, **extra):
+def row(name: str, us_per_call: float, derived: str, metrics=None,
+        audit=None, **extra):
     """Print one CSV row and record it (plus parsed/extra derived columns)
     into the open section's JSON.  ``metrics=`` attaches an engine telemetry
     snapshot (``repro.obs.Metrics.snapshot()`` dict, or a ``Metrics``
     instance which is snapshotted here) under the row's ``metrics`` key so
     BENCH_*.json carries the measured compaction/latency/recompile data the
-    derived columns summarize."""
+    derived columns summarize.  ``audit=`` attaches a static-audit result
+    (``repro.analysis``: a verdict string, or a findings list / dict with
+    the serialized findings) under ``audit`` — a measurement over a runner
+    that fails its own hot-path audit shouldn't be trusted silently."""
     print(f"{name},{us_per_call:.3f},{derived}")
     if _SECTION is not None:
         entry = {"name": name, "us_per_call": float(us_per_call),
@@ -138,6 +142,11 @@ def row(name: str, us_per_call: float, derived: str, metrics=None, **extra):
         if metrics is not None:
             entry["metrics"] = (metrics.snapshot()
                                 if hasattr(metrics, "snapshot") else metrics)
+        if audit is not None:
+            if isinstance(audit, (list, tuple)):
+                audit = [f.to_json() if hasattr(f, "to_json") else f
+                         for f in audit]
+            entry["audit"] = audit
         _ROWS.append(entry)
 
 

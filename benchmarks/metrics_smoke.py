@@ -83,18 +83,25 @@ def run(n_events: int = 100_000) -> None:
               "compiles_total")
     prom_ok = all(s in text for s in needed)
 
-    ok = not problems and jsonl_ok and prom_ok
+    # static audit of the very runner that produced the numbers: the
+    # measurement row carries its own hot-path verdict (repro.analysis)
+    from repro.analysis import audit_runner, verdict
+    findings = audit_runner(r)
+    av = verdict(findings)
+
+    ok = not problems and jsonl_ok and prom_ok and av != "error"
     row("metrics_smoke", dt * 1e6,
         f"ok={int(ok)},jsonl_ok={int(jsonl_ok)},prom_ok={int(prom_ok)},"
-        f"problems={len(problems)},chunks={n_chunks}",
-        events=K * T, keys=K, metrics=snap)
+        f"problems={len(problems)},chunks={n_chunks},audit={av}",
+        events=K * T, keys=K, metrics=snap,
+        audit={"verdict": av, "findings": [f.to_json() for f in findings]})
     set_config(schema=obs.SCHEMA, prom_lines=len(text.splitlines()))
     for p in problems:
         print(f"# schema problem: {p}")
     if not ok:
         raise SystemExit("metrics smoke failed: "
                          f"problems={problems}, jsonl_ok={jsonl_ok}, "
-                         f"prom_ok={prom_ok}")
+                         f"prom_ok={prom_ok}, audit={av}")
 
 
 if __name__ == "__main__":

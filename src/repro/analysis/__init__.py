@@ -1,0 +1,32 @@
+"""Static hot-path auditor + temporal-plan verifier (``repro.analysis``).
+
+TiLT's core claim is that a time-centric IR is *analyzable*: temporal
+bounds and lineage are static, which is what makes optimization and
+parallelization passes safe.  This package turns the stack's own hardest
+invariants — zero device→host transfers per steady-state chunk, donated
+state fully consumed, collectives never under divergent control, exactly
+one compile per staging key, halo/dilation contracts covering the IR's
+true demand — from runtime test assertions into **static proofs over
+lowered jaxprs and planning artifacts**, audited across the entire
+16-point ExecPolicy lattice and gated in CI.
+
+Entry points:
+
+* ``python -m repro.analysis`` / ``make lint-plans`` — CLI over the
+  lattice; findings land in ``out/analysis.jsonl``.
+* :func:`audit_runner` — audit one live runner (benchmarks embed the
+  resulting :func:`verdict` next to their measurements).
+* :data:`PASSES` — the registry; a new pass is a function
+  ``AuditTarget -> [Finding]`` added here (see docs/architecture.md
+  "Static analysis").
+"""
+from .audit import (PASSES, audit_lattice, audit_runner,
+                    build_lattice_runner, lattice_policies)
+from .findings import (SCHEMA, SEVERITIES, Finding, export_jsonl,
+                       read_jsonl, validate_finding, verdict)
+from .passes import AuditTarget, make_target
+
+__all__ = ["PASSES", "audit_lattice", "audit_runner",
+           "build_lattice_runner", "lattice_policies",
+           "SCHEMA", "SEVERITIES", "Finding", "export_jsonl", "read_jsonl",
+           "validate_finding", "verdict", "AuditTarget", "make_target"]

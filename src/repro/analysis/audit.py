@@ -1,0 +1,121 @@
+"""Pass manager: audit one runner, or the whole 16-point policy lattice.
+
+``audit_runner`` runs every registered pass over one runner's audit
+surface; ``audit_lattice`` builds a representative runner per
+:class:`repro.engine.ExecPolicy` point — every combination of
+body(dense|sparse) × keys(single|vmapped) × placement(local|mesh) ×
+dag(solo|union), the same 16-point matrix ``tests/test_policy.py``
+verifies bit-exact — and audits each.  The mesh points run on a 1-device
+mesh (the sharding structure, ``shard_map`` eqns and collective placement
+are all present in the traced jaxprs regardless of device count), so the
+full lattice audits on any backend, including single-core CI.
+
+The audit queries mirror the hot-path tests: a windowed-mean trend/join
+query per solo point, plus a second band query for union points, compiled
+``sparse=True`` so every point (dense bodies included) carries a
+ChangePlan for the temporal-plan verifier.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core import compile as qc
+from ..core.frontend import TStream
+from ..engine import ExecPolicy, Runner
+from ..multiquery import union_runner
+from .findings import Finding
+from .passes import (AuditTarget, make_target, pass_collectives,
+                     pass_donation, pass_recompile, pass_transfers)
+from .planverify import pass_plan
+
+__all__ = ["PASSES", "audit_runner", "audit_lattice", "lattice_policies",
+           "build_lattice_runner", "SEG", "SPC", "N_KEYS"]
+
+# every registered pass, in report order
+PASSES: Dict[str, Callable[[AuditTarget], List[Finding]]] = {
+    "transfer": pass_transfers,
+    "donation": pass_donation,
+    "collective": pass_collectives,
+    "recompile": pass_recompile,
+    "plan": pass_plan,
+}
+
+# default audit geometry (small: the lattice audits in seconds on CPU)
+SEG = 16     # output ticks per segment
+SPC = 4      # segments per chunk
+N_KEYS = 4   # keyed points
+
+
+def audit_runner(runner: Runner, policy: Optional[str] = None,
+                 passes: Optional[Dict] = None) -> List[Finding]:
+    """Run every (or the given) passes over one runner."""
+    target = make_target(runner, policy)
+    out: List[Finding] = []
+    for fn in (passes if passes is not None else PASSES).values():
+        out.extend(fn(target))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the policy lattice
+# ---------------------------------------------------------------------------
+
+def _trend(keyed: bool):
+    s = TStream.source("in", prec=1, keyed=keyed)
+    return (s.window(8).mean()
+            .join(s.window(16).mean(), lambda a, b: a - b)
+            .where(lambda d: d > 0))
+
+
+def _bands(keyed: bool):
+    s = TStream.source("in", prec=1, keyed=keyed)
+    return s.window(16).mean().select(lambda m: m * 2.0)
+
+
+def _mesh1():
+    """A 1-device mesh: full sharding structure, runs anywhere."""
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def lattice_policies() -> List[ExecPolicy]:
+    """All 16 points of body × keys × placement × dag."""
+    mesh = _mesh1()
+    pts = []
+    for body in ("dense", "sparse"):
+        for keys in ("single", "vmapped"):
+            for placement in ("local", mesh):
+                for dag in ("solo", "union"):
+                    pts.append(ExecPolicy(body=body, keys=keys,
+                                          placement=placement, dag=dag))
+    return pts
+
+
+def build_lattice_runner(policy: ExecPolicy, *, seg: int = SEG,
+                         spc: int = SPC, n_keys: int = N_KEYS) -> Runner:
+    """A representative runner at one policy point (the audit target the
+    CLI and the lattice tests share).  Queries are compiled sparse so a
+    ChangePlan is always present for the plan verifier; dense bodies
+    simply don't consume it."""
+    keyed = policy.keyed
+    nk = n_keys if keyed else None
+    if policy.union:
+        return union_runner(
+            {"trend": _trend(keyed), "bands": _bands(keyed)}, span=seg,
+            policy=policy, n_keys=nk, segs_per_chunk=spc)
+    exe = qc.compile_query(_trend(keyed).node, out_len=seg, pallas=False,
+                           sparse=True)
+    return Runner(exe, policy, n_keys=nk, segs_per_chunk=spc)
+
+
+def audit_lattice(policies: Optional[List[ExecPolicy]] = None,
+                  passes: Optional[Dict] = None) -> List[Finding]:
+    """Audit every policy point (default: the full 16-point lattice)."""
+    out: List[Finding] = []
+    for policy in (policies if policies is not None else lattice_policies()):
+        r = build_lattice_runner(policy)
+        out.extend(audit_runner(r, passes=passes))
+    return out

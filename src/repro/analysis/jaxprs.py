@@ -1,0 +1,106 @@
+"""Jaxpr walking for the static passes: every eqn, with control context.
+
+``jax.make_jaxpr`` on the runner's chunk path yields a nested program: a
+top-level jaxpr whose eqns include the staged ``pjit`` step, which in turn
+carries the whole traced body, with further nesting under ``shard_map``,
+``cond``/``switch`` branches, ``while``/``scan`` bodies and so on.  The
+passes need to reason about *where* an eqn sits — outside the staged step
+(eager, dispatched per chunk), under divergent control flow (a ``cond``
+branch some shards may not take), inside a ``shard_map`` — so the walker
+yields each eqn with its **path**: the stack of (primitive, param, index)
+frames it is nested under.
+
+No dependency on jax internals: sub-jaxprs are discovered structurally by
+scanning ``eqn.params`` for values (or lists of values) that look like
+jaxprs (have ``.eqns``/``.invars``, possibly behind a ``ClosedJaxpr``'s
+``.jaxpr``), which is stable across the jax versions we target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+__all__ = ["Frame", "Site", "walk", "inner_jaxpr"]
+
+# primitives whose sub-jaxprs execute conditionally — different shards can
+# take different branches / trip counts, which is why a collective inside
+# is a deadlock hazard.  scan is deliberately absent: its trip count is
+# static, every shard runs every iteration.
+DIVERGENT = frozenset({"cond", "while"})
+
+# the staged-dispatch boundary: eqns at or below one of these run inside
+# the compiled executable, eqns outside are eager per-chunk work
+STAGED = frozenset({"pjit", "xla_call", "jit"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    """One nesting level: ``eqn.primitive`` / params key / list index."""
+
+    prim: str
+    param: str
+    index: int
+
+    def label(self) -> str:
+        return f"{self.prim}[{self.param}][{self.index}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One eqn plus the frame stack it is nested under."""
+
+    eqn: object
+    path: Tuple[Frame, ...]
+
+    @property
+    def prim(self) -> str:
+        return self.eqn.primitive.name
+
+    @property
+    def in_staged(self) -> bool:
+        """Inside a jitted (compiled, single-dispatch) region."""
+        return any(f.prim in STAGED for f in self.path)
+
+    def divergent_frames(self) -> Tuple[Frame, ...]:
+        """The divergent-control frames above this eqn (empty = the eqn
+        runs unconditionally on every shard)."""
+        return tuple(f for f in self.path if f.prim in DIVERGENT)
+
+    def provenance(self) -> str:
+        return "/".join([f.label() for f in self.path] + [self.prim])
+
+
+def _as_jaxpr(x):
+    """The raw Jaxpr behind ``x`` (unwrapping ClosedJaxpr), or None."""
+    j = getattr(x, "jaxpr", x)
+    return j if (hasattr(j, "eqns") and hasattr(j, "invars")) else None
+
+
+def inner_jaxpr(eqn):
+    """The (first) sub-jaxpr of an eqn — e.g. a ``pjit`` eqn's traced
+    body — or None."""
+    for _, _, sub in _subjaxprs(eqn):
+        return sub
+    return None
+
+
+def _subjaxprs(eqn):
+    for pname in sorted(eqn.params):
+        val = eqn.params[pname]
+        vals = val if isinstance(val, (list, tuple)) else [val]
+        for i, v in enumerate(vals):
+            if _as_jaxpr(v) is not None:
+                yield pname, i, v
+
+
+def walk(jaxpr, path: Tuple[Frame, ...] = ()) -> Iterator[Site]:
+    """Depth-first over every eqn of ``jaxpr`` (Jaxpr or ClosedJaxpr) and
+    all nested sub-jaxprs, yielding a :class:`Site` per eqn."""
+    j = _as_jaxpr(jaxpr)
+    if j is None:
+        raise TypeError(f"not a jaxpr: {type(jaxpr).__name__}")
+    for eqn in j.eqns:
+        yield Site(eqn=eqn, path=path)
+        for pname, i, sub in _subjaxprs(eqn):
+            yield from walk(
+                sub, path + (Frame(eqn.primitive.name, pname, i),))

@@ -1,0 +1,344 @@
+"""The static hot-path passes: transfer-freedom, donation-consumption,
+collective-placement, recompile-hazard.
+
+Each pass takes an :class:`AuditTarget` — a runner plus its lowerable audit
+surface (the staged steps and whole-chunk functions ``engine/runner.py``
+exposes) — and returns :class:`repro.analysis.findings.Finding` records.
+The passes prove statically, from traced jaxprs, the invariants the
+runtime tests assert dynamically:
+
+* **transfer**   — the static complement of the ``jax.transfer_guard``
+  tests: the whole-chunk jaxpr must consist of the staged ``pjit``
+  dispatch plus metadata-only ops; any other eager eqn (an ``x[0]``
+  strip lowering to slice/squeeze with host scalars, a host callback)
+  is a per-chunk device→host sync waiting to happen.
+* **donation**   — every leaf the staged step declares in
+  ``donate_argnums`` must actually be consumed: read by some eqn of the
+  traced body (or passed through to an output it aliases).  A donated
+  invar no eqn reads is exactly the pre-PR7 dead ``prev`` class.
+* **collective** — ``ppermute``/``psum``/``all_gather``/… nested under
+  ``cond``/``while`` frames: divergent control means shards can disagree
+  on whether the collective executes — deadlock.
+* **recompile**  — the staging-cache key must move whenever the traced
+  step's avals would: sibling runners perturbed one configuration degree
+  of freedom at a time must land on distinct keys.  Runtime-observed
+  retraces from the tracer merge into the same report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from .findings import Finding
+from .jaxprs import STAGED, walk
+
+__all__ = ["AuditTarget", "make_target", "pass_transfers", "pass_donation",
+           "pass_collectives", "pass_recompile", "COLLECTIVES"]
+
+# cross-shard communication primitives (psum covers psum2 spellings)
+COLLECTIVES = frozenset({
+    "ppermute", "pshuffle", "psum", "psum2", "pmin", "pmax", "pmean",
+    "all_gather", "all_to_all", "reduce_scatter", "pgather"})
+
+# eager ops allowed outside the staged step: metadata-only, no buffer
+# traffic (the runner's post-step K-axis strip is a reshape)
+METADATA_OK = frozenset({"reshape", "transpose", "squeeze"})
+
+# host-callback primitives: a device→host round-trip wherever they appear
+CALLBACKS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback", "outside_call"})
+
+
+@dataclasses.dataclass
+class AuditTarget:
+    """One policy-lattice point under audit: the runner, its staged steps
+    (with concrete example args) and lazily traced jaxprs."""
+
+    runner: object
+    policy: str
+    steps: List[Dict]
+    chunk_variants: tuple
+    _step_jaxprs: Dict = dataclasses.field(default_factory=dict)
+    _chunk_jaxprs: Dict = dataclasses.field(default_factory=dict)
+
+    def step_jaxpr(self, step: Dict):
+        """The step traced as a *call* (wrapper lambda), so the staged
+        dispatch shows up as a ``pjit`` eqn carrying ``donated_invars``
+        and the traced body."""
+        label = step["label"]
+        if label not in self._step_jaxprs:
+            fn = step["fn"]
+            self._step_jaxprs[label] = jax.make_jaxpr(
+                lambda *a: fn(*a))(*step["args"])
+        return self._step_jaxprs[label]
+
+    def chunk_jaxpr(self, variant: str):
+        """The whole-chunk function (staged dispatch + eager post-step
+        assembly) traced for one variant."""
+        if variant not in self._chunk_jaxprs:
+            fn, args = self.runner.chunk_fn(variant)
+            self._chunk_jaxprs[variant] = jax.make_jaxpr(fn)(*args)
+        return self._chunk_jaxprs[variant]
+
+
+def make_target(runner, policy: Optional[str] = None) -> AuditTarget:
+    """Build the audit surface of one runner (any policy point)."""
+    variants = (("steady", "first") if runner.policy.sparse else ("dense",))
+    return AuditTarget(
+        runner=runner,
+        policy=policy if policy is not None else runner.policy.describe(),
+        steps=runner.staged_steps(), chunk_variants=variants)
+
+
+def _leaf_paths(args) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(args)
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+# ---------------------------------------------------------------------------
+# transfer-freedom
+# ---------------------------------------------------------------------------
+
+def pass_transfers(target: AuditTarget) -> List[Finding]:
+    """Flag anything on the chunk path that forces (or risks) a
+    device→host sync in steady state — see module docstring."""
+    out = []
+    if not target.runner.spec.jit:
+        out.append(Finding(
+            "info", "transfer", "unjitted-body",
+            "body compiled with jit=False: nothing is staged, the chunk "
+            "path is eager by construction — transfer audit skipped",
+            policy=target.policy))
+        return out
+    for variant in target.chunk_variants:
+        jpr = target.chunk_jaxpr(variant)
+        staged = 0
+        for site in walk(jpr):
+            prim = site.prim
+            if prim in CALLBACKS:
+                out.append(Finding(
+                    "error", "transfer", "host-callback",
+                    f"chunk variant {variant!r} binds host callback "
+                    f"{prim!r}: a device→host round-trip on every chunk",
+                    policy=target.policy, target=variant,
+                    provenance=site.provenance()))
+            if site.path:
+                continue  # nested (inside the staged step): compiled code
+            if prim in STAGED:
+                staged += 1
+                continue
+            if prim in METADATA_OK:
+                continue
+            hint = ""
+            if prim in ("dynamic_slice", "gather", "dynamic_update_slice",
+                        "scatter", "squeeze", "slice"):
+                hint = (" — the PR6 bug class: eager indexing binds "
+                        "start-index scalars host→device on every chunk"
+                        " (use a metadata-only reshape)")
+            out.append(Finding(
+                "error", "transfer", "eager-op-outside-staged-step",
+                f"chunk variant {variant!r} binds eager op {prim!r} "
+                f"outside the staged step{hint}",
+                policy=target.policy, target=variant,
+                provenance=site.provenance()))
+        if staged != 1:
+            out.append(Finding(
+                "warning", "transfer", "staged-dispatch-count",
+                f"chunk variant {variant!r} dispatches {staged} staged "
+                "steps (expected exactly 1 per chunk)",
+                policy=target.policy, target=variant))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation-consumption
+# ---------------------------------------------------------------------------
+
+def pass_donation(target: AuditTarget) -> List[Finding]:
+    """Per donated leaf of every staged step: is it consumed?  Dead
+    donated leaves (never read, never returned) are the pre-PR7 ``prev``
+    class — donation silently buys nothing and the state pytree carries
+    garbage.  Leaves with no shape/dtype-matching output cannot alias in
+    place (XLA falls back to a copy) — reported as warnings."""
+    out = []
+    if not target.runner.spec.jit:
+        return out
+    for step in target.steps:
+        if not step["donate"]:
+            continue
+        jpr = target.step_jaxpr(step)
+        paths = _leaf_paths(step["args"])
+        outer_pos = {v: i for i, v in enumerate(jpr.jaxpr.invars)}
+        for site in walk(jpr):
+            if site.path or site.prim not in STAGED:
+                continue
+            donated = site.eqn.params.get("donated_invars")
+            inner = site.eqn.params.get("jaxpr")
+            if donated is None or inner is None or not any(donated):
+                continue
+            ij = inner.jaxpr
+            used = set()
+            for eqn in ij.eqns:
+                for v in eqn.invars:
+                    if not hasattr(v, "val"):  # skip Literals
+                        used.add(v)
+            outset = {v for v in ij.outvars if not hasattr(v, "val")}
+            out_avals: Dict[tuple, int] = {}
+            for v in ij.outvars:
+                a = getattr(v, "aval", None)
+                if a is not None and hasattr(a, "shape"):
+                    k = (tuple(a.shape), str(a.dtype))
+                    out_avals[k] = out_avals.get(k, 0) + 1
+            for i, flag in enumerate(donated):
+                if not flag or i >= len(ij.invars):
+                    continue
+                var = ij.invars[i]
+                pos = outer_pos.get(site.eqn.invars[i]
+                                    if i < len(site.eqn.invars) else None)
+                label = (paths[pos] if pos is not None and pos < len(paths)
+                         else f"leaf[{i}]")
+                if var not in used and var not in outset:
+                    out.append(Finding(
+                        "error", "donation", "donated-leaf-dead",
+                        f"step {step['label']!r} donates leaf {label} but "
+                        "no eqn of the traced body reads it and it is not "
+                        "an output — dead state riding the donated pytree "
+                        "(the pre-PR7 prev-snapshot class)",
+                        policy=target.policy, target=step["label"],
+                        provenance=label))
+                    continue
+                a = getattr(var, "aval", None)
+                k = ((tuple(a.shape), str(a.dtype))
+                     if a is not None and hasattr(a, "shape") else None)
+                if k is not None and out_avals.get(k, 0) > 0:
+                    out_avals[k] -= 1
+                else:
+                    out.append(Finding(
+                        "warning", "donation", "donated-leaf-unaliased",
+                        f"step {step['label']!r} donates leaf {label} "
+                        f"(aval {k}) but no same-shaped output remains to "
+                        "alias it into — XLA will copy instead of reusing "
+                        "the buffer",
+                        policy=target.policy, target=step["label"],
+                        provenance=label))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective-placement
+# ---------------------------------------------------------------------------
+
+def pass_collectives(target: AuditTarget) -> List[Finding]:
+    """Collectives under divergent control (``cond``/``while`` frames):
+    shards that disagree on the branch/trip count deadlock in the
+    collective.  ``scan`` is fine (static trip count, every shard runs
+    every iteration)."""
+    out = []
+    for step in target.steps:
+        jpr = target.step_jaxpr(step)
+        for site in walk(jpr):
+            if site.prim not in COLLECTIVES:
+                continue
+            frames = site.divergent_frames()
+            if frames:
+                out.append(Finding(
+                    "error", "collective", "collective-under-divergence",
+                    f"step {step['label']!r} runs collective "
+                    f"{site.prim!r} under divergent control "
+                    f"({'/'.join(f.label() for f in frames)}) — shards "
+                    "taking different branches deadlock",
+                    policy=target.policy, target=step["label"],
+                    provenance=site.provenance()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def _probe_signature(runner) -> tuple:
+    """The abstract signature the staged steps would trace against, from
+    concrete audit args only — no tracing, so probing never touches the
+    shared step cache or compile counters."""
+    chunk_in = runner._ingest(runner.audit_example_chunks())
+    tails, sparse, seeds = runner._audit_state(chunk_in)
+    args = ((tails, sparse["dirty"], sparse["prev"], seeds, chunk_in)
+            if runner.policy.sparse else (tails, chunk_in))
+    flat, _ = jax.tree_util.tree_flatten_with_path(args)
+    sig = tuple(
+        (jax.tree_util.keystr(kp), tuple(x.shape), str(x.dtype),
+         bool(getattr(x, "weak_type", False)))
+        for kp, x in flat)
+    return sig + (("__static", runner.policy.n_shards, runner.policy.axis,
+                   runner.spec.jit),)
+
+
+def _sibling(runner, *, n_keys=None, segs=None):
+    """A probe runner differing in exactly one configuration DOF (shares
+    the BodySpec — and hence the step cache — but never stages anything)."""
+    return type(runner)(
+        runner.spec, runner.policy,
+        n_keys=(n_keys if n_keys is not None
+                else (runner.n_keys if runner.policy.keyed else None)),
+        segs_per_chunk=segs if segs is not None else runner.n_segs)
+
+
+def pass_recompile(target: AuditTarget) -> List[Finding]:
+    """Three recompile-hazard detectors in one report: runtime retraces
+    the tracer already recorded, weak-type / host-scalar drift in the
+    staged steps' argument trees, and the static DOF probe on the
+    staging-cache key (see module docstring)."""
+    out = []
+    r = target.runner
+    for d in r.metrics.tracer.retrace_findings():
+        out.append(Finding(
+            d["severity"], "recompile", d["code"], d["message"],
+            policy=target.policy, provenance=str(d["provenance"])))
+    # argument-tree lint: a weak-typed or host-scalar leaf retraces the
+    # step the first time a differently-typed value arrives
+    for step in target.steps:
+        flat, _ = jax.tree_util.tree_flatten_with_path(step["args"])
+        for kp, leaf in flat:
+            label = jax.tree_util.keystr(kp)
+            if not hasattr(leaf, "shape"):
+                out.append(Finding(
+                    "error", "recompile", "host-scalar-step-arg",
+                    f"step {step['label']!r} arg leaf {label} is a host "
+                    f"{type(leaf).__name__}: re-bound as a fresh constant "
+                    "every chunk (a transfer) and a retrace when it drifts",
+                    policy=target.policy, target=step["label"],
+                    provenance=label))
+            elif getattr(leaf, "weak_type", False):
+                out.append(Finding(
+                    "warning", "recompile", "weak-type-step-arg",
+                    f"step {step['label']!r} arg leaf {label} is weakly "
+                    "typed: a strongly-typed value at the same shape "
+                    "retraces the step under the same staging key",
+                    policy=target.policy, target=step["label"],
+                    provenance=label))
+    # static DOF probe: perturb one degree of freedom per sibling; the
+    # traced signature moves, so the staging key must move too
+    sig0 = _probe_signature(r)
+    key0 = r._cache_key("probe")
+    probes = [("segs_per_chunk", dict(segs=r.n_segs * 2))]
+    if r.policy.keyed:
+        probes.append(("n_keys", dict(n_keys=r.n_keys * 2)))
+    for dof, kw in probes:
+        try:
+            sib = _sibling(r, **kw)
+        except (ValueError, NotImplementedError):
+            continue  # geometry constraint forbids this perturbation
+        if (_probe_signature(sib) != sig0
+                and sib._cache_key("probe") == key0):
+            out.append(Finding(
+                "error", "recompile", "staging-key-under-captures",
+                f"perturbing {dof} changes the staged steps' traced "
+                "signature but not the staging-cache key — two "
+                "geometries share one cache slot, so the second "
+                "silently retraces (or reuses the wrong executable)",
+                policy=target.policy, target=dof,
+                provenance=f"key={key0!r}"))
+    return out

@@ -182,6 +182,16 @@ class InputSpec:
     def grid_plan(self) -> GridPlan:
         return GridPlan(t0=self.t0, length=self.length, prec=self.prec)
 
+    def contract_t(self) -> tuple:
+        """The ``(lookback, lookahead)`` *time-unit* demand this contract
+        serves: the halo tick counts un-rounded back to time.  The
+        temporal-plan verifier (:mod:`repro.analysis`) re-derives a
+        query's demand independently from the IR and compares it against
+        this — an independently smaller demand means the halo is merely
+        conservative (rounding), a larger one means the contract is
+        undersized and the partitioned executors read garbage."""
+        return self.left_halo * self.prec, self.right_halo * self.prec
+
     def halo_schedule(self) -> "halo.HaloSchedule":
         """The static multi-hop exchange schedule serving this contract
         when the timeline is sharded (one shard per ``core`` ticks): hop
@@ -255,6 +265,27 @@ class ChangePlan:
     out_len: int                      # segment length in output ticks
     out_prec: int
     specs: Dict[str, ChangeSpec]      # per input NAME
+
+    def check_covers(self, required: Dict[str, tuple]) -> list:
+        """Verifier hook: does every per-input dilation cover a required
+        ``{name: (lookback_t, lookahead_t)}`` demand (time units)?
+        Returns one ``(name, field, have, need)`` tuple per shortfall —
+        empty means every change an input sees really reaches every
+        output it can affect.  Used by the temporal-plan verifier
+        (:mod:`repro.analysis`) with *independently re-derived* demands,
+        so a bug in the :func:`plan_change` derivation (or a hand-built
+        under-dilated plan) can't vouch for itself."""
+        bad = []
+        for name, (lb, la) in required.items():
+            sp = self.specs.get(name)
+            if sp is None:
+                bad.append((name, "missing", None, (lb, la)))
+                continue
+            if sp.lookback < lb:
+                bad.append((name, "lookback", sp.lookback, lb))
+            if sp.lookahead < la:
+                bad.append((name, "lookahead", sp.lookahead, la))
+        return bad
 
 
 def plan_change(qp: "QueryPlan") -> ChangePlan:

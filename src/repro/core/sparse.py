@@ -77,7 +77,8 @@ from .plan import seg_range_affine
 from .stream import SnapshotGrid
 
 __all__ = ["source_dirty", "bucket_capacity", "capacity_ladder",
-           "segment_mask", "sparse_run", "seg_ranges", "range_any"]
+           "segment_mask", "sparse_run", "seg_ranges", "range_any",
+           "affine_covers"]
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +168,21 @@ def seg_ranges(lookback_t: int, lookahead_t: int, prec: int, grid_t0: int,
     i_lo = -(-(lo_t - grid_t0) // prec) - 1          # ceil_index
     i_hi1 = (hi_t - grid_t0) // prec                 # floor_index + 1
     return i_lo, i_hi1
+
+
+def affine_covers(affine: tuple, i_lo, i_hi1) -> np.ndarray:
+    """Verifier hook: does the affine lowering ``(a0, step, width)`` (the
+    form the fused change-detection kernel consumes — see
+    :func:`repro.core.plan.seg_range_affine`) cover the required per-
+    segment ranges ``[i_lo, i_hi1)``?  Returns a bool per segment; any
+    ``False`` means some input tick whose change can dirty that segment is
+    *outside* the window the kernel scans — silently stale outputs.  The
+    temporal-plan verifier (:mod:`repro.analysis`) calls this with ranges
+    recomputed from independently re-derived bounds."""
+    a0, step, width = affine
+    k = np.arange(len(np.atleast_1d(i_lo)), dtype=np.int64)
+    lo = a0 + k * step
+    return (lo <= np.asarray(i_lo)) & (lo + width >= np.asarray(i_hi1))
 
 
 @jax.jit

@@ -101,6 +101,11 @@ class BodySpec:
     jit: bool = True
     solo: bool = True
     step_cache: dict = dataclasses.field(default_factory=dict)
+    # IR roots backing outs_fn, for static verification (repro.analysis):
+    # solo bodies carry (root,); union bodies one root per query.  Empty
+    # means the body is opaque (hand-built outs_fn) and the temporal-plan
+    # verifier can only check internal plan consistency, not re-derive it.
+    roots: tuple = ()
 
     @property
     def span(self) -> int:
@@ -121,7 +126,8 @@ def body_spec_of(exe) -> BodySpec:
         out_precs={"__out": exe.out_prec},
         change_plan=getattr(exe, "change_plan", None), root=exe.root,
         jit=True, solo=True,
-        step_cache=exe.__dict__.setdefault("_runner_step_cache", {}))
+        step_cache=exe.__dict__.setdefault("_runner_step_cache", {}),
+        roots=(exe.root,) if exe.root is not None else ())
 
 
 def _bc(mask, x):
@@ -280,6 +286,28 @@ class Runner:
             "per-chunk dirty work-unit fraction", "fraction")
         self._m_frac.fold_device()
         m.register_collector("runner", self._obs_collect)
+        m.register_warmup_reset("runner", self._obs_warmup_reset)
+
+    def _obs_warmup_reset(self) -> None:
+        """Registry warmup-reset hook (:meth:`repro.obs.Metrics.
+        reset_after_warmup`): re-base this runner's device accumulator and
+        compaction window so long-lived services scope percentiles past
+        the compiling first chunks.  The stream state itself (tails,
+        clock, sparse change state) is untouched — only measurements
+        reset.  The fresh mstate is created eagerly here (off the hot
+        path) so the next chunk's accumulator dispatch stays
+        transfer-free, and static gauges are re-asserted."""
+        if self.policy.sparse:
+            self._mstate = (jnp.zeros((), jnp.int32),
+                            jnp.zeros((len(self._obs_caps),), jnp.int32),
+                            jnp.zeros((len(self._obs_frac_edges) + 1,),
+                                      jnp.int32))
+        else:
+            self._mstate = None
+        self._dirty_units = None
+        self._total_units = 0
+        self._chunks_run = 0
+        self._m_keys.set(self.n_keys)
 
     def _obs_collect(self) -> None:
         """Pre-snapshot hook: derived gauges (syncs — off the hot path)."""
@@ -335,9 +363,7 @@ class Runner:
                     frac.at[fi].add(1))
 
         self.metrics.tracer.record_compile(self._compile_label(key))
-        cache[key] = (jax.jit(accum, donate_argnums=(0,)) if self.spec.jit
-                      else accum)
-        return cache[key]
+        return self._stage(key, accum, donate=(0,))
 
     def _obs_sparse_chunk(self, seg_dirty) -> None:
         """Per-sparse-chunk device metric update: one jitted accumulator
@@ -374,9 +400,33 @@ class Runner:
         sh = NamedSharding(self.policy.mesh, P(self.policy.axis))
         return _tm(lambda x: jax.device_put(x, sh), tree)
 
+    # every configuration degree of freedom the staged steps close over;
+    # _cache_key is built from exactly these (in this order) so the staging
+    # cache can never be keyed on less than the traces depend on.  The
+    # recompile-hazard pass (repro.analysis) probes this contract: perturb
+    # one DOF on a sibling runner, check the key really moves.
+    _KEY_DOFS = ("K", "n_segs", "mesh", "axis", "jit")
+
+    def staging_key_dofs(self) -> Dict:
+        """The staging-cache key's degrees of freedom, by name."""
+        return {"K": self._K, "n_segs": self.n_segs,
+                "mesh": self.policy.mesh, "axis": self.policy.axis,
+                "jit": self.spec.jit}
+
     def _cache_key(self, kind, *extra):
-        return (kind, self._K, self.n_segs, self.policy.mesh,
-                self.policy.axis, self.spec.jit) + extra
+        dofs = self.staging_key_dofs()
+        return (kind,) + tuple(dofs[k] for k in self._KEY_DOFS) + extra
+
+    def _stage(self, key, fn, donate=()):
+        """Jit + cache one staged step; the raw traced fn and its donation
+        contract stay inspectable at ``("raw",) + key`` for the static
+        auditor (repro.analysis), which re-traces them under
+        ``jax.make_jaxpr`` instead of guessing from the compiled form."""
+        cache = self.spec.step_cache
+        cache[("raw",) + key] = (fn, tuple(donate))
+        cache[key] = (jax.jit(fn, donate_argnums=tuple(donate))
+                      if self.spec.jit else fn)
+        return cache[key]
 
     def _compile_label(self, key) -> str:
         """Human-readable compile-counter key for a step_cache key (the
@@ -503,9 +553,7 @@ class Runner:
         # the carried tails are runner-owned (step outputs, or zeros /
         # restore-copies) — donate them so steady-state chunks update the
         # halo buffers in place instead of reallocating
-        cache[key] = (jax.jit(step, donate_argnums=(0,)) if self.spec.jit
-                      else step)
-        return cache[key]
+        return self._stage(key, step, donate=(0,))
 
     # -- sparse body (one fused jitted step per chunk) -----------------------
     #
@@ -745,12 +793,8 @@ class Runner:
             outs, new_seeds = hold(full, seg_dirty, seeds)
             return outs, new_tails, new_dirty, new_prev, new_seeds, seg_dirty
 
-        if self.spec.jit:
-            donate = () if force_first else (0, 1, 2, 3)
-            cache[key] = jax.jit(step, donate_argnums=donate)
-        else:
-            cache[key] = step
-        return cache[key]
+        return self._stage(key, step,
+                           donate=() if force_first else (0, 1, 2, 3))
 
     def _zero_seeds(self, chunk_in):
         """φ hold seeds shaped like one output tick per key (unread: any
@@ -805,6 +849,138 @@ class Runner:
 
         return outs, commit
 
+    def _postprocess(self, outs):
+        """The eager per-chunk result assembly between the staged step and
+        the returned grids: drop the internal K axis for single-key
+        runners.  reshape, not x[0]: eager indexing binds a dynamic_slice
+        whose start-index scalars are host→device transfers on every
+        chunk — reshape is metadata-only.  This is the only eager array
+        code on the chunk path, and the transfer-freedom pass
+        (repro.analysis) lints exactly that: any non-metadata eqn outside
+        the staged step in the whole-chunk jaxpr is a finding."""
+        if self.policy.keyed:
+            return outs
+        return {o: (_tm(lambda x: x.reshape(x.shape[1:]), v),
+                    m.reshape(m.shape[1:]))
+                for o, (v, m) in outs.items()}
+
+    # -- static audit surface (repro.analysis) -------------------------------
+    def audit_example_chunks(self) -> Dict[str, SnapshotGrid]:
+        """Zero-filled example chunks in the external :meth:`step` layout,
+        sized to this runner's geometry — concrete arguments for tracing
+        the chunk path without data."""
+        chunks = {}
+        for name in self._names():
+            s = self.spec.input_specs[name]
+            shape = ((self.n_keys, s.core * self.n_segs) if self.policy.keyed
+                     else (s.core * self.n_segs,))
+            chunks[name] = SnapshotGrid(
+                value=jnp.zeros(shape, jnp.float32),
+                valid=jnp.zeros(shape, bool), t0=0, prec=s.prec)
+        return chunks
+
+    def _audit_state(self, chunk_in):
+        """Fresh-stream carried state (tails / dirty / prev / seeds) for
+        audit tracing, built without touching the live stream state."""
+        saved = self._tails, self._sparse
+        self._tails = {}
+        if self.policy.sparse:
+            self._sparse = {"dirty": {}, "prev": {}, "seed": {},
+                            "started": False}
+        try:
+            self._init_missing_tails(chunk_in)
+            tails, sparse = self._tails, self._sparse
+        finally:
+            self._tails, self._sparse = saved
+        seeds = self._zero_seeds(chunk_in) if self.policy.sparse else None
+        return tails, sparse, seeds
+
+    def staged_steps(self, chunks: Optional[Dict] = None):
+        """The staged (jitted) steps one chunk dispatches, with concrete
+        example arguments — the lowerable audit surface
+        ``repro.analysis`` traces under ``jax.make_jaxpr``.
+
+        Returns a list of dicts ``{label, key, fn, raw, donate, args}``:
+        ``fn`` is the cached jitted step, ``raw`` the untraced function it
+        was staged from, ``donate`` its ``donate_argnums`` contract and
+        ``args`` a concrete argument tuple matching the real chunk-path
+        call.  Building these populates the shared step cache exactly like
+        a real first chunk would (cache hits thereafter — no extra
+        compiles are recorded)."""
+        chunks = chunks if chunks is not None else self.audit_example_chunks()
+        chunk_in = self._ingest(chunks)
+        tails, sparse, seeds = self._audit_state(chunk_in)
+        cache = self.spec.step_cache
+
+        def entry(label, key, fn, args):
+            raw, donate = cache.get(("raw",) + key, (None, ()))
+            return {"label": label, "key": key, "fn": fn, "raw": raw,
+                    "donate": donate, "args": args}
+
+        steps = []
+        if self.policy.sparse:
+            for force_first in (True, False):
+                fn = self._fused_sparse_step(force_first)
+                key = self._cache_key("sparse_fused", force_first)
+                label = ("sparse_fused(first)" if force_first
+                         else "sparse_fused(steady)")
+                steps.append(entry(label, key, fn,
+                                   (tails, sparse["dirty"], sparse["prev"],
+                                    seeds, chunk_in)))
+            if self.metrics.on:
+                fn = self._obs_accum()
+                key = self._cache_key("obs_accum")
+                mstate = (jnp.zeros((), jnp.int32),
+                          jnp.zeros((len(self._obs_caps),), jnp.int32),
+                          jnp.zeros((len(self._obs_frac_edges) + 1,),
+                                    jnp.int32))
+                steps.append(entry(
+                    "obs_accum", key, fn,
+                    (mstate, jnp.zeros((self._K, self.n_segs), bool))))
+        else:
+            fn = self._dense_step()
+            key = self._cache_key("dense")
+            steps.append(entry("dense", key, fn, (tails, chunk_in)))
+        return steps
+
+    def chunk_fn(self, variant: str = "steady", chunks: Optional[Dict] = None):
+        """A pure whole-chunk function plus concrete example args: the
+        staged step dispatch *and* the eager post-step result assembly,
+        exactly as :meth:`step` composes them.  Tracing this under
+        ``jax.make_jaxpr`` shows every op a chunk binds outside the staged
+        step — the transfer-freedom pass's audit surface.
+
+        ``variant``: ``"steady"`` / ``"first"`` (sparse bodies) or
+        ``"dense"``.
+        """
+        chunks = chunks if chunks is not None else self.audit_example_chunks()
+        chunk_in = self._ingest(chunks)
+        tails, sparse, seeds = self._audit_state(chunk_in)
+        if self.policy.sparse:
+            if variant not in ("steady", "first"):
+                raise ValueError(
+                    f"sparse body has chunk variants 'steady'/'first', "
+                    f"not {variant!r}")
+            staged = self._fused_sparse_step(variant == "first")
+
+            def fn(tails, dirty, prev, seeds, chunk_in):
+                outs, *new_state = staged(tails, dirty, prev, seeds, chunk_in)
+                return self._postprocess(outs), tuple(new_state)
+
+            args = (tails, sparse["dirty"], sparse["prev"], seeds, chunk_in)
+        else:
+            if variant not in ("steady", "dense"):
+                raise ValueError(
+                    f"dense body has chunk variant 'dense', not {variant!r}")
+            staged = self._dense_step()
+
+            def fn(tails, chunk_in):
+                outs, new_tails = staged(tails, chunk_in)
+                return self._postprocess(outs), new_tails
+
+            args = (tails, chunk_in)
+        return fn, args
+
     # -- public API ----------------------------------------------------------
     def step(self, chunks: Dict[str, SnapshotGrid]):
         """Advance the stream by one chunk (``segs_per_chunk`` segments).
@@ -829,13 +1005,7 @@ class Runner:
                 self._tails = new_tails
 
         result = {}
-        for o, (v, m) in outs.items():
-            if not self.policy.keyed:
-                # reshape, not x[0]: eager indexing binds a dynamic_slice
-                # whose start-index scalars are host→device transfers on
-                # every chunk — reshape is metadata-only
-                v = _tm(lambda x: x.reshape(x.shape[1:]), v)
-                m = m.reshape(m.shape[1:])
+        for o, (v, m) in self._postprocess(outs).items():
             result[o] = SnapshotGrid(value=v, valid=m, t0=self._t,
                                      prec=self.spec.out_precs[o])
         commit()

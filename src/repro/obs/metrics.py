@@ -335,6 +335,7 @@ class Metrics:
         self.enabled = enabled
         self._metrics: Dict[str, object] = {}
         self._collectors: Dict[str, Callable[[], None]] = {}
+        self._warmup_hooks: Dict[str, Callable[[], None]] = {}
         from .trace import Tracer
         self.tracer = Tracer()
 
@@ -386,6 +387,30 @@ class Metrics:
         for m in self._metrics.values():
             m.reset()
         self.tracer.reset()
+
+    def register_warmup_reset(self, name: str,
+                              fn: Callable[[], None]) -> None:
+        """Register a :meth:`reset_after_warmup` hook (e.g. a runner
+        re-basing its device accumulator).  Re-registering a name replaces
+        the old hook, mirroring :meth:`register_collector`."""
+        self._warmup_hooks[name] = fn
+
+    def reset_after_warmup(self) -> None:
+        """Re-base the registry at the end of warmup so long-lived
+        services window percentiles past the compiling first chunks:
+        every metric's measured values reset (the latency histogram in
+        particular), then registered warmup hooks run so device-
+        accumulator owners (``Runner._mstate``) drop their state and
+        re-assert static gauges.
+
+        The tracer is deliberately **not** reset: its per-key compile
+        counts are exactly the warmup record the recompile detector needs
+        — a post-warmup compile of an already-seen staging key must still
+        show up as a retrace."""
+        for m in self._metrics.values():
+            m.reset()
+        for fn in list(self._warmup_hooks.values()):
+            fn()
 
     def snapshot(self) -> Dict:
         """Resolve every metric to host values: the single explicit

@@ -80,6 +80,18 @@ class Tracer:
         compile means the cache was dropped and the step re-staged."""
         return {k: n - 1 for k, n in self._compiles.items() if n > 1}
 
+    def retrace_findings(self) -> List[Dict]:
+        """The runtime retrace record in static-finding form: one entry
+        per key compiled more than once, shaped like a
+        ``repro.analysis`` finding payload (the recompile-hazard pass
+        merges these with its static probe, so a runtime-observed retrace
+        and a statically-proven under-keyed cache land in one report)."""
+        return [{"severity": "error", "code": "runtime-retrace",
+                 "message": (f"staging key {k!r} compiled {n + 1} times — "
+                             "the step cache was dropped or under-keyed"),
+                 "provenance": k}
+                for k, n in sorted(self.retraces().items())]
+
     def span_report(self) -> Dict[str, Dict]:
         return {k: dict(v) for k, v in sorted(self._spans.items())}
 

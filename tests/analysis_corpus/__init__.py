@@ -1,0 +1,22 @@
+"""Regression corpus for the static auditor (``repro.analysis``).
+
+Each module seeds exactly one known-bad pattern — the bug classes earlier
+PRs found by hand, plus the hazards the hot path is designed around — and
+exposes ``target()`` returning an :class:`repro.analysis.AuditTarget`
+ready for the pass under test:
+
+* ``eager_strip``     — the PR6 class: post-step K-axis strip via ``x[0]``
+  (eager slice) instead of a metadata-only reshape → transfer pass.
+* ``dead_donation``   — the pre-PR7 class: 1-tick ``prev`` snapshots
+  carried (and donated) for halo-carrying inputs that never read them
+  → donation pass.
+* ``cond_collective`` — ``ppermute`` under a ``lax.cond`` branch inside
+  ``shard_map`` → collective pass.
+* ``under_keyed``     — a staging-cache key that drops the ``n_segs``
+  degree of freedom → recompile pass (DOF probe).
+* ``under_dilated``   — a ChangePlan with halved lookback dilation
+  → temporal-plan verifier.
+
+``tests/test_analysis.py`` asserts each pass fires on its fixture and
+stays silent on the shipped runner at the same policy point.
+"""

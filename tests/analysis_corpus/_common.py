@@ -1,0 +1,18 @@
+"""Shared geometry + query for the corpus fixtures (small: audits fast)."""
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+
+SEG = 16
+SPC = 4
+
+
+def trend_query(keyed: bool = False):
+    s = TStream.source("in", prec=1, keyed=keyed)
+    return (s.window(8).mean()
+            .join(s.window(16).mean(), lambda a, b: a - b)
+            .where(lambda d: d > 0))
+
+
+def trend_exe(keyed: bool = False):
+    return qc.compile_query(trend_query(keyed).node, out_len=SEG,
+                            pallas=False, sparse=True)

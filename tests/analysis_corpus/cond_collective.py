@@ -1,0 +1,33 @@
+"""Known-bad: a collective under divergent control.
+
+A ``ppermute`` inside a ``lax.cond`` branch inside ``shard_map``: shards
+whose predicates disagree take different branches, and the ones entering
+the collective wait forever on the ones that didn't.  The collective pass
+must flag it as ``collective-under-divergence`` (on any device count —
+the divergence is structural, visible in the traced jaxpr)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis import AuditTarget
+
+
+def _body(flag, x):
+    return lax.cond(flag,
+                    lambda v: lax.ppermute(v, "data", [(0, 0)]),
+                    lambda v: v, x)
+
+
+def target():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    step = jax.jit(shard_map(_body, mesh=mesh, in_specs=(P(), P("data")),
+                             out_specs=P("data")))
+    args = (jnp.array(True), jnp.ones((1, 8), jnp.float32))
+    return AuditTarget(
+        runner=None, policy="corpus:cond_collective",
+        steps=[{"label": "exchange", "key": ("exchange",), "fn": step,
+                "raw": _body, "donate": (), "args": args}],
+        chunk_variants=())

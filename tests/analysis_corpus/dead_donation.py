@@ -1,0 +1,41 @@
+"""Known-bad: 1-tick ``prev`` snapshots carried for halo-carrying inputs.
+
+The pre-PR7 class — the fused step only ever reads ``prev[name]`` for
+halo-free inputs (halo-carrying inputs get tick 0's change flag from the
+dirty tail), so snapshots created for every input ride the donated state
+pytree without a single read or a pass-through output.  The donation pass
+must flag each such leaf as ``donated-leaf-dead``.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import make_target
+from repro.engine import ExecPolicy, Runner
+
+from ._common import SPC, trend_exe
+
+_tm = jax.tree_util.tree_map
+
+
+class DeadPrevRunner(Runner):
+    """Shipped runner, except state init snapshots *every* input (the
+    pre-PR7 behaviour), not just the halo-free ones that are read."""
+
+    def _init_missing_tails(self, chunk_in):
+        super()._init_missing_tails(chunk_in)
+        if self._sparse is None:
+            return
+        K = self._K
+        for name in self._names():
+            if name in self._sparse["prev"]:
+                continue
+            cv, cm = chunk_in[name]
+            self._sparse["prev"][name] = (
+                _tm(lambda x: jnp.zeros((K, 1) + x.shape[2:], x.dtype), cv),
+                jnp.zeros((K, 1), bool))
+
+
+def target():
+    r = DeadPrevRunner(trend_exe(), ExecPolicy(body="sparse"),
+                       segs_per_chunk=SPC)
+    return make_target(r, policy="corpus:dead_donation")

@@ -1,0 +1,32 @@
+"""Known-bad: post-step K-axis strip via ``x[0]`` instead of reshape.
+
+The PR6 bug class — eager indexing on the chunk path binds slice eqns
+(with host-bound start scalars at runtime) outside the staged step, a
+device→host sync per chunk.  The transfer pass must flag every such eqn
+in the whole-chunk jaxpr as ``eager-op-outside-staged-step``.
+"""
+import jax
+
+from repro.analysis import make_target
+from repro.engine import ExecPolicy, Runner
+
+from ._common import SPC, trend_exe
+
+_tm = jax.tree_util.tree_map
+
+
+class EagerStripRunner(Runner):
+    """Shipped runner, except the single-key strip indexes instead of
+    reshaping (exactly the pre-PR6 code)."""
+
+    def _postprocess(self, outs):
+        if self.policy.keyed:
+            return outs
+        return {o: (_tm(lambda x: x[0], v), m[0])
+                for o, (v, m) in outs.items()}
+
+
+def target():
+    r = EagerStripRunner(trend_exe(), ExecPolicy(body="sparse"),
+                         segs_per_chunk=SPC)
+    return make_target(r, policy="corpus:eager_strip")

@@ -1,0 +1,29 @@
+"""Known-bad: a ChangePlan whose lookback dilation is half what the IR
+demands.
+
+An input change inside the uncovered half of the lineage window never
+marks the affected segment dirty — the sparse executor skips it and
+serves a stale output marked clean.  The temporal-plan verifier, working
+from its *independently re-derived* demand, must flag
+``changeplan-under-dilated`` (and the affine lowering check
+``dilation-misses-segments`` at the runner's geometry)."""
+import dataclasses
+
+from repro.analysis import AuditTarget
+from repro.engine import ExecPolicy, Runner
+from repro.engine.runner import body_spec_of
+
+from ._common import SPC, trend_exe
+
+
+def target():
+    spec = body_spec_of(trend_exe())
+    cp = spec.change_plan
+    halved = dataclasses.replace(cp, specs={
+        name: dataclasses.replace(sp, lookback=sp.lookback // 2)
+        for name, sp in cp.specs.items()})
+    bad = dataclasses.replace(spec, change_plan=halved, step_cache={})
+    r = Runner(bad, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    # the plan verifier never traces steps — no need to stage any
+    return AuditTarget(runner=r, policy="corpus:under_dilated",
+                       steps=[], chunk_variants=())

@@ -1,0 +1,26 @@
+"""Known-bad: a staging-cache key missing a configuration DOF.
+
+The key drops ``n_segs``: two runners over the same compiled query with
+different chunk geometries land on the same cache slot, so the second
+silently retraces (or worse, reuses an executable traced for the wrong
+shapes).  The recompile pass's DOF probe — perturb ``segs_per_chunk`` on
+a sibling, check the key moves — must flag
+``staging-key-under-captures``."""
+from repro.analysis import make_target
+from repro.engine import ExecPolicy, Runner
+
+from ._common import SPC, trend_exe
+
+
+class UnderKeyedRunner(Runner):
+    """Shipped runner, except the staging key forgets chunk geometry."""
+
+    def _cache_key(self, kind, *extra):
+        d = self.staging_key_dofs()
+        return (kind, d["K"], d["mesh"], d["axis"], d["jit"]) + extra
+
+
+def target():
+    r = UnderKeyedRunner(trend_exe(), ExecPolicy(body="sparse"),
+                         segs_per_chunk=SPC)
+    return make_target(r, policy="corpus:under_keyed")

@@ -1,0 +1,161 @@
+"""The static auditor audits itself: corpus fixtures must fire, the
+shipped runner must stay silent.
+
+Each ``tests/analysis_corpus`` module seeds exactly one known-bad pattern
+— the two bug classes PRs 6–7 found by hand (eager ``x[0]`` strip, dead
+donated ``prev``) plus the hazards the hot path is designed around
+(collective under ``cond``, under-captured staging key, under-dilated
+ChangePlan).  Zero false negatives on the corpus, zero findings on main:
+that pair is what makes the ``make lint-plans`` CI gate meaningful.
+"""
+import json
+
+import pytest
+
+from repro.analysis import (Finding, SCHEMA, SEVERITIES, audit_runner,
+                            export_jsonl, make_target, read_jsonl,
+                            validate_finding, verdict)
+from repro.analysis.passes import (pass_collectives, pass_donation,
+                                   pass_recompile, pass_transfers)
+from repro.analysis.planverify import derive_bounds, pass_plan
+from repro.engine import ExecPolicy, Runner
+
+from analysis_corpus import (cond_collective, dead_donation, eager_strip,
+                             under_dilated, under_keyed)
+from analysis_corpus._common import SPC, trend_exe, trend_query
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+# -- the corpus fires (zero false negatives) --------------------------------
+
+def test_corpus_eager_strip_fires_transfer_pass():
+    findings = pass_transfers(eager_strip.target())
+    assert "eager-op-outside-staged-step" in _codes(findings)
+    bad = [f for f in findings if f.code == "eager-op-outside-staged-step"]
+    assert all(f.severity == "error" for f in bad)
+    # the PR6 hint names the eager-indexing class
+    assert any("PR6" in f.message for f in bad)
+
+
+def test_corpus_dead_donation_fires_donation_pass():
+    findings = pass_donation(dead_donation.target())
+    dead = [f for f in findings if f.code == "donated-leaf-dead"]
+    assert dead and all(f.severity == "error" for f in dead)
+    # the dead leaves are exactly the prev snapshots of the halo-carrying
+    # input (arg position 2 of the fused step)
+    assert all("[2]" in f.provenance for f in dead)
+
+
+def test_corpus_cond_collective_fires_collective_pass():
+    findings = pass_collectives(cond_collective.target())
+    hits = [f for f in findings if f.code == "collective-under-divergence"]
+    assert hits and all(f.severity == "error" for f in hits)
+    assert any("cond" in f.provenance for f in hits)
+
+
+def test_corpus_under_keyed_fires_recompile_pass():
+    findings = pass_recompile(under_keyed.target())
+    hits = [f for f in findings if f.code == "staging-key-under-captures"]
+    assert hits and all(f.severity == "error" for f in hits)
+    assert any(f.target == "segs_per_chunk" for f in hits)
+
+
+def test_corpus_under_dilated_fires_plan_verifier():
+    findings = pass_plan(under_dilated.target())
+    codes = _codes(findings)
+    assert "changeplan-under-dilated" in codes
+    # and the affine lowering at the runner's geometry really misses
+    # segments a dilated scan window would have caught
+    assert "dilation-misses-segments" in codes
+    assert all(f.severity == "error" for f in findings
+               if f.code in ("changeplan-under-dilated",
+                             "dilation-misses-segments"))
+
+
+# -- the shipped runner stays silent (zero findings on main) ----------------
+
+def test_shipped_runner_audits_clean_at_corpus_point():
+    r = Runner(trend_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    findings = audit_runner(r, policy="main:sparse-single-local-solo")
+    assert [f for f in findings if f.severity in ("warning", "error")] == []
+
+
+# -- the verifier's independent demand derivation ---------------------------
+
+def test_derived_demand_matches_planned_halos_when_tight():
+    """At prec=1 the boundary-resolution halos are exact, so the
+    verifier's independently re-derived demand must agree bit-for-bit —
+    two different traversals over two different edge-rule codebases
+    landing on the same numbers."""
+    exe = trend_exe()
+    req = derive_bounds((trend_query(False).node,))
+    s = exe.input_specs["in"]
+    assert req["in"] == (s.left_halo * s.prec, s.right_halo * s.prec)
+
+
+# -- findings schema + exporters --------------------------------------------
+
+def test_finding_json_roundtrip_and_validation(tmp_path):
+    f = Finding("warning", "plan", "halo-overwide", "msg",
+                policy="dense×single×local×solo", target="in",
+                provenance="left_halo=16")
+    d = f.to_json()
+    assert d["schema"] == SCHEMA and d["pass"] == "plan"
+    assert validate_finding(d) == []
+    assert Finding.from_json(d) == f
+
+    path = export_jsonl([f, f], tmp_path / "a.jsonl")
+    back = read_jsonl(path)
+    assert back == [f, f]
+    with open(path) as fh:
+        lines = [json.loads(l) for l in fh]
+    assert all(l["schema"] == SCHEMA for l in lines)
+
+
+def test_validate_finding_flags_problems():
+    assert validate_finding({"schema": "nope"})  # wrong schema + missing
+    bad = Finding("error", "x", "c", "m").to_json()
+    bad["severity"] = "fatal"
+    assert any("severity" in p for p in validate_finding(bad))
+
+
+def test_verdict_ladder():
+    assert verdict([]) == "clean"
+    assert verdict([Finding("info", "p", "c", "m")]) == "info"
+    assert verdict([Finding("info", "p", "c", "m"),
+                    Finding("error", "p", "c", "m")]) == "error"
+
+
+# -- CLI --------------------------------------------------------------------
+
+def test_cli_clean_point_exits_zero(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "analysis.jsonl"
+    rc = main(["--policy", "sparse×single×local×solo",
+               "--passes", "plan,transfer", "--out", str(out)])
+    assert rc == 0
+    assert out.exists() and read_jsonl(out) == []
+
+
+def test_cli_fail_on_threshold(tmp_path, monkeypatch):
+    import repro.analysis.__main__ as m
+    finding = Finding("warning", "plan", "c", "msg")
+    monkeypatch.setattr(m, "audit_lattice",
+                        lambda policies, passes=None: [finding])
+    out = str(tmp_path / "f.jsonl")
+    assert m.main(["--out", out]) == 0                      # fail-on error
+    assert m.main(["--fail-on", "warning", "--out", out]) == 1
+    assert m.main(["--fail-on", "never", "--out", out]) == 0
+    assert m.main(["--json", "--fail-on", "info", "--out", out]) == 1
+    assert read_jsonl(out) == [finding]
+
+
+def test_cli_rejects_unknown_pass_and_policy(tmp_path):
+    from repro.analysis.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--passes", "bogus", "--out", str(tmp_path / "x.jsonl")])
+    with pytest.raises(SystemExit):
+        main(["--policy", "no-such-point", "--out", str(tmp_path / "x.jsonl")])

@@ -246,3 +246,22 @@ def test_reset_clears_metrics_and_tracer():
     assert snap["counters"]["runner.chunks"]["value"] == 0
     assert snap["histograms"]["runner.step_seconds"]["count"] == 0
     assert snap["compiles"]["counts"] == {} and snap["spans"] == {}
+
+
+def test_reset_after_warmup_keeps_tracer_and_runs_hooks():
+    """The post-warmup re-base zeroes every metric (so histograms window
+    steady state only) and runs registered hooks, but must NOT clear the
+    tracer: the warm-up compile counts are exactly the baseline the
+    retrace detector compares steady state against."""
+    m = _sample_metrics()
+    calls = []
+    m.register_warmup_reset("svc", lambda: calls.append("svc"))
+    m.register_warmup_reset("svc", lambda: calls.append("svc2"))  # replaces
+    m.reset_after_warmup()
+    assert calls == ["svc2"]
+    snap = m.snapshot()
+    assert snap["counters"]["runner.chunks"]["value"] == 0
+    assert snap["histograms"]["runner.step_seconds"]["count"] == 0
+    assert snap["vectors"]["runner.bucket_picks"]["values"] == [0, 0, 0]
+    assert snap["compiles"]["counts"] == {"sparse_fused(K=1)": 1}
+    assert "chunk" in snap["spans"]

@@ -212,6 +212,58 @@ def test_prev_snapshots_exist_and_donate_for_halo_free_inputs_only():
     jax.block_until_ready(r.step(chunks[3]).valid)
 
 
+def test_warmup_reset_rebases_metrics_and_stays_transfer_free():
+    """``Metrics.reset_after_warmup()`` re-bases the latency histogram and
+    chunk counters after compilation warm-up without touching the compile
+    record (the retrace detector's baseline is the warm-up), and the
+    re-based device-resident accumulators must keep the very next
+    steady-state chunk transfer-free."""
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    chunks = _device_chunks(4, seed=31)
+    jax.block_until_ready(r.step(chunks[0]).valid)
+    jax.block_until_ready(r.step(chunks[1]).valid)
+    r.metrics.reset_after_warmup()
+    snap = r.metrics.snapshot()
+    assert snap["counters"]["runner.chunks"]["value"] == 0
+    assert snap["histograms"]["runner.step_seconds"]["count"] == 0
+    assert any(k.startswith("sparse_fused(")
+               for k in snap["compiles"]["counts"])
+    with jax.transfer_guard("disallow"):
+        jax.block_until_ready(r.step(chunks[2]).valid)
+    snap = r.metrics.snapshot()
+    assert snap["counters"]["runner.chunks"]["value"] == 1
+    assert snap["histograms"]["runner.step_seconds"]["count"] == 1
+    assert r.dirty_stats()["chunks"] == 1
+    jax.block_until_ready(r.step(chunks[3]).valid)
+
+
+# -- satellite: the static auditor proves the hot path clean ----------------
+
+def _audit_noise(policy):
+    from repro.analysis import audit_runner, build_lattice_runner
+    r = build_lattice_runner(policy)
+    return [f for f in audit_runner(r)
+            if f.severity in ("warning", "error")]
+
+
+@pytest.mark.parametrize("body", ["dense", "sparse"])
+@pytest.mark.parametrize("keys", ["single", "vmapped"])
+def test_static_audit_clean_local_solo(body, keys):
+    """Fast subset: the four local solo points must audit clean — the
+    static complement of the transfer/donation/compile assertions above."""
+    assert _audit_noise(ExecPolicy(body=body, keys=keys)) == []
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("idx", range(16))
+def test_static_audit_clean_full_lattice(idx):
+    """Every point of the 16-point ExecPolicy lattice audits clean (the
+    same matrix ``python -m repro.analysis`` / ``make lint-plans`` gates
+    in CI)."""
+    from repro.analysis import lattice_policies
+    assert _audit_noise(lattice_policies()[idx]) == []
+
+
 def test_restore_copies_state_out_of_donation_reach():
     """restore() must deep-copy the checkpoint: the donating steady-state
     step consumes the runner's state buffers, and that must never reach
