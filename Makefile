@@ -2,7 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow test-multidev lint-plans bench \
-	bench-sparse bench-sparse-scale bench-policy bench-metrics clean-bench
+	bench-sparse bench-sparse-scale bench-policy bench-metrics bench-ooo \
+	clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -55,6 +56,12 @@ bench-policy:
 # writes BENCH_metricssmoke.json
 bench-metrics:
 	$(PYTHON) -m benchmarks.run metricssmoke
+
+# out-of-order ingestion sweep: disorder rate × lateness bound through the
+# IngestRunner revise path (watermarks, reorder buffer, sparse re-runs);
+# writes BENCH_figooo.json (uploaded by slow CI like the other sections)
+bench-ooo:
+	$(PYTHON) -m benchmarks.run figooo
 
 # drop the gitignored machine-readable benchmark results
 clean-bench:

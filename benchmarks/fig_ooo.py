@@ -1,0 +1,132 @@
+"""Out-of-order ingestion sweep: disorder rate × lateness bound.
+
+One workload — a burst stream rasterized as one event per tick — pushed
+through :class:`repro.ingest.IngestRunner` (policy ``revise``) with a
+controlled fraction of events arriving late: each late event is displaced
+by up to two chunks, everything else carries small in-bound jitter.  The
+sweep crosses the late fraction with the watermark's lateness allowance:
+
+* a larger allowance absorbs more displaced events into still-unsealed
+  chunks (fewer revisions, but sealing lags further behind arrivals);
+* a smaller allowance seals eagerly and pays for disorder afterwards as
+  ChangePlan-dilated sparse re-runs (``runner.revision_units``) emitting
+  versioned corrections.
+
+Derived columns report end-to-end throughput (events/s through push +
+seal + revise), the late/revised/correction counts, the revision work
+(``rev_units`` — dirty segments recomputed, out of ``sealed×SPC`` total),
+and the overhead factor over the zero-disorder cell of the same lateness
+bound.  Writes BENCH_figooo.json like the other sections (slow CI uploads
+it as an artifact).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.stream import Event
+from repro.engine import ExecPolicy, Runner
+from repro.ingest import IngestRunner
+
+from .common import row
+from .fig_sparse import burst_stream
+
+SEG = 128            # output ticks per segment
+SPC = 8              # segments per chunk (chunk span = 1024 ticks)
+POLL_EVERY = 256     # events between poll() calls (batched sealing)
+RATES = (0.0, 0.02, 0.1)      # late fraction
+LATENESS = (16, 256)          # watermark allowance (time units)
+MAX_DISPLACE = 2 * SEG * SPC  # late events arrive up to 2 chunks behind
+
+
+def _pow2_ticks(n_events: int) -> int:
+    n = max(4096, min(n_events, 1 << 17))
+    return 1 << (n.bit_length() - 1)
+
+
+def _query():
+    s = TStream.source("in", prec=1)
+    return (s.window(32).mean()
+            .join(s.window(64).mean(), lambda a, b: a - b))
+
+
+def _arrivals(vals, rate: float, lateness: int, rng) -> list:
+    """One event per tick; a ``rate`` fraction displaced by up to two
+    chunks (past any allowance), the rest jittered within ``lateness``."""
+    n = len(vals)
+    late = rng.random(n) < rate
+    jitter = rng.integers(0, max(1, lateness // 2), size=n)
+    disp = np.where(late, rng.integers(lateness + 1, MAX_DISPLACE, size=n),
+                    jitter)
+    order = np.argsort(np.arange(n) + disp, kind="stable")
+    return [Event(int(t), int(t) + 1, float(vals[t])) for t in order]
+
+
+def _drive(ing, events) -> tuple:
+    sealed = corrections = 0
+    for i, ev in enumerate(events):
+        ing.push("in", ev)
+        if i % POLL_EVERY == POLL_EVERY - 1:
+            s, c = ing.poll()
+            sealed += len(s)
+            corrections += len(c)
+    s, c = ing.flush()
+    return sealed + len(s), corrections + len(c)
+
+
+def run(n_events: int = 1_000_000):
+    N = _pow2_ticks(n_events)
+    chunk = SEG * SPC
+    n_chunks = N // chunk
+    exe = qc.compile_query(_query().node, out_len=SEG, pallas=False,
+                           sparse=True)
+    vals = burst_stream(N, 0.05, seed=5)
+    horizon = max(1, -(-(MAX_DISPLACE + chunk) // chunk))
+
+    def mk_runner():
+        return Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+
+    # warmup: compile the chunk step + the revision step once, off the clock
+    warm = IngestRunner(mk_runner(), lateness=16, policy="revise",
+                        horizon_chunks=horizon)
+    _drive(warm, _arrivals(vals[:2 * chunk], 0.05, 16,
+                           np.random.default_rng(0)))
+    jax.block_until_ready(warm.runner._tails["in"][1])
+
+    base_dt = {}
+    for lateness in LATENESS:
+        for rate in RATES:
+            rng = np.random.default_rng(17)
+            events = _arrivals(vals, rate, lateness, rng)
+            r = mk_runner()
+            ing = IngestRunner(r, lateness=lateness, policy="revise",
+                               horizon_chunks=horizon)
+            t0 = time.perf_counter()
+            sealed, corrections = _drive(ing, events)
+            jax.block_until_ready(r._tails["in"][1])
+            dt = time.perf_counter() - t0
+            if rate == 0.0:
+                base_dt[lateness] = dt
+            snap = r.metrics.snapshot()["counters"]
+            late = snap["ingest.late_events"]["value"]
+            revised = snap["ingest.revised_events"]["value"]
+            units = snap["runner.revision_units"]["value"]
+            beyond = snap["ingest.beyond_horizon"]["value"]
+            derived = (f"{N / dt / 1e6:.2f}Mev/s,late={late},"
+                       f"revised={revised},corr={corrections},"
+                       f"rev_units={units},"
+                       f"overhead={dt / base_dt[lateness]:.2f}")
+            row(f"figooo_r{rate:g}_l{lateness}", dt * 1e6, derived,
+                events=N, chunks=n_chunks, sealed=sealed,
+                corrections=corrections, late=int(late),
+                revised=int(revised), rev_units=int(units),
+                beyond_horizon=int(beyond), lateness=lateness,
+                rate=rate, seg_len=SEG, segs_per_chunk=SPC)
+
+
+if __name__ == "__main__":
+    run()

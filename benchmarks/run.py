@@ -74,7 +74,7 @@ def main() -> None:
 
     from benchmarks import (common, fig7_throughput, fig8_keyed_scaling,
                             fig8_ysb_scaling, fig9_latency, fig10_fusion,
-                            fig_halo_depth, fig_multiquery_sharing,
+                            fig_halo_depth, fig_multiquery_sharing, fig_ooo,
                             fig_policy, fig_sparse, metrics_smoke,
                             roofline_table)
 
@@ -88,6 +88,7 @@ def main() -> None:
         "fighalo": lambda: fig_halo_depth.run(min(n, 1_000_000)),
         "figsparse": lambda: fig_sparse.run(n),
         "figpolicy": lambda: fig_policy.run(min(n, 1_000_000)),
+        "figooo": lambda: fig_ooo.run(min(n, 1_000_000)),
         "metricssmoke": lambda: metrics_smoke.run(min(n, 1_000_000)),
         "roofline": lambda: _roofline(roofline_table),
     }

@@ -1,0 +1,118 @@
+"""Out-of-order ingestion demo: a fraud stream with 5% shuffled-late
+events through the disorder-tolerant IngestRunner front end.
+
+A credit-card anomaly query (trailing-window mean+3σ threshold, the
+paper's fraud app shrunk to demo scale) consumes one transaction event
+per tick — except 5% of them arrive up to two chunks late, well past the
+watermark's lateness allowance.  The pipeline:
+
+* rasterizes arrivals through a bounded reorder buffer (in-allowance
+  disorder is invisible),
+* seals + executes chunks as the per-key watermark passes them,
+* patches sealed rasters with late events and re-runs ONLY the
+  ChangePlan-dilated output segments (sparse revisions), emitting
+  versioned corrections.
+
+The demo ends by overlaying the corrections onto the sealed outputs and
+asserting bit-identity with an in-order run — the disorder-insensitivity
+invariant tests/test_ingest.py pins.
+
+Run:  PYTHONPATH=src python examples/late_data.py
+"""
+import numpy as np
+
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.stream import Event, EventStream, events_to_grid
+from repro.engine import ExecPolicy, Runner
+from repro.ingest import IngestRunner
+
+SEG = 64          # output ticks per segment
+SPC = 4           # segments per chunk
+CHUNK = SEG * SPC
+N_CHUNKS = 8
+N = CHUNK * N_CHUNKS
+LATE_FRAC = 0.05
+LATENESS = 32     # watermark allowance (time units)
+
+
+def fraud_query(win: int = 64):
+    s = TStream.source("in", prec=1)
+    mu = s.window(win).mean().shift(1)
+    sd = s.window(win).stddev().shift(1)
+    thr = mu.join(sd, lambda m, d: m + 3.0 * d)
+    return s.join(thr, lambda x, t: x - t).where(lambda e: e > 0)
+
+
+def make_events(rng) -> list:
+    amt = rng.lognormal(3.0, 1.0, N)
+    amt[rng.random(N) < 0.002] *= 50.0  # injected fraud
+    return [Event(t, t + 1, float(a)) for t, a in enumerate(amt)]
+
+
+def shuffled(events, rng) -> list:
+    """5% of events displaced by up to two chunks; the rest in order."""
+    n = len(events)
+    late = rng.random(n) < LATE_FRAC
+    disp = np.where(late, rng.integers(LATENESS + 1, 2 * CHUNK, size=n), 0)
+    order = np.argsort(np.arange(n) + disp, kind="stable")
+    return [events[i] for i in order]
+
+
+def main():
+    rng = np.random.default_rng(7)
+    events = make_events(rng)
+    exe = qc.compile_query(fraud_query().node, out_len=SEG, pallas=False,
+                           sparse=True)
+
+    # in-order reference
+    ref = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC).run(
+        {"in": events_to_grid(EventStream(events), 0, N, 1)}, N_CHUNKS)
+
+    # disorder-tolerant pipeline over the shuffled arrival order
+    runner = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    ing = IngestRunner(runner, lateness=LATENESS, policy="revise",
+                       horizon_chunks=3)
+    sealed, corrections = [], []
+    for ev in shuffled(events, rng):
+        ing.push("in", ev)
+        s, c = ing.poll()
+        sealed += s
+        corrections += c
+    s, c = ing.flush()
+    sealed += s
+    corrections += c
+
+    snap = runner.metrics.snapshot()["counters"]
+    print(f"events={len(events)}  sealed_chunks={len(sealed)}  "
+          f"late={snap['ingest.late_events']['value']}  "
+          f"revised={snap['ingest.revised_events']['value']}  "
+          f"corrections={len(corrections)}")
+    print(f"revision work: {snap['runner.revision_units']['value']} dirty "
+          f"segments recomputed across "
+          f"{snap['runner.revision_chunks']['value']} chunk revisions "
+          f"(a dense replay would be "
+          f"{snap['runner.revision_chunks']['value'] * SPC})")
+
+    # overlay corrections (version order) and check bit-identity
+    final = {sc.chunk: (np.asarray(sc.outputs.value),
+                        np.asarray(sc.outputs.valid)) for sc in sealed}
+    for co in sorted(corrections, key=lambda c: (c.chunk, c.version)):
+        v, m = final[co.chunk]
+        tick = np.repeat(np.asarray(co.seg_mask), SEG)
+        final[co.chunk] = (np.where(tick, np.asarray(co.outputs.value), v),
+                           np.where(tick, np.asarray(co.outputs.valid), m))
+    refv, refm = np.asarray(ref.value), np.asarray(ref.valid)
+    flagged = 0
+    for c in range(N_CHUNKS):
+        v, m = final[c]
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        assert np.array_equal(m, refm[sl])
+        assert np.array_equal(v[m], refv[sl][m])
+        flagged += int(m.sum())
+    print(f"disorder-insensitivity OK: sealed+corrections bit-identical "
+          f"to in-order ({flagged} fraud flags)")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ from ..engine import ExecPolicy, Runner
 from ..multiquery import union_runner
 from .findings import Finding
 from .passes import (AuditTarget, make_target, pass_collectives,
-                     pass_donation, pass_recompile, pass_transfers)
+                     pass_donation, pass_recompile, pass_revision,
+                     pass_transfers)
 from .planverify import pass_plan
 
 __all__ = ["PASSES", "audit_runner", "audit_lattice", "lattice_policies",
@@ -40,6 +41,7 @@ PASSES: Dict[str, Callable[[AuditTarget], List[Finding]]] = {
     "collective": pass_collectives,
     "recompile": pass_recompile,
     "plan": pass_plan,
+    "revision": pass_revision,
 }
 
 # default audit geometry (small: the lattice audits in seconds on CPU)

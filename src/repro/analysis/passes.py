@@ -35,7 +35,8 @@ from .findings import Finding
 from .jaxprs import STAGED, walk
 
 __all__ = ["AuditTarget", "make_target", "pass_transfers", "pass_donation",
-           "pass_collectives", "pass_recompile", "COLLECTIVES"]
+           "pass_collectives", "pass_recompile", "pass_revision",
+           "COLLECTIVES"]
 
 # cross-shard communication primitives (psum covers psum2 spellings)
 COLLECTIVES = frozenset({
@@ -341,4 +342,60 @@ def pass_recompile(target: AuditTarget) -> List[Finding]:
                 "silently retraces (or reuses the wrong executable)",
                 policy=target.policy, target=dof,
                 provenance=f"key={key0!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# revision-horizon coverage
+# ---------------------------------------------------------------------------
+
+def pass_revision(target: AuditTarget) -> List[Finding]:
+    """Revision-enabled runners only: does the snapshot ring reach far
+    enough back to revise every late event the declared lateness bound
+    admits?  The required depth is pure ChangePlan arithmetic
+    (:meth:`repro.core.plan.ChangePlan.revision_horizon_chunks`): a
+    patched tick up to ``revise_bound`` behind the sealed frontier
+    dirties outputs reaching ``lookahead + prec`` further back, so an
+    undersized ring silently refuses (drops) in-bound late events —
+    a liveness bug no runtime test hits until real disorder does."""
+    out = []
+    r = target.runner
+    if getattr(r, "_rev_ring", None) is None:
+        return out  # revision disabled: nothing to cover
+    bound = r.revise_bound
+    if bound is None:
+        out.append(Finding(
+            "info", "revision", "revision-bound-undeclared",
+            "revision ring enabled without a declared lateness bound "
+            "(enable_revision(revise_bound=...)) — horizon coverage "
+            "cannot be checked statically",
+            policy=target.policy))
+        return out
+    cp = r.spec.change_plan
+    if cp is None:
+        out.append(Finding(
+            "warning", "revision", "revision-horizon-unverifiable",
+            "revision ring enabled on a body without a ChangePlan: the "
+            "required horizon depth cannot be derived — late-event "
+            "coverage rests on the caller's sizing alone",
+            policy=target.policy))
+        return out
+    chunk_span = r.n_segs * r.spec.span
+    need = cp.revision_horizon_chunks(bound, chunk_span)
+    if r.revision_horizon < need:
+        out.append(Finding(
+            "error", "revision", "revision-horizon-undersized",
+            f"revision ring holds {r.revision_horizon} chunk snapshots "
+            f"but a lateness bound of {bound} time units over "
+            f"{chunk_span}-unit chunks needs {need} "
+            "(ChangePlan.revision_horizon_chunks): in-bound late events "
+            "will be refused as beyond-horizon",
+            policy=target.policy,
+            provenance=f"have={r.revision_horizon} need={need}"))
+    else:
+        out.append(Finding(
+            "info", "revision", "revision-horizon-covered",
+            f"revision ring depth {r.revision_horizon} covers the "
+            f"declared lateness bound {bound} (need {need})",
+            policy=target.policy))
     return out

@@ -287,6 +287,39 @@ class ChangePlan:
                 bad.append((name, "lookahead", sp.lookahead, la))
         return bad
 
+    # -- retro-invalidation (late-data revision processing) ------------------
+    def retro_span(self, name: str, t_lo: int, t_hi: int) -> tuple:
+        """The *open* output-time interval ``(lo, hi)`` that changed input
+        ticks of ``name`` at times in ``[t_lo, t_hi]`` can dirty — the
+        reverse lineage image :func:`repro.core.sparse.seg_ranges` resolves
+        per segment, as one interval.  A late event that patches sealed
+        input ticks in ``[t_lo, t_hi]`` can only change outputs strictly
+        inside this span; everything else is provably unchanged (the
+        sparse exactness contract), which is what makes revision
+        processing a sparse re-run rather than a chunk replay."""
+        sp = self.specs[name]
+        return (t_lo - sp.lookahead - sp.prec,
+                t_hi + sp.lookback + self.out_prec)
+
+    def revision_horizon_chunks(self, lateness_bound: int,
+                                chunk_span: int) -> int:
+        """Snapshot-ring depth (in chunks) that guarantees revisability of
+        any event no more than ``lateness_bound`` time units behind the
+        sealed frontier.
+
+        A patched tick at time ``t ≥ F − lateness_bound`` (``F`` the
+        sealed frontier) dirties outputs ``τ > t − lookahead − prec``
+        (:meth:`retro_span`), so the earliest chunk a revision must
+        restart from is the one containing
+        ``F − lateness_bound − lookahead − prec + 1`` — the ring must
+        reach ``ceil((bound + lookahead + prec) / chunk_span)`` chunks
+        back.  The ingest layer sizes its ring (and the sealed-raster
+        buffer) with this; the ``revision`` analysis pass re-checks a
+        configured runner against it."""
+        slack = max((sp.lookahead + sp.prec for sp in self.specs.values()),
+                    default=1)
+        return max(1, -(-(lateness_bound + slack) // chunk_span))
+
 
 def plan_change(qp: "QueryPlan") -> ChangePlan:
     """Derive the change-propagation plan from a query's halo contracts.

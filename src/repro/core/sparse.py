@@ -78,7 +78,7 @@ from .stream import SnapshotGrid
 
 __all__ = ["source_dirty", "bucket_capacity", "capacity_ladder",
            "segment_mask", "sparse_run", "seg_ranges", "range_any",
-           "affine_covers"]
+           "affine_covers", "retro_segment_mask"]
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +168,30 @@ def seg_ranges(lookback_t: int, lookahead_t: int, prec: int, grid_t0: int,
     i_lo = -(-(lo_t - grid_t0) // prec) - 1          # ceil_index
     i_hi1 = (hi_t - grid_t0) // prec                 # floor_index + 1
     return i_lo, i_hi1
+
+
+def retro_segment_mask(lookback_t: int, lookahead_t: int, prec: int,
+                       out_t0: int, out_prec: int, seg_len: int,
+                       n_segs: int, times) -> np.ndarray:
+    """Bool per output segment: which segments of the chunk starting at
+    ``out_t0`` a *retroactive* input change at tick times ``times`` can
+    dirty — :func:`seg_ranges` read the other way around, for late-data
+    revision.  A changed input tick at time ``t`` (held value changes
+    inside ``(t − prec, t]``) can alter outputs ``τ`` with
+    ``t − lookahead − prec < τ < t + lookback + out_prec`` (both bounds
+    open — the same ±1 arithmetic as :func:`seg_ranges` and the grid-edge
+    hits in :func:`segment_mask`).  Pure host-side planning arithmetic:
+    the revision driver resolves *which* segments to re-run with numpy,
+    so the device dispatch stays transfer-free."""
+    k = np.arange(n_segs, dtype=np.int64)
+    tau_min = out_t0 + k * seg_len * out_prec + out_prec
+    tau_max = out_t0 + (k + 1) * seg_len * out_prec
+    t = np.asarray(times, dtype=np.int64).reshape(-1, 1)
+    if t.size == 0:
+        return np.zeros((n_segs,), bool)
+    hit = ((tau_max[None, :] > t - lookahead_t - prec)
+           & (tau_min[None, :] < t + lookback_t + out_prec))
+    return hit.any(axis=0)
 
 
 def affine_covers(affine: tuple, i_lo, i_hi1) -> np.ndarray:

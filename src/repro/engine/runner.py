@@ -52,8 +52,9 @@ State pytree (the *only* cross-chunk state, host-roundtrippable through
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -232,6 +233,10 @@ class Runner:
         self._total_units = 0
         self._chunks_run = 0
         self._mstate = None  # (dirty_total, bucket_picks, frac_counts)
+        # -- late-data revision ring (off unless enable_revision) -----------
+        self._rev_ring: Optional[collections.deque] = None
+        self.revision_horizon = 0
+        self.revise_bound: Optional[int] = None
         self._obs_init(metrics)
 
     # -- telemetry -----------------------------------------------------------
@@ -256,6 +261,15 @@ class Runner:
             "runner.step_seconds", log_buckets(1e-5, 10.0, per_decade=3),
             "per-chunk step wall time (dispatch, not device completion)",
             "s", log_scale=True)
+        self._m_rev_runs = m.counter(
+            "runner.revision_runs", "late-data revision re-runs", "runs")
+        self._m_rev_chunks = m.counter(
+            "runner.revision_chunks",
+            "sealed chunks re-stepped by revisions", "chunks")
+        self._m_rev_units = m.counter(
+            "runner.revision_units",
+            "work units recomputed by revisions (ChangePlan-dilated dirty "
+            "segments only)", "units")
         # device-resident handles: fold any previous owner's device refs
         # into the host base before this runner's mstate takes over
         self._m_dirty = m.counter(
@@ -941,6 +955,12 @@ class Runner:
             fn = self._dense_step()
             key = self._cache_key("dense")
             steps.append(entry("dense", key, fn, (tails, chunk_in)))
+        if self._rev_ring is not None:
+            fn = self._revision_step()
+            key = self._cache_key("revise")
+            steps.append(entry("revise", key, fn,
+                               (tails, chunk_in,
+                                jnp.zeros((self._K, self.n_segs), bool))))
         return steps
 
     def chunk_fn(self, variant: str = "steady", chunks: Optional[Dict] = None):
@@ -992,6 +1012,16 @@ class Runner:
         runner exactly as it was.
         """
         t0 = time.perf_counter()
+        snap = None
+        if self._rev_ring is not None:
+            # pre-chunk state snapshot for the revision ring: captured
+            # before dispatch (the donating step consumes the tails), as a
+            # host pytree — one device sync per chunk, the documented cost
+            # of revisability (docs/architecture.md "Out-of-order
+            # ingestion"); hot paths that never see late data leave the
+            # ring disabled and keep the zero-sync steady state
+            snap = {"chunk": self._t // (self.n_segs * self.spec.span),
+                    "state": self.state()}
         chunk_in = self._ingest(chunks)
         self._init_missing_tails(chunk_in)
         if self.policy.sparse:
@@ -1009,6 +1039,8 @@ class Runner:
             result[o] = SnapshotGrid(value=v, valid=m, t0=self._t,
                                      prec=self.spec.out_precs[o])
         commit()
+        if snap is not None:
+            self._rev_ring.append(snap)
         self._t += self.n_segs * self.spec.span
         if self.metrics.on:
             # host-side arithmetic only (perf_counter + numpy bisect):
@@ -1060,6 +1092,8 @@ class Runner:
         self._dirty_units = None
         self._total_units = 0
         self._chunks_run = 0
+        if self._rev_ring is not None:
+            self._rev_ring.clear()
         if self._mstate is not None:
             # preserve the registry's running totals (syncs — off-path),
             # then drop this runner's device accumulator state
@@ -1245,3 +1279,199 @@ class Runner:
                                                 + x.shape[2:], x.dtype), tv),
                         jnp.zeros((tm.shape[0], 1), bool))
             self._sparse = st
+
+    # -- late-data revision processing ---------------------------------------
+    def enable_revision(self, horizon_chunks: int,
+                        revise_bound: Optional[int] = None) -> None:
+        """Keep a ring of the last ``horizon_chunks`` pre-chunk state
+        snapshots (the :meth:`state` pytree), so sealed chunks inside the
+        horizon can be revised through :meth:`revise` when late data
+        patches their inputs.  ``revise_bound`` declares the maximum
+        lateness (time units behind the newest stepped chunk) the ring is
+        meant to cover; the ``revision`` analysis pass
+        (:func:`repro.analysis.passes.pass_revision`) checks it against
+        :meth:`repro.core.plan.ChangePlan.revision_horizon_chunks`.
+
+        Enabling the ring trades the zero-sync steady state for
+        revisability: every :meth:`step` round-trips the carried state to
+        host once.  Hot paths that never see late data should leave this
+        off (the 16-point policy lattice does, so the static passes and
+        perf tests are unaffected)."""
+        if horizon_chunks < 1:
+            raise ValueError("horizon_chunks must be >= 1")
+        self._rev_ring = collections.deque(maxlen=int(horizon_chunks))
+        self.revision_horizon = int(horizon_chunks)
+        self.revise_bound = (None if revise_bound is None
+                             else int(revise_bound))
+
+    def _revision_step(self):
+        """The staged late-data revision step: ``step(tails, chunks,
+        seg_dirty) -> (outs, new_tails)``.
+
+        Like the fused sparse step, the compute is the per-shard compacted
+        ``capacity_ladder`` switch (:meth:`_compute_local`) — never a
+        dense chunk replay — but the dirty mask arrives as an argument
+        (host-derived from :func:`repro.core.sparse.retro_segment_mask`
+        over the patched tick times) instead of being diffed on device,
+        and there is no hold fill: ChangePlan dilation proves every
+        output outside the dirty segments unchanged, so only dirty
+        segments' output ticks are read back (clean segments carry
+        scatter residue)."""
+        key = self._cache_key("revise")
+        cache = self.spec.step_cache
+        if key in cache:
+            return cache[key]
+        self.metrics.tracer.record_compile(self._compile_label(key))
+        names, specs = self._names(), self.spec.input_specs
+        K, n_segs, U = self._K, self.n_segs, self._U
+        ladder = sparse_mod.capacity_ladder(U // self.policy.n_shards)
+        branches = [self._compute_local(c) for c in ladder]
+        caps = np.asarray(ladder, np.int32)
+
+        def switched(w, *flat):
+            cnt = jnp.sum(w.astype(jnp.int32))
+            b = jnp.searchsorted(jnp.asarray(caps), cnt, side="left")
+            return jax.lax.switch(b, branches, w, *flat)
+
+        sharded = self._shard_body(switched, len(names))
+
+        def step(tails, chunks, seg_dirty):
+            bufs, new_tails = {}, {}
+            for name in names:
+                s = specs[name]
+                tv, tm = tails[name]
+                cv, cm = chunks[name]
+                fv = _tm(lambda a, b: jnp.concatenate([a, b], axis=1), tv, cv)
+                fm = jnp.concatenate([tm, cm], axis=1)
+                bufs[name] = (fv, fm)
+                lo = s.core * n_segs
+                new_tails[name] = (
+                    _tm(lambda x: jax.lax.slice_in_dim(
+                        x, lo, lo + s.left_halo, axis=1), fv),
+                    jax.lax.slice_in_dim(fm, lo, lo + s.left_halo, axis=1))
+            full = sharded(seg_dirty.reshape(U), *[bufs[nm] for nm in names])
+            outs = {o: (_tm(lambda x: x.reshape(
+                            (K, n_segs * x.shape[1]) + x.shape[2:]), fv),
+                        fm.reshape(K, -1))
+                    for o, (fv, fm) in full.items()}
+            return outs, new_tails
+
+        # the walked-forward tails are revision-owned (ring-entry copies,
+        # then step outputs) — donate them like the chunk steps do
+        return self._stage(key, step, donate=(0,))
+
+    def revise(self, from_chunk: int, chunks, seg_dirty, *,
+               commit: bool = True):
+        """Re-run sealed chunks ``from_chunk .. from_chunk+len(chunks)-1``
+        on patched inputs, computing only the flagged segments.
+
+        ``chunks`` is one ``{input: SnapshotGrid}`` dict per revised chunk
+        (the patched sealed grids, full chunk layout exactly as for
+        :meth:`step`); ``seg_dirty`` one host bool mask per chunk, shaped
+        ``(n_segs,)`` (single) or ``(n_keys, n_segs)`` (vmapped) —
+        derived from :func:`repro.core.sparse.retro_segment_mask` over the
+        patched tick times.  Returns one output result per chunk in
+        :meth:`step`'s layout; only ticks inside dirty segments are
+        meaningful (callers emit corrections for those segments only —
+        see :class:`repro.ingest.IngestRunner`).
+
+        With ``commit=True`` (required to keep live state consistent) the
+        revision must extend through the newest stepped chunk; the
+        walked-forward tails then replace the live carried tails, the
+        change state goes conservative (all-dirty tails — a superset of
+        true dirtiness, still bit-exact by the sparse exactness
+        contract), and ring entries passed en route are refreshed with
+        the patched tails so later revisions restore patched history.
+        ``commit=False`` is a read-only what-if replay."""
+        if self._rev_ring is None:
+            raise ValueError(
+                "revision disabled — call enable_revision() first")
+        if len(chunks) != len(seg_dirty):
+            raise ValueError("one seg_dirty mask per revised chunk required")
+        span = self.n_segs * self.spec.span
+        cur = self._t // span
+        if commit and from_chunk + len(chunks) != cur:
+            raise ValueError(
+                f"commit=True revisions must extend through the newest "
+                f"stepped chunk {cur - 1} (got chunks {from_chunk}.."
+                f"{from_chunk + len(chunks) - 1})")
+        entry = next((e for e in self._rev_ring
+                      if e["chunk"] == from_chunk), None)
+        if entry is None:
+            have = sorted(e["chunk"] for e in self._rev_ring)
+            raise ValueError(
+                f"no state snapshot for chunk {from_chunk} in the revision "
+                f"ring (have {have}) — the patch is beyond the horizon")
+        st, specs, K = entry["state"], self.spec.input_specs, self._K
+
+        step = self._revision_step()
+        tails = None
+        results = []
+        n_units = 0
+        last_in = last_sd = last_outs = None
+        for i, (ch, sd) in enumerate(zip(chunks, seg_dirty)):
+            chunk_in = self._ingest(ch)
+            if tails is None:
+                tails = {}
+                for name in self._names():
+                    if name in st:
+                        # jnp.array (copy): the ring entry stays intact and
+                        # the donating revision step never consumes it
+                        tails[name] = self._place(
+                            self._lift(_tm(jnp.array, st[name])))
+                    else:  # pre-stream snapshot: φ tails (the restore rule)
+                        hl = specs[name].left_halo
+                        cv, cm = chunk_in[name]
+                        tails[name] = self._place((
+                            _tm(lambda x: jnp.zeros(
+                                (K, hl) + x.shape[2:], x.dtype), cv),
+                            jnp.zeros((K, hl), bool)))
+            else:
+                # the ring entry for this chunk captured pre-patch tails —
+                # refresh it with the walked (patched) ones so a later
+                # revision restoring from here sees patched history
+                for e in self._rev_ring:
+                    if e["chunk"] == from_chunk + i:
+                        for name in self._names():
+                            e["state"][name] = _tm(
+                                np.asarray, self._strip(tails[name]))
+            sd = np.asarray(sd, bool).reshape(K, self.n_segs)
+            n_units += int(sd.sum())
+            outs, tails = step(tails, chunk_in, jnp.asarray(sd))
+            last_in, last_sd, last_outs = chunk_in, sd, outs
+            res = {}
+            for o, (v, m) in self._postprocess(outs).items():
+                res[o] = SnapshotGrid(value=v, valid=m,
+                                      t0=(from_chunk + i) * span,
+                                      prec=self.spec.out_precs[o])
+            results.append(res["__out"] if self.spec.solo else res)
+
+        if commit and chunks:
+            self._tails = tails
+            if self._sparse is not None:
+                stt = self._sparse
+                ld = jnp.asarray(last_sd[:, -1])
+                for name in self._names():
+                    hl = specs[name].left_halo
+                    if hl:
+                        # conservative: the patched tail is marked fully
+                        # dirty — dirtiness only ever widens, and extra
+                        # computed segments are bit-identical by the
+                        # sparse exactness contract
+                        stt["dirty"][name] = self._place(
+                            jnp.ones((K, hl), bool))
+                    else:
+                        cv, cm = last_in[name]
+                        stt["prev"][name] = (_tm(lambda x: x[:, -1:], cv),
+                                             cm[:, -1:])
+                for o, (sv, sm) in list(stt["seed"].items()):
+                    ov, om = last_outs[o]
+                    stt["seed"][o] = (
+                        _tm(lambda x, s: jnp.where(_bc(ld, x[:, -1]),
+                                                   x[:, -1], s), ov, sv),
+                        jnp.where(ld, om[:, -1], sm))
+        if self.metrics.on:
+            self._m_rev_runs.add(1)
+            self._m_rev_chunks.add(len(chunks))
+            self._m_rev_units.add(n_units)
+        return results

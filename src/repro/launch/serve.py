@@ -14,6 +14,7 @@ prefill/decode the dry-run compiles.
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -42,8 +43,9 @@ def main(argv=None):
 
     max_len = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab, args.prompt_len)
-             for _ in range(args.requests)]
+    queue = collections.deque(
+        rng.integers(0, cfg.vocab, args.prompt_len)
+        for _ in range(args.requests))
     done = []
 
     is_encdec = cfg.family == "encdec"
@@ -52,7 +54,10 @@ def main(argv=None):
 
     t0 = time.time()
     while queue:
-        wave = [queue.pop() for _ in range(min(args.batch, len(queue)))]
+        # FIFO: serve in arrival order (popleft — pop() would starve the
+        # oldest requests behind every newer arrival)
+        wave = [queue.popleft() for _ in range(min(args.batch, len(queue)))]
+        n_real = len(wave)
         while len(wave) < args.batch:  # pad the batch
             wave.append(np.zeros(args.prompt_len, np.int64))
         tokens = jnp.asarray(np.stack(wave), jnp.int32)
@@ -75,7 +80,7 @@ def main(argv=None):
             out.append(jnp.argmax(logits[:, 0], axis=-1))
             pos += 1
         gen = np.stack([np.asarray(o) for o in out], axis=1)
-        done.extend(gen.tolist())
+        done.extend(gen[:n_real].tolist())  # padding slots are not work
     dt = time.time() - t0
     n_tok = len(done) * args.gen
     print(f"[serve] {len(done)} sequences, {n_tok} tokens, "

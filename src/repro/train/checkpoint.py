@@ -25,6 +25,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -131,14 +132,24 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(f.read().strip())
 
 
-def restore(ckpt_dir: str, step: Optional[int] = None,
-            shardings: Optional[Dict[str, Any]] = None):
-    """Restore a checkpoint; ``shardings`` (flat or tree) re-shards onto the
-    current mesh (elastic restart)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            return None, None
+def _available_steps(ckpt_dir: str) -> list:
+    """Finalized checkpoint steps on disk, newest first."""
+    try:
+        entries = os.listdir(ckpt_dir)
+    except OSError:
+        return []
+    steps = []
+    for d in entries:
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                continue
+    return sorted(steps, reverse=True)
+
+
+def _load_step(ckpt_dir: str, step: int,
+               shardings: Optional[Dict[str, Any]]):
     d = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -156,6 +167,47 @@ def restore(ckpt_dir: str, step: Optional[int] = None,
         else:
             flat[k] = jax.numpy.asarray(arr)
     return _unflatten(flat), manifest
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None,
+            shardings: Optional[Dict[str, Any]] = None):
+    """Restore a checkpoint; ``shardings`` (flat or tree) re-shards onto the
+    current mesh (elastic restart).
+
+    With ``step=None`` (restart discovery), a corrupt or partially
+    written newest checkpoint — a truncated ``arrays.npz`` or
+    ``manifest.json`` next to an intact ``latest`` pointer, the
+    crash-mid-save residue the atomic rename cannot fully rule out on
+    non-atomic filesystems — falls back to the next older finalized
+    checkpoint with a warning instead of raising.  An explicitly
+    requested ``step`` still raises: the caller asked for *that* state,
+    and silently handing back another would corrupt the resume."""
+    if step is not None:
+        return _load_step(ckpt_dir, step, shardings)
+    newest = latest_step(ckpt_dir)
+    candidates = _available_steps(ckpt_dir)
+    if newest is not None:
+        # the pointer leads; older finalized dirs follow, newest first
+        candidates = [newest] + [s for s in candidates if s != newest]
+    if not candidates:
+        return None, None
+    errors = []
+    for s in candidates:
+        try:
+            tree, manifest = _load_step(ckpt_dir, s, shardings)
+        except Exception as e:  # truncated npz/json, missing file, ...
+            errors.append((s, e))
+            continue
+        for prev, err in errors:
+            warnings.warn(
+                f"checkpoint step_{prev} is corrupt or incomplete "
+                f"({type(err).__name__}: {err}); restored step_{s} instead",
+                RuntimeWarning, stacklevel=2)
+        return tree, manifest
+    raise RuntimeError(
+        f"no restorable checkpoint in {ckpt_dir!r}: "
+        + "; ".join(f"step_{s}: {type(e).__name__}: {e}"
+                    for s, e in errors))
 
 
 class CheckpointManager:

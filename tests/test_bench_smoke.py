@@ -138,6 +138,30 @@ def test_fig_sparse_smoke_and_json_results():
     assert "metrics_overhead_pct" in doc["config"], doc["config"]
 
 
+def test_fig_ooo_smoke_and_json_results():
+    """The out-of-order ingestion sweep (``make bench-ooo``) must report
+    every disorder-rate × lateness-bound cell and write BENCH_figooo.json
+    with the revision-overhead columns; disordered cells must actually
+    exercise the revise path (late events, sparse re-run units)."""
+    path = os.path.join(REPO, "BENCH_figooo.json")
+    if os.path.exists(path):
+        os.remove(path)
+    out = _run_section("figooo")
+    for lateness in (16, 256):
+        for rate in ("0", "0.02", "0.1"):
+            assert f"figooo_r{rate}_l{lateness}," in out, out
+    doc = json.load(open(path))
+    assert doc["section"] == "figooo"
+    rows = doc["rows"]
+    assert all({"late", "revised", "rev_units", "corrections",
+                "beyond_horizon", "sealed"} <= set(r) for r in rows), rows
+    clean = [r for r in rows if r["rate"] == 0.0]
+    dirty = [r for r in rows if r["rate"] > 0.0]
+    assert clean and all(r["late"] == r["rev_units"] == 0 for r in clean)
+    assert dirty and all(r["late"] > 0 and r["rev_units"] > 0
+                         and r["corrections"] > 0 for r in dirty), rows
+
+
 def test_metrics_smoke_section_validates_exporters():
     """``bench-metrics`` (the nightly CI gate): the metrics_smoke section
     must pass its own schema/exporter validation (it exits non-zero on any

@@ -101,3 +101,56 @@ def test_microbatched_grads_match_full_batch():
     assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-3)
     assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]),
                                                    rel=2e-2)
+
+
+def test_restore_falls_back_past_corrupt_latest():
+    """Crash-mid-save residue: a truncated payload next to an intact
+    ``latest`` pointer must restore the previous step with a warning,
+    not raise (the rename is atomic, the pointer write is not — a crash
+    between them, or a non-atomic filesystem, leaves exactly this)."""
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"x": jnp.arange(3.0)}, extra={"s": 1})
+        ck.save(d, 2, {"x": jnp.arange(3.0) * 2}, extra={"s": 2})
+        # truncate step_2's payload: half an npz is what a crash leaves
+        npz = os.path.join(d, "step_2", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(os.path.getsize(npz) // 2)
+        assert ck.latest_step(d) == 2  # the pointer still says 2
+        with pytest.warns(RuntimeWarning, match="step_2"):
+            tree, manifest = ck.restore(d)
+        assert manifest["step"] == 1 and manifest["extra"]["s"] == 1
+        np.testing.assert_array_equal(np.asarray(tree["x"]),
+                                      np.arange(3.0))
+
+
+def test_restore_falls_back_past_corrupt_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"x": jnp.ones(2)}, extra={"s": 1})
+        ck.save(d, 2, {"x": jnp.zeros(2)}, extra={"s": 2})
+        with open(os.path.join(d, "step_2", "manifest.json"), "w") as f:
+            f.write('{"step": 2, "keys"')  # truncated json
+        with pytest.warns(RuntimeWarning):
+            _, manifest = ck.restore(d)
+        assert manifest["step"] == 1
+
+
+def test_restore_explicit_step_still_raises_on_corruption():
+    """An explicitly requested step must not be silently substituted."""
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"x": jnp.ones(2)})
+        ck.save(d, 2, {"x": jnp.zeros(2)})
+        npz = os.path.join(d, "step_2", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(8)
+        with pytest.raises(Exception):
+            ck.restore(d, step=2)
+
+
+def test_restore_all_corrupt_raises():
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"x": jnp.ones(2)})
+        npz = os.path.join(d, "step_1", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(4)
+        with pytest.raises(RuntimeError, match="no restorable checkpoint"):
+            ck.restore(d)

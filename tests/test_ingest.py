@@ -1,0 +1,635 @@
+"""Out-of-order ingestion: watermarks, reorder buffer, late-data revisions.
+
+The headline invariant (ISSUE 9): **disorder-insensitivity** — for any
+arrival permutation within the lateness bound plus revision horizon,
+sealed outputs overlaid with the emitted corrections are bit-identical
+to in-order execution on integer data.  Pinned here for unkeyed and
+keyed runners, with event spans and change dilations crossing segment
+and chunk boundaries (window lookback 24 over 16-tick chunks), plus:
+
+* the reorder buffer's stamp-precedence rasterization reproduces
+  ``events_to_grid`` exactly under any arrival permutation;
+* the revision re-run goes through the compacted sparse path — the
+  chunk counter does not move, revision units count only dilated
+  segments, the staged revision step holds a capacity-ladder ``cond``
+  and runs transfer-free on device-resident args with donated tails;
+* beyond-horizon patches are refused whole (counted, never partially
+  applied), and the ``revision`` analysis pass flags undersized rings;
+* ``Runner.restore(strict=False)`` φ-re-init (the satellite): a
+  checkpoint missing a halo-free input re-inits its change lineage to
+  φ, forces the next first segment dense, and still continues
+  bit-identically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.jaxprs import walk
+from repro.analysis.passes import make_target, pass_donation, pass_revision
+from repro.core import compile as qc
+from repro.core.frontend import TStream
+from repro.core.sparse import retro_segment_mask
+from repro.core.stream import (Event, EventStream, SnapshotGrid,
+                               events_to_grid)
+from repro.engine import ExecPolicy, Runner
+from repro.ingest import IngestRunner, ReorderBuffer, WatermarkTracker
+
+SEG = 8    # output ticks per segment
+SPC = 2    # segments per chunk
+CHUNK = SEG * SPC  # chunk span (out_prec = 1)
+
+_EXE_CACHE = {}
+
+
+def _exe(keyed: bool = False):
+    """Join of a short and a long window: the 24-tick lookback dilates
+    late changes across segment AND chunk boundaries (chunk = 16)."""
+    if keyed not in _EXE_CACHE:
+        s = TStream.source("in", prec=1, keyed=keyed)
+        q = (s.window(4).mean()
+             .join(s.window(24).mean(), lambda a, b: a - b))
+        _EXE_CACHE[keyed] = qc.compile_query(q.node, out_len=SEG,
+                                             pallas=False, sparse=True)
+    return _EXE_CACHE[keyed]
+
+
+def _int_events(rng, t_end: int, gap: bool = False) -> list:
+    """Contiguous (or gapped) integer-payload events covering (0, t_end];
+    the final one-tick event pins coverage of the last chunk so every
+    stream spans the same chunk count."""
+    events, t = [], 0
+    while t < t_end - 1:
+        d = int(rng.integers(1, 6))
+        if not (gap and rng.random() < 0.2):
+            events.append(Event(t, min(t + d, t_end - 1),
+                                float(rng.integers(0, 10))))
+        t += d
+    events.append(Event(t_end - 1, t_end, float(rng.integers(0, 10))))
+    return events
+
+
+def _shuffled(rng, tagged, disorder: int):
+    """Bounded-disorder arrival order: sort by start + jitter in [0, D)."""
+    jit = rng.integers(0, max(disorder, 1), size=len(tagged))
+    order = np.argsort([ev.start + j for (_k, ev), j in zip(tagged, jit)],
+                       kind="stable")
+    return [tagged[i] for i in order]
+
+
+def _overlay(sealed, corrections, keyed: bool = False):
+    """Fold corrections (version order) into the sealed outputs: only
+    ticks inside dirty segments are taken from a correction."""
+    final = {}
+    for sc in sealed:
+        final[sc.chunk] = (np.asarray(sc.outputs.value),
+                           np.asarray(sc.outputs.valid))
+    for co in sorted(corrections, key=lambda c: (c.chunk, c.version)):
+        v, m = final[co.chunk]
+        ov = np.asarray(co.outputs.value)
+        om = np.asarray(co.outputs.valid)
+        mask = np.asarray(co.seg_mask)
+        tick = (np.repeat(mask, SEG, axis=1) if keyed
+                else np.repeat(mask, SEG))
+        final[co.chunk] = (np.where(tick, ov, v), np.where(tick, om, m))
+    return final
+
+
+def _assert_chunks_match(final, ref, n_chunks: int, keyed: bool = False):
+    refv, refm = np.asarray(ref.value), np.asarray(ref.valid)
+    assert sorted(final) == list(range(n_chunks))
+    ax = 1 if keyed else 0
+    for c in range(n_chunks):
+        v, m = final[c]
+        sl = [slice(None)] * refm.ndim
+        sl[ax] = slice(c * CHUNK, (c + 1) * CHUNK)
+        wv, wm = refv[tuple(sl)], refm[tuple(sl)]
+        assert np.array_equal(m, wm), f"chunk {c}: validity differs"
+        assert np.array_equal(v[m], wv[wm]), f"chunk {c}: values differ"
+
+
+def _drive(ing, arrivals):
+    sealed, corrections = [], []
+    for name, ev, key in arrivals:
+        ing.push(name, ev, key=key)
+        s, c = ing.poll()
+        sealed += s
+        corrections += c
+    s, c = ing.flush()
+    return sealed + s, corrections + c
+
+
+# ---------------------------------------------------------------------------
+# watermark semantics
+# ---------------------------------------------------------------------------
+
+def test_watermark_tracker_semantics():
+    wt = WatermarkTracker(lateness=5)
+    assert wt.watermark is None and wt.frontier is None
+    wt.observe(20, key="a")
+    assert wt.frontier == 20 and wt.watermark == 15
+    wt.observe(40, key="b")
+    # the slowest key holds the stream back
+    assert wt.frontier == 20 and wt.high == 40 and wt.lag() == 25
+    wt.observe(10, key="a")  # per-key max is monotonic
+    assert wt.frontier == 20
+    wt.heartbeat(50)
+    assert wt.frontier == 50 and wt.watermark == 45
+    # declared key universe: strict — silent keys gate the watermark
+    ws = WatermarkTracker(lateness=0, keys=["x", "y"])
+    ws.observe(9, key="x")
+    assert ws.watermark is None
+    ws.observe(3, key="y")
+    assert ws.watermark == 3
+    with pytest.raises(KeyError):
+        ws.observe(1, key="z")
+    with pytest.raises(ValueError):
+        WatermarkTracker(lateness=-1)
+
+
+# ---------------------------------------------------------------------------
+# reorder buffer ≡ events_to_grid under any arrival permutation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dict_payload", [False, True])
+def test_reorder_buffer_matches_events_to_grid_any_order(dict_payload):
+    rng = np.random.default_rng(11)
+    T, CT = 64, 16
+    events = []
+    seen = set()
+    for _ in range(40):  # overlapping spans, distinct (start, end)
+        s = int(rng.integers(0, T - 1))
+        e = min(T, s + int(rng.integers(1, 8)))
+        if e <= s or (s, e) in seen:
+            continue
+        seen.add((s, e))
+        p = float(rng.integers(0, 100))
+        events.append(Event(s, e, {"x": p, "y": -p} if dict_payload else p))
+    stream = EventStream(events)
+    buf = ReorderBuffer(prec=1, chunk_ticks=CT, horizon_chunks=1)
+    order = rng.permutation(len(events))  # fully arbitrary arrival
+    for i in order:
+        assert buf.push(events[i]) is None  # nothing sealed yet: never late
+    sealed = buf.seal_all()
+    assert [c for c, _ in sealed] == [0, 1, 2, 3]
+    for c, got in sealed:
+        want = events_to_grid(stream, c * CT, (c + 1) * CT, 1)
+        assert np.array_equal(np.asarray(got.valid), np.asarray(want.valid))
+        gv = jax.tree_util.tree_map(np.asarray, got.value)
+        wv = jax.tree_util.tree_map(np.asarray, want.value)
+        for g, w in zip(jax.tree_util.tree_leaves(gv),
+                        jax.tree_util.tree_leaves(wv)):
+            assert g.dtype == w.dtype == np.float32
+            assert np.array_equal(g, w)
+
+
+def test_reorder_patch_precedence_and_horizon_refusal():
+    buf = ReorderBuffer(prec=1, chunk_ticks=8, horizon_chunks=2)
+    buf.push(Event(0, 32, 1.0))
+    buf.seal_all()  # chunks 0..3 sealed; rasters retained for 2, 3
+    assert buf.sealed_upto == 4
+    # later-starting event wins at its ticks; change reported as times
+    times, beyond = buf.patch(Event(26, 28, 9.0))
+    assert not beyond and list(times) == [27, 28]
+    g = buf.sealed_grid(3)
+    assert np.asarray(g.value)[[2, 3]].tolist() == [9.0, 9.0]
+    # a losing event (same start, earlier end than the owner) changes nothing
+    times, beyond = buf.patch(Event(26, 27, 5.0))
+    assert not beyond and times.size == 0
+    # a patch reaching past the horizon is refused WHOLE: the in-horizon
+    # portion must not be applied either (partial state would fork from
+    # anything a revision can reproduce)
+    times, beyond = buf.patch(Event(10, 27, 5.0))
+    assert beyond and times.size == 0
+    assert np.asarray(buf.sealed_grid(3).value)[0] == 1.0
+    with pytest.raises(KeyError):
+        buf.sealed_grid(1)  # evicted
+
+
+# ---------------------------------------------------------------------------
+# disorder-insensitivity (the headline invariant)
+# ---------------------------------------------------------------------------
+
+def test_in_bound_disorder_needs_no_revisions():
+    """Permutations within the watermark allowance: the reorder buffer
+    alone restores order — sealed outputs are bit-identical with zero
+    late events and zero corrections."""
+    rng = np.random.default_rng(0)
+    n_chunks, disorder = 6, 6
+    events = _int_events(rng, n_chunks * CHUNK, gap=True)
+    full = events_to_grid(EventStream(events), 0, n_chunks * CHUNK, 1)
+    ref = Runner(_exe(), ExecPolicy(body="sparse"),
+                 segs_per_chunk=SPC).run({"in": full}, n_chunks)
+
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    ing = IngestRunner(r, lateness=disorder + 6, policy="revise")
+    arrivals = [("in", ev, None) for _k, ev in
+                _shuffled(rng, [(0, e) for e in events], disorder)]
+    sealed, corrections = _drive(ing, arrivals)
+    assert corrections == []
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.late_events"]["value"] == 0
+    assert snap["ingest.sealed_chunks"]["value"] == n_chunks
+    _assert_chunks_match(_overlay(sealed, corrections), ref, n_chunks)
+
+
+def test_late_data_revision_exactness():
+    """Disorder past the watermark allowance: late events patch sealed
+    rasters and sparse revisions correct the outputs — sealed +
+    corrections ≡ in-order execution, bit-identical."""
+    rng = np.random.default_rng(1)
+    n_chunks, disorder, lateness = 6, 24, 4
+    events = _int_events(rng, n_chunks * CHUNK)
+    full = events_to_grid(EventStream(events), 0, n_chunks * CHUNK, 1)
+    ref = Runner(_exe(), ExecPolicy(body="sparse"),
+                 segs_per_chunk=SPC).run({"in": full}, n_chunks)
+
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    ing = IngestRunner(r, lateness=lateness, policy="revise",
+                       horizon_chunks=4)
+    arrivals = [("in", ev, None) for _k, ev in
+                _shuffled(rng, [(0, e) for e in events], disorder)]
+    sealed, corrections = _drive(ing, arrivals)
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.revised_events"]["value"] > 0
+    assert snap["ingest.beyond_horizon"]["value"] == 0
+    assert snap["ingest.dropped_events"]["value"] == 0
+    assert len(corrections) > 0
+    for co in corrections:  # versions count up from 1 per chunk
+        assert co.version >= 1 and np.asarray(co.seg_mask).any()
+    _assert_chunks_match(_overlay(sealed, corrections), ref, n_chunks)
+
+
+def test_late_data_revision_exactness_keyed():
+    """Keyed variant: per-key sub-streams shuffled together; a slow key
+    gates sealing through the per-key watermark, revisions dirty only
+    the patched keys' segments."""
+    K, n_chunks, disorder, lateness = 4, 4, 20, 4
+    rng = np.random.default_rng(2)
+    per_key = [_int_events(rng, n_chunks * CHUNK) for _ in range(K)]
+    full = SnapshotGrid(
+        value=jnp.asarray(np.stack([
+            np.asarray(events_to_grid(EventStream(evs), 0,
+                                      n_chunks * CHUNK, 1).value)
+            for evs in per_key])),
+        valid=jnp.asarray(np.stack([
+            np.asarray(events_to_grid(EventStream(evs), 0,
+                                      n_chunks * CHUNK, 1).valid)
+            for evs in per_key])),
+        t0=0, prec=1)
+    ref = Runner(_exe(keyed=True),
+                 ExecPolicy(body="sparse", keys="vmapped"), n_keys=K,
+                 segs_per_chunk=SPC).run({"in": full}, n_chunks)
+
+    r = Runner(_exe(keyed=True), ExecPolicy(body="sparse", keys="vmapped"),
+               n_keys=K, segs_per_chunk=SPC)
+    ing = IngestRunner(r, lateness=lateness, policy="revise",
+                       horizon_chunks=4)
+    tagged = [(k, ev) for k, evs in enumerate(per_key) for ev in evs]
+    arrivals = [("in", ev, k) for k, ev in _shuffled(rng, tagged, disorder)]
+    sealed, corrections = _drive(ing, arrivals)
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.revised_events"]["value"] > 0
+    assert snap["ingest.beyond_horizon"]["value"] == 0
+    assert len(corrections) > 0
+    # keyed dirtiness: at least one correction leaves some key untouched
+    assert any(not np.asarray(co.seg_mask).all(axis=1).all()
+               for co in corrections)
+    _assert_chunks_match(_overlay(sealed, corrections, keyed=True), ref,
+                         n_chunks, keyed=True)
+
+
+# ---------------------------------------------------------------------------
+# the revision re-run is the sparse path, not a dense replay
+# ---------------------------------------------------------------------------
+
+def test_revision_is_compacted_and_transfer_free():
+    exe = _exe()
+    r = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    r.enable_revision(3, revise_bound=16)
+    rng = np.random.default_rng(7)
+    events = _int_events(rng, 3 * CHUNK)
+    grid = events_to_grid(EventStream(events), 0, 3 * CHUNK, 1)
+    r.run({"in": grid}, 3)
+    before = r.metrics.snapshot()["counters"]["runner.chunks"]["value"]
+
+    # patch one tick of chunk 1, derive the dilated masks, revise 1..2
+    v = np.asarray(grid.value).copy()
+    m = np.asarray(grid.valid).copy()
+    # patch chunk 1's LAST tick: its first segment stays clean (the
+    # retro-dilation reaches backward only lookahead+prec), later
+    # segments across the chunk boundary go dirty
+    v[2 * CHUNK - 1] += 1.0
+    t_patch = 2 * CHUNK  # tick index 2·CHUNK−1 lives at time 2·CHUNK
+
+    def _chunk(c):
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        g = SnapshotGrid(value=jnp.asarray(v[sl]), valid=jnp.asarray(m[sl]),
+                         t0=c * CHUNK, prec=1)
+        jax.block_until_ready((g.value, g.valid))
+        return g
+
+    cp, sp = exe.change_plan, exe.change_plan.specs["in"]
+    masks = [retro_segment_mask(sp.lookback, sp.lookahead, sp.prec,
+                                c * CHUNK, cp.out_prec, cp.out_len, SPC,
+                                [t_patch]) for c in (1, 2)]
+    assert masks[0].any() and not all(mk.all() for mk in masks)
+    outs = r.revise(1, [{"in": _chunk(1)}, {"in": _chunk(2)}], masks)
+
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["runner.chunks"]["value"] == before  # no chunk re-stepped
+    assert snap["runner.revision_runs"]["value"] == 1
+    assert snap["runner.revision_chunks"]["value"] == 2
+    n_units = sum(int(mk.sum()) for mk in masks)
+    assert snap["runner.revision_units"]["value"] == n_units
+    assert n_units < 2 * SPC  # compute-cap: strictly fewer than all units
+
+    # dirty-segment outputs match a from-scratch run on the patched data
+    ref = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC).run(
+        {"in": SnapshotGrid(value=jnp.asarray(v), valid=jnp.asarray(m),
+                            t0=0, prec=1)}, 3)
+    for i, c in enumerate((1, 2)):
+        tick = np.repeat(masks[i], SEG)
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        gm = np.asarray(outs[i].valid)[tick]
+        assert np.array_equal(gm, np.asarray(ref.valid)[sl][tick])
+        assert np.array_equal(np.asarray(outs[i].value)[tick][gm],
+                              np.asarray(ref.value)[sl][tick][gm])
+
+    # the staged revision step embeds the capacity-ladder switch (a cond:
+    # device-side bucket pick), and its donation contract is clean
+    steps = {s["label"]: s for s in r.staged_steps()}
+    rev = steps["revise"]
+    jpr = jax.make_jaxpr(lambda *a: rev["fn"](*a))(*rev["args"])
+    assert any(site.prim == "cond" for site in walk(jpr))
+    fs = pass_donation(make_target(r))
+    assert not [f for f in fs if f.severity == "error"], fs
+
+    # transfer-guard: on device-resident args the staged step dispatches
+    # without a single host round-trip, and the donated tails are consumed
+    st = next(e for e in r._rev_ring if e["chunk"] == 1)["state"]
+    tails = {n: r._place(r._lift(jax.tree_util.tree_map(jnp.array, st[n])))
+             for n in r._names()}
+    chunk_in = r._ingest({"in": _chunk(1)})
+    sd = jnp.asarray(masks[0].reshape(1, SPC))
+    fn = r._revision_step()
+    jax.block_until_ready((tails, chunk_in, sd))
+    with jax.transfer_guard("disallow"):
+        _outs, new_tails = fn(tails, chunk_in, sd)
+        jax.block_until_ready(new_tails)
+    assert all(x.is_deleted() for x in jax.tree_util.tree_leaves(tails))
+
+
+def test_revise_validates_ring_and_extent():
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    with pytest.raises(ValueError, match="revision disabled"):
+        r.revise(0, [], [])
+    r.enable_revision(2, revise_bound=8)
+    rng = np.random.default_rng(9)
+    grid = events_to_grid(
+        EventStream(_int_events(rng, 4 * CHUNK)), 0, 4 * CHUNK, 1)
+    r.run({"in": grid}, 4)
+
+    def _chunk(c):
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        return SnapshotGrid(value=grid.value[sl], valid=grid.valid[sl],
+                            t0=c * CHUNK, prec=1)
+
+    mk = np.ones(SPC, bool)
+    with pytest.raises(ValueError, match="beyond the horizon"):
+        r.revise(0, [{"in": _chunk(c)} for c in range(4)],
+                 [mk] * 4)  # chunk 0's snapshot fell off the 2-deep ring
+    with pytest.raises(ValueError, match="newest stepped chunk"):
+        r.revise(2, [{"in": _chunk(2)}], [mk])  # stops short of chunk 3
+    with pytest.raises(ValueError, match="one seg_dirty mask"):
+        r.revise(2, [{"in": _chunk(2)}, {"in": _chunk(3)}], [mk])
+
+
+# ---------------------------------------------------------------------------
+# lateness policies + horizon refusal at the pipeline level
+# ---------------------------------------------------------------------------
+
+def _held_back_scenario(policy, lateness=2, horizon=1, seed=3):
+    """Push everything in order except one early event held to the end."""
+    rng = np.random.default_rng(seed)
+    n_chunks = 4
+    events = _int_events(rng, n_chunks * CHUNK)
+    held = events[2]  # fully inside chunk 0
+    assert held.end <= CHUNK
+    rest = [e for i, e in enumerate(events) if i != 2]
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    ing = IngestRunner(r, lateness=lateness, policy=policy,
+                       horizon_chunks=horizon)
+    arrivals = ([("in", e, None) for e in rest]
+                + [("in", held, None)])  # arrives after chunk 0 sealed
+    sealed, corrections = _drive(ing, arrivals)
+    ref = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC).run(
+        {"in": events_to_grid(EventStream(rest), 0, n_chunks * CHUNK, 1)},
+        n_chunks)
+    return r, sealed, corrections, ref, n_chunks
+
+
+def test_beyond_horizon_patch_refused_and_counted():
+    r, sealed, corrections, ref, n = _held_back_scenario(
+        "revise", lateness=2, horizon=1, seed=3)
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.beyond_horizon"]["value"] == 1
+    assert snap["ingest.dropped_events"]["value"] == 1
+    # refused whole: outputs equal the in-order run WITHOUT that event
+    _assert_chunks_match(_overlay(sealed, corrections), ref, n)
+
+
+def test_policy_drop_discards_and_counts():
+    r, sealed, corrections, ref, n = _held_back_scenario("drop")
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.dropped_events"]["value"] == 1
+    assert snap["ingest.late_events"]["value"] == 1
+    assert corrections == []
+    _assert_chunks_match(_overlay(sealed, corrections), ref, n)
+
+
+def test_policy_buffer_readmits_and_counts():
+    r, sealed, corrections, _ref, n = _held_back_scenario("buffer")
+    snap = r.metrics.snapshot()["counters"]
+    assert snap["ingest.buffered_events"]["value"] == 1
+    assert corrections == []  # buffer never revises sealed outputs
+    assert len(sealed) == n
+
+
+def test_lateness_histogram_and_lag_gauge():
+    r, *_ = _held_back_scenario("revise", horizon=4)
+    snap = r.metrics.snapshot()
+    assert snap["histograms"]["ingest.lateness"]["count"] == 1
+    assert snap["gauges"]["ingest.watermark_lag"]["value"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# analysis: revision-horizon coverage pass
+# ---------------------------------------------------------------------------
+
+def test_revision_pass_flags_undersized_horizon():
+    exe = _exe()
+    cp = exe.change_plan
+    r = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    assert pass_revision(make_target(r)) == []  # disabled: not applicable
+    r.enable_revision(1, revise_bound=10 * CHUNK)
+    fs = pass_revision(make_target(r))
+    assert [f.code for f in fs] == ["revision-horizon-undersized"]
+    assert fs[0].severity == "error" and fs[0].pass_name == "revision"
+
+    need = cp.revision_horizon_chunks(16, SPC * SEG)
+    r2 = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    r2.enable_revision(need, revise_bound=16)
+    fs2 = pass_revision(make_target(r2))
+    assert [f.code for f in fs2] == ["revision-horizon-covered"]
+    assert fs2[0].severity == "info"
+
+    r3 = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    r3.enable_revision(2)
+    fs3 = pass_revision(make_target(r3))
+    assert [f.code for f in fs3] == ["revision-bound-undeclared"]
+
+
+def test_ingest_runner_default_horizon_satisfies_pass():
+    """IngestRunner's derived horizon is the ChangePlan formula, so the
+    analysis pass is green by construction."""
+    r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    IngestRunner(r, lateness=40, policy="revise")
+    fs = pass_revision(make_target(r))
+    assert [f.code for f in fs] == ["revision-horizon-covered"]
+
+
+def test_retro_span_and_horizon_arithmetic():
+    cp = _exe().change_plan
+    sp = cp.specs["in"]
+    lo, hi = cp.retro_span("in", 10, 10)
+    assert lo == 10 - sp.lookahead - sp.prec
+    assert hi == 10 + sp.lookback + cp.out_prec
+    # a bound that fits one chunk (minus slack) needs exactly one chunk
+    slack = sp.lookahead + sp.prec
+    assert cp.revision_horizon_chunks(CHUNK - slack, CHUNK) == 1
+    assert cp.revision_horizon_chunks(CHUNK, CHUNK) == 2
+    assert cp.revision_horizon_chunks(0, CHUNK) == 1
+    # retro_segment_mask: a patched tick dirties the dilated segments of
+    # LATER chunks too (lookback crosses the chunk boundary)
+    mask_next = retro_segment_mask(sp.lookback, sp.lookahead, sp.prec,
+                                   CHUNK, cp.out_prec, cp.out_len, SPC,
+                                   [CHUNK - 2])
+    assert mask_next[0]  # lookback 24 reaches into the following chunk
+    assert retro_segment_mask(sp.lookback, sp.lookahead, sp.prec, 0,
+                              cp.out_prec, cp.out_len, SPC, []).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: Runner.restore(strict=False) φ-re-init
+# ---------------------------------------------------------------------------
+
+def test_restore_strict_false_phi_reinit_matches_uninterrupted():
+    """A checkpoint missing one (halo-free) input φ-re-inits its change
+    lineage: the next chunk's first segment is forced dense (tick 0
+    diffs against φ) and the continuation stays bit-identical — the
+    conservative-dirtiness exactness contract, now pinned outside the
+    session `_refit` path."""
+    s1 = TStream.source("a", prec=1)
+    s2 = TStream.source("b", prec=1)
+    q = s1.window(8).mean().join(s2, lambda x, y: x + y)
+    exe = qc.compile_query(q.node, out_len=SEG, pallas=False, sparse=True)
+    assert exe.input_specs["b"].left_halo == 0  # raw source: halo-free
+
+    rng = np.random.default_rng(4)
+    n_chunks = 5
+    T = n_chunks * CHUNK
+
+    def _grid(seed):
+        rr = np.random.default_rng(seed)
+        change = rr.random(T) < 0.1
+        change[0] = True
+        raw = np.floor(rr.random(T) * 50).astype(np.float32)
+        vals = raw[np.maximum.accumulate(
+            np.where(change, np.arange(T), -1))]
+        return SnapshotGrid(value=jnp.asarray(vals),
+                            valid=jnp.ones(T, bool), t0=0, prec=1)
+
+    ga, gb = _grid(10), _grid(11)
+
+    def _chunks(c):
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        return {"a": SnapshotGrid(value=ga.value[sl], valid=ga.valid[sl],
+                                  t0=c * CHUNK, prec=1),
+                "b": SnapshotGrid(value=gb.value[sl], valid=gb.valid[sl],
+                                  t0=c * CHUNK, prec=1)}
+
+    r1 = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    for c in range(3):
+        r1.step(_chunks(c))
+    st = r1.state()
+    ref = [r1.step(_chunks(c)) for c in (3, 4)]
+
+    # strict mode names the gap when the halo-free snapshot is missing
+    st_no_prev = {**st, "__sparse": {**st["__sparse"],
+                                     "prev": dict(st["__sparse"]["prev"]),
+                                     "dirty": dict(st["__sparse"]["dirty"])}}
+    del st_no_prev["__sparse"]["prev"]["b"]
+    r2 = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    with pytest.raises(ValueError, match="prev"):
+        r2.restore(st_no_prev, strict=True)
+
+    # drop input "b" from the checkpoint entirely: strict=False re-inits
+    # its tail AND its 1-tick snapshot to φ
+    st_missing = dict(st_no_prev)
+    del st_missing["b"]
+    del st_missing["__sparse"]["dirty"]["b"]
+    r2.restore(st_missing, strict=False)
+    assert r2._t == 3 * CHUNK
+    got = [r2.step(_chunks(c)) for c in (3, 4)]
+    # φ snapshot vs a valid tick 0: the first segment is forced dense
+    r3 = Runner(exe, ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+    r3.restore(st_missing, strict=False)
+    r3.step(_chunks(3))
+    assert np.asarray(r3.last_seg_dirty)[:, 0].all()
+    for g, w in zip(got, ref):
+        gm, wm = np.asarray(g.valid), np.asarray(w.valid)
+        assert np.array_equal(gm, wm)
+        assert np.array_equal(np.asarray(g.value)[gm],
+                              np.asarray(w.value)[wm])
+
+
+# ---------------------------------------------------------------------------
+# property: random bounded permutations (slow job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_property_bounded_disorder_is_invisible():
+    """Hypothesis sweep of the headline invariant: random event streams,
+    random bounded arrival permutations, random lateness allowances —
+    sealed outputs + revisions are always bit-identical to in-order
+    execution."""
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings, st = (hypothesis.given, hypothesis.settings,
+                           hypothesis.strategies)
+    n_chunks = 5
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           disorder=st.sampled_from([0, 3, 9, 18, 27]),
+           lateness=st.sampled_from([0, 3, 8]))
+    def check(seed, disorder, lateness):
+        rng = np.random.default_rng(seed)
+        events = _int_events(rng, n_chunks * CHUNK, gap=True)
+        if not events:
+            return
+        full = events_to_grid(EventStream(events), 0, n_chunks * CHUNK, 1)
+        ref = Runner(_exe(), ExecPolicy(body="sparse"),
+                     segs_per_chunk=SPC).run({"in": full}, n_chunks)
+        r = Runner(_exe(), ExecPolicy(body="sparse"), segs_per_chunk=SPC)
+        # horizon 4 chunks (64 time units) covers disorder+maxdur ≤ 33
+        ing = IngestRunner(r, lateness=lateness, policy="revise",
+                           horizon_chunks=4)
+        arrivals = [("in", ev, None) for _k, ev in
+                    _shuffled(rng, [(0, e) for e in events], disorder)]
+        sealed, corrections = _drive(ing, arrivals)
+        snap = r.metrics.snapshot()["counters"]
+        assert snap["ingest.beyond_horizon"]["value"] == 0
+        _assert_chunks_match(_overlay(sealed, corrections), ref, n_chunks)
+
+    check()
