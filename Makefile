@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow test-multidev lint-plans bench \
 	bench-sparse bench-sparse-scale bench-policy bench-metrics bench-ooo \
-	clean-bench
+	bench-latency clean-bench
 
 # tier-1: the full suite (what the driver runs)
 test:
@@ -20,6 +20,7 @@ test-fast:
 # the fast CI job runs this right after the fast test split
 lint-plans:
 	$(PYTHON) -m repro.analysis --fail-on=error
+	$(PYTHON) -m repro.serve --smoke --cache-dir out/serve_cache
 
 # --durations=20 so test/benchmark rot shows up in the CI log over time
 test-slow:
@@ -62,6 +63,12 @@ bench-metrics:
 # writes BENCH_figooo.json (uploaded by slow CI like the other sections)
 bench-ooo:
 	$(PYTHON) -m benchmarks.run figooo
+
+# serving-latency sweep: AOT-compiled steps, p50/p99 per call over batch
+# 1…1000 + cold-vs-warm first-result; writes BENCH_figlat.json (uploaded
+# by slow CI like the other sections)
+bench-latency:
+	$(PYTHON) -m benchmarks.run figlat
 
 # drop the gitignored machine-readable benchmark results
 clean-bench:

@@ -53,6 +53,11 @@ from repro.engine import ExecPolicy, Runner, keyed_grid
 from .common import row, set_config
 
 REPEATS = 3
+# the metrics-on/off A/B pair compares two near-identical sub-ms timings,
+# so it needs more best-of samples than the headline rows for min() to
+# converge below the true overhead gap (3 repeats measured a *negative*
+# overhead on noisy hosts)
+OVERHEAD_REPEATS = 5
 RATES = (0.01, 0.10, 0.50, 1.00)
 BURST = 128  # change-burst length (a fraud session / market move)
 
@@ -104,13 +109,13 @@ def _bench(fn) -> float:
     return min(best)
 
 
-def _bench_loop(fn, inner: int = 20) -> float:
+def _bench_loop(fn, inner: int = 20, repeats: int = REPEATS) -> float:
     """Per-call seconds averaged over ``inner`` back-to-back calls
-    (min of REPEATS samples) — sub-ms calls need batched timing for the
-    instrumentation-overhead comparison to beat scheduler noise."""
+    (min of ``repeats`` samples) — sub-ms calls need batched timing for
+    the instrumentation-overhead comparison to beat scheduler noise."""
     jax.block_until_ready(fn().valid)  # warmup (compile)
     best = []
-    for _ in range(REPEATS):
+    for _ in range(repeats):
         t0 = time.perf_counter()
         for _ in range(inner):
             out = fn()
@@ -164,9 +169,11 @@ def _one_shot_sweep(n_events: int) -> None:
         # instrumentation-off timing first (same compiled fn), then the
         # production path with metrics on — the anchor overhead measurement
         with obs.disabled():
-            dt_off = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs))
+            dt_off = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs),
+                                 repeats=OVERHEAD_REPEATS)
         snap0 = reg.snapshot()
-        dt_s = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs))
+        dt_s = _bench_loop(lambda: sparse_run(exe_s, g, 0, n_segs),
+                           repeats=OVERHEAD_REPEATS)
         snap1 = reg.snapshot()
         runs = max(int(obs.counter_delta(snap0, snap1, "sparse.runs")), 1)
         n_dirty = int(obs.counter_delta(snap0, snap1,
@@ -179,8 +186,14 @@ def _one_shot_sweep(n_events: int) -> None:
             events=N, window=window, seg_len=seg,
             dirty_segments=n_dirty, total_segments=n_segs,
             metrics=snap1)
+    # clamp the headline number at 0: a (noise-level) negative difference
+    # means "unmeasurably small", not that instrumentation speeds calls up;
+    # the raw signed value stays alongside for honesty
+    raw_pct = (on_us - off_us) / off_us * 100
     set_config(metrics_on_us=round(on_us, 3), metrics_off_us=round(off_us, 3),
-               metrics_overhead_pct=round((on_us - off_us) / off_us * 100, 2))
+               metrics_overhead_pct=round(max(0.0, raw_pct), 2),
+               metrics_overhead_raw_pct=round(raw_pct, 2),
+               metrics_overhead_repeats=OVERHEAD_REPEATS)
 
 
 def _scale_sweep(n_events: int) -> None:

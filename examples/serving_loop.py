@@ -1,0 +1,108 @@
+"""Low-latency serving demo: the fraud app behind `repro.serve`.
+
+A credit-card anomaly query (trailing-window mean+3σ threshold, the
+paper's fraud app at demo scale) served two ways:
+
+* **chunk path** — `build_service` wires the persisted plan + executable
+  caches and returns a warmed `ServeLoop`; the generator double-buffers
+  (chunk k+1's committed `device_put` overlaps chunk k's compute) and the
+  steady-state tail runs under `jax.transfer_guard("disallow")` — every
+  H2D is the loop's own explicit put.
+* **event path** — per-transaction events go through a fixed-capacity
+  FIFO admission ring (backpressure by shed policy, `serve.*` telemetry)
+  into the disorder-tolerant `IngestRunner`; chunks seal as the
+  watermark passes and admission→result latency is observed per seal.
+
+Run it twice to see the persisted warm start: the first run plans,
+traces, AOT-compiles and persists under ``out/serving_demo/``; the
+second rebuilds the runner from the plan artifact and loads every step
+executable from disk — first-result drops ~10×, and the tracer records
+zero compiles.
+
+Run:  PYTHONPATH=src python examples/serving_loop.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.stream import Event, SnapshotGrid
+from repro.core.frontend import TStream
+from repro.serve import build_service
+
+SEG = 64          # output ticks per segment
+SPC = 4           # segments per chunk
+CHUNK = SEG * SPC
+N_CHUNKS = 8
+CACHE = "out/serving_demo"
+
+
+def fraud_query(win: int = 64):
+    s = TStream.source("in", prec=1)
+    mu = s.window(win).mean().shift(1)
+    sd = s.window(win).stddev().shift(1)
+    thr = mu.join(sd, lambda m, d: m + 3.0 * d)
+    return s.join(thr, lambda x, t: x - t).where(lambda e: e > 0)
+
+
+def amounts(rng, n):
+    amt = rng.lognormal(3.0, 1.0, n).astype(np.float32)
+    amt[rng.random(n) < 0.002] *= 50.0  # injected fraud
+    return amt
+
+
+def main():
+    t0 = time.perf_counter()
+    svc = build_service(fraud_query(), out_len=SEG, segs_per_chunk=SPC,
+                        cache_dir=CACHE)
+    print(f"build_service: plan={svc.plan_source} "
+          f"aot={svc.aot_report} ({time.perf_counter() - t0:.2f}s)")
+
+    # -- chunk path: double-buffered generator ------------------------------
+    rng = np.random.default_rng(0)
+
+    def requests():
+        for i in range(N_CHUNKS):
+            # host numpy on purpose: the loop's explicit device_put is
+            # the only H2D on the steady-state path
+            yield {"in": SnapshotGrid(value=amounts(rng, CHUNK),
+                                      valid=np.ones(CHUNK, bool),
+                                      t0=i * CHUNK, prec=1)}
+
+    gen = svc.serve(requests())
+    flagged = int(np.asarray(next(gen).valid).sum())
+    first = time.perf_counter() - t0
+    flagged += int(np.asarray(next(gen).valid).sum())
+    with jax.transfer_guard("disallow"):  # steady state: explicit puts only
+        outs = list(gen)
+    flagged += int(sum(np.asarray(o.valid).sum() for o in outs))
+    snap = svc.runner.metrics.snapshot()
+    lat = snap["histograms"]["serve.call_seconds"]
+    print(f"chunk path: {N_CHUNKS} chunks, {flagged} flagged ticks, "
+          f"first result {first:.2f}s, p50 {lat['p50'] * 1e3:.2f}ms "
+          f"p99 {lat['p99'] * 1e3:.2f}ms, "
+          f"compiles={svc.runner.metrics.tracer.compiles() or '{}'}")
+
+    # -- event path: admission ring -> watermark-sealed chunks --------------
+    svc2 = build_service(fraud_query(), out_len=SEG, segs_per_chunk=SPC,
+                         cache_dir=CACHE)
+    svc2.attach_events(lateness=32, policy="drop", capacity=4096,
+                       shed="newest")
+    n_sealed = 0
+    for t, a in enumerate(amounts(rng, 2 * CHUNK)):
+        svc2.offer("in", Event(t, t + 1, float(a)))
+        if (t + 1) % 256 == 0:
+            sealed, _ = svc2.pump()
+            n_sealed += len(sealed)
+    sealed, _ = svc2.finish()
+    n_sealed += len(sealed)
+    snap = svc2.runner.metrics.snapshot()
+    a2r = snap["histograms"]["serve.admit_to_result_seconds"]
+    print(f"event path: {snap['counters']['serve.admitted']['value']:.0f} "
+          f"events admitted, {n_sealed} chunks sealed, "
+          f"admit→result p50 {a2r['p50'] * 1e3:.1f}ms "
+          f"(shed={snap['counters']['serve.shed_events']['value']:.0f})")
+
+
+if __name__ == "__main__":
+    main()

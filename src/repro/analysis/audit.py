@@ -28,7 +28,7 @@ from ..multiquery import union_runner
 from .findings import Finding
 from .passes import (AuditTarget, make_target, pass_collectives,
                      pass_donation, pass_recompile, pass_revision,
-                     pass_transfers)
+                     pass_serving, pass_transfers)
 from .planverify import pass_plan
 
 __all__ = ["PASSES", "audit_runner", "audit_lattice", "lattice_policies",
@@ -42,6 +42,7 @@ PASSES: Dict[str, Callable[[AuditTarget], List[Finding]]] = {
     "recompile": pass_recompile,
     "plan": pass_plan,
     "revision": pass_revision,
+    "serving": pass_serving,
 }
 
 # default audit geometry (small: the lattice audits in seconds on CPU)

@@ -36,7 +36,7 @@ from .jaxprs import STAGED, walk
 
 __all__ = ["AuditTarget", "make_target", "pass_transfers", "pass_donation",
            "pass_collectives", "pass_recompile", "pass_revision",
-           "COLLECTIVES"]
+           "pass_serving", "COLLECTIVES"]
 
 # cross-shard communication primitives (psum covers psum2 spellings)
 COLLECTIVES = frozenset({
@@ -397,5 +397,64 @@ def pass_revision(target: AuditTarget) -> List[Finding]:
             "info", "revision", "revision-horizon-covered",
             f"revision ring depth {r.revision_horizon} covers the "
             f"declared lateness bound {bound} (need {need})",
+            policy=target.policy))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serving readiness
+# ---------------------------------------------------------------------------
+
+def pass_serving(target: AuditTarget) -> List[Finding]:
+    """Served runners only (``repro.serve`` installs AOT executables and
+    records them in ``Runner.aot_record``): every staged step the policy
+    point dispatches must be backed by an installed AOT executable — a
+    served request must never trace or compile — and the steady-state
+    step must carry a non-empty donation contract, or the double-buffered
+    async path re-allocates the carried state pytree on every chunk.
+    Non-served runners (the lattice audit) have nothing to prove here.
+
+    This pass reads runner bookkeeping only — it never traces, so it is
+    safe on a runner whose step cache holds loaded executables (which
+    ``jax.make_jaxpr`` cannot re-trace; run the jaxpr passes on a
+    pre-AOT twin instead)."""
+    out: List[Finding] = []
+    r = target.runner
+    aot = getattr(r, "aot_record", None)
+    if not aot:
+        return out  # not a served runner
+    if not r.spec.jit:
+        out.append(Finding(
+            "error", "serving", "serving-unjitted",
+            "served body has spec.jit=False — AOT executables need a "
+            "jitted staged step", policy=target.policy))
+        return out
+    cache = r.spec.step_cache
+    loaded = 0
+    for label, key in r.aot_keys():
+        rec = aot.get(key)
+        if rec is None or key not in cache:
+            out.append(Finding(
+                "error", "serving", "serving-step-not-aot",
+                f"staged step {label} reachable by this served policy "
+                "point has no installed AOT executable — the first "
+                "request would trace and compile in-band",
+                policy=target.policy, target=label))
+            continue
+        loaded += rec["how"] == "loaded"
+        if label in ("sparse_fused(steady)", "dense") and not rec["donate"]:
+            out.append(Finding(
+                "error", "serving", "serving-donation-missing",
+                f"steady-state step {label} was AOT-installed with an "
+                "empty donation contract — every chunk re-allocates the "
+                "carried state instead of recycling it in place",
+                policy=target.policy, target=label,
+                provenance=f"how={rec['how']}"))
+    if not any(f.severity == "error" for f in out):
+        out.append(Finding(
+            "info", "serving", "serving-aot-complete",
+            f"{len(r.aot_keys())} staged steps AOT-installed "
+            f"({loaded} loaded from the persisted cache, "
+            f"{len(r.aot_keys()) - loaded} compiled ahead of time)",
             policy=target.policy))
     return out

@@ -237,6 +237,11 @@ class Runner:
         self._rev_ring: Optional[collections.deque] = None
         self.revision_horizon = 0
         self.revise_bound: Optional[int] = None
+        # -- AOT serving record (populated by install_executable) -----------
+        # staging key -> {"label", "how": "loaded"|"compiled", "donate"}:
+        # the serving analysis pass reads this to prove every step a served
+        # policy point dispatches is backed by an AOT executable
+        self.aot_record: Dict[tuple, dict] = {}
         self._obs_init(metrics)
 
     # -- telemetry -----------------------------------------------------------
@@ -1000,6 +1005,70 @@ class Runner:
 
             args = (tails, chunk_in)
         return fn, args
+
+    # -- AOT serving surface (repro.serve) -----------------------------------
+    def aot_keys(self) -> List[tuple]:
+        """``(label, staging-cache key)`` of every staged step one serving
+        process dispatches at this policy point — the AOT compilation
+        surface :func:`repro.serve.aot.aot_compile` covers.  Enumerable
+        without staging anything, so a warm start can probe the persisted
+        executable cache before any getter records a compile."""
+        keys = []
+        if self.policy.sparse:
+            keys.append(("sparse_fused(first)",
+                         self._cache_key("sparse_fused", True)))
+            keys.append(("sparse_fused(steady)",
+                         self._cache_key("sparse_fused", False)))
+            if self.metrics.on:
+                keys.append(("obs_accum", self._cache_key("obs_accum")))
+        else:
+            keys.append(("dense", self._cache_key("dense")))
+        if self._rev_ring is not None:
+            keys.append(("revise", self._cache_key("revise")))
+        return keys
+
+    def install_executable(self, key, fn, *, label: str = "",
+                           how: str = "loaded", donate=()) -> None:
+        """Executable-serialization hook: put an AOT executable (a
+        ``jax.stages.Compiled`` / deserialized ``Loaded``) into the step
+        cache under its staging key.  Installing *before* the step getters
+        run makes them cache hits, so a warm start records zero compiles
+        (the tracer-verified warm-start proof) and never traces the body.
+        The donation contract is baked into the executable at lowering
+        time; ``donate`` just records it for the serving analysis pass."""
+        if not self.spec.jit:
+            raise ValueError(
+                "AOT executables need a jitted body (spec.jit=True)")
+        self.spec.step_cache[key] = fn
+        self.aot_record[key] = {"label": label or key[0], "how": how,
+                                "donate": tuple(donate)}
+        self.metrics.tracer.record_aot(self._compile_label(key), how)
+
+    def seed_shape_spec(self):
+        """``jax.ShapeDtypeStruct`` tree of the φ hold seeds (sparse
+        bodies; ``None`` for dense) — pickles, so a persisted plan
+        artifact lets a fresh process :meth:`prime_seed_shapes` and skip
+        the one remaining trace on the warm path (``jax.eval_shape`` of
+        ``outs_fn`` in :meth:`_zero_seeds`)."""
+        if not self.policy.sparse:
+            return None
+        seeds = self._zero_seeds(self._ingest(self.audit_example_chunks()))
+        return {o: (_tm(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        ov),
+                    jax.ShapeDtypeStruct(om.shape, om.dtype))
+                for o, (ov, om) in seeds.items()}
+
+    def prime_seed_shapes(self, shapes) -> None:
+        """Install persisted seed shapes (:meth:`seed_shape_spec` of a
+        previous process) so the first sparse chunk skips the
+        ``eval_shape`` trace of ``outs_fn`` — with AOT-installed steps
+        this makes first-result completely trace-free."""
+        if shapes is None or not self.policy.sparse:
+            return
+        self._zero_seed_cache = {
+            o: (_tm(lambda a: jnp.zeros(a.shape, a.dtype), ov),
+                jnp.zeros(om.shape, om.dtype))
+            for o, (ov, om) in shapes.items()}
 
     # -- public API ----------------------------------------------------------
     def step(self, chunks: Dict[str, SnapshotGrid]):

@@ -101,10 +101,18 @@ class IngestRunner:
     watermark_keys:
         Optional declared key universe for the watermark tracker
         (strict mode — see :class:`WatermarkTracker`).
+    stage:
+        Optional chunk-staging hook ``{name: grid} -> {name: grid}``
+        applied before execution — the serving loop passes its committed
+        ``jax.device_put`` here, and when a poll seals several chunks at
+        once the next chunk is staged *before* the current one's compute
+        dispatch, so its H2D transfer overlaps (the double-buffered
+        async data path).  Default: identity.
     """
 
     def __init__(self, runner, *, lateness: int, policy: str = "revise",
-                 horizon_chunks: Optional[int] = None, watermark_keys=None):
+                 horizon_chunks: Optional[int] = None, watermark_keys=None,
+                 stage=None):
         if policy not in _POLICIES:
             raise ValueError(
                 f"unknown lateness policy {policy!r} (one of {_POLICIES})")
@@ -125,6 +133,7 @@ class IngestRunner:
         if policy == "revise":
             runner.enable_revision(self.horizon_chunks,
                                    revise_bound=self.lateness)
+        self._stage = stage
         self.tracker = WatermarkTracker(self.lateness, keys=watermark_keys)
         self._bufs = {
             name: ReorderBuffer(
@@ -227,6 +236,28 @@ class IngestRunner:
         self.tracker.heartbeat(t)
 
     # -- execution -----------------------------------------------------------
+    def _execute(self, rows, names) -> list:
+        """Step a batch of sealed chunk rows, double-buffered through the
+        staging hook: chunk i+1 is staged (its H2D transfer issued, when
+        the hook is the serving loop's committed ``device_put``) before
+        chunk i's compute dispatch, so transfer and compute overlap."""
+        stage = self._stage if self._stage is not None else (lambda c: c)
+        sealed = []
+        staged = None
+        for i, row in enumerate(rows):
+            c = row[0][0]
+            cur = (staged if staged is not None
+                   else stage({n: g for n, (_c, g) in zip(names, row)}))
+            if i + 1 < len(rows):
+                staged = stage({n: g for n, (_c, g)
+                                in zip(names, rows[i + 1])})
+            else:
+                staged = None
+            out = self.runner.step(cur)
+            sealed.append(SealedChunk(
+                chunk=c, t0=c * self.chunk_span, version=0, outputs=out))
+        return sealed
+
     def poll(self) -> tuple:
         """Run pending revisions, then seal + execute every chunk the
         watermark has passed.  Returns ``(sealed, corrections)`` — lists
@@ -242,13 +273,8 @@ class IngestRunner:
             per_input = {name: buf.seal_ready(wm)
                          for name, buf in self._bufs.items()}
             names = sorted(per_input)
-            for row in zip(*(per_input[n] for n in names)):
-                c = row[0][0]
-                chunks = {n: g for n, (_c, g) in zip(names, row)}
-                out = self.runner.step(chunks)
-                sealed.append(SealedChunk(
-                    chunk=c, t0=c * self.chunk_span, version=0,
-                    outputs=out))
+            sealed = self._execute(
+                list(zip(*(per_input[n] for n in names))), names)
             if self.metrics.on and sealed:
                 self._m_sealed.add(len(sealed))
         return sealed, corrections
@@ -265,13 +291,8 @@ class IngestRunner:
             per_input = {name: buf.seal_all(target)
                          for name, buf in self._bufs.items()}
             names = sorted(per_input)
-            for row in zip(*(per_input[n] for n in names)):
-                c = row[0][0]
-                chunks = {n: g for n, (_c, g) in zip(names, row)}
-                out = self.runner.step(chunks)
-                sealed.append(SealedChunk(
-                    chunk=c, t0=c * self.chunk_span, version=0,
-                    outputs=out))
+            sealed = self._execute(
+                list(zip(*(per_input[n] for n in names))), names)
             if self.metrics.on and sealed:
                 self._m_sealed.add(len(sealed))
         return sealed, corrections

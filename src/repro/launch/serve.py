@@ -26,6 +26,15 @@ from ..models.model import build_model
 from ..train.train_step import make_serve_steps
 
 
+def _make_prefill(model, prefill_fn, is_encdec: bool, max_len: int):
+    """One jitted prefill for the whole run (max_len closed over as a
+    static).  Built once, outside the wave loop — a fresh ``jax.jit``
+    per wave is a fresh compile cache, so every wave would recompile."""
+    if is_encdec:
+        return jax.jit(prefill_fn)
+    return jax.jit(lambda p, t: model.prefill(p, t, max_len))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -51,6 +60,7 @@ def main(argv=None):
     is_encdec = cfg.family == "encdec"
     frames = (jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
               if is_encdec else None)
+    prefill = _make_prefill(model, prefill_fn, is_encdec, max_len)
 
     t0 = time.time()
     while queue:
@@ -62,11 +72,9 @@ def main(argv=None):
             wave.append(np.zeros(args.prompt_len, np.int64))
         tokens = jnp.asarray(np.stack(wave), jnp.int32)
         if is_encdec:
-            logits, caches, enc = jax.jit(
-                prefill_fn, static_argnames=())(params, tokens, frames)
+            logits, caches, enc = prefill(params, tokens, frames)
         else:
-            logits, caches = jax.jit(lambda p, t: model.prefill(
-                p, t, max_len))(params, tokens)
+            logits, caches = prefill(params, tokens)
         out = [jnp.argmax(logits[:, -1], axis=-1)]
         pos = args.prompt_len
         for _ in range(args.gen - 1):

@@ -14,15 +14,32 @@ object.  The union DAG of N query roots then partitions into
 The cache also memoizes per-``(fingerprint, span)`` planning artifacts so
 attaching a query whose sub-plans are already resident costs no planning
 work for the shared prefix.
+
+With ``persist=<path>`` the artifact store round-trips to disk (one
+pickle, atomic writes): plan artifacts are keyed by ``(structural
+fingerprint, out_len)`` — pure-data planning products only
+(:class:`~repro.core.plan.InputSpec` halo contracts,
+:class:`~repro.core.plan.ChangePlan`, output geometry, φ seed shapes),
+never live IR or closures — so a *fresh process* serving an
+already-planned query skips planning entirely.  This is the
+cross-session plan sharing the serving warm start
+(:func:`repro.serve.build_service`) builds on; the executables
+themselves persist separately (:class:`repro.serve.aot.ExecutableCache`
++ the jax compilation cache).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Set
+import os
+import pickle
+import tempfile
+from typing import Dict, List, Optional, Sequence, Set
 
 from ..core import ir
 
 __all__ = ["SharedPlanCache", "SharingReport"]
+
+_PLAN_SCHEMA = "repro.plans/v1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,11 +68,54 @@ class SharedPlanCache:
     serve many sessions; it only ever grows.
     """
 
-    def __init__(self):
+    def __init__(self, persist: Optional[str] = None):
         self._canon: Dict[str, ir.Node] = {}   # fingerprint -> canonical node
+        # (fingerprint, out_len) -> pure-data plan artifact (module
+        # docstring); round-trips to ``persist`` when given
+        self._plans: Dict[tuple, dict] = {}
+        self._persist = persist
+        if persist and os.path.exists(persist):
+            try:
+                with open(persist, "rb") as f:
+                    doc = pickle.load(f)
+                if isinstance(doc, dict) and doc.get("schema") == _PLAN_SCHEMA:
+                    self._plans = dict(doc["plans"])
+            except Exception:
+                # a torn/stale store degrades to planning, never an error
+                self._plans = {}
 
     def __len__(self) -> int:
         return len(self._canon)
+
+    # -- persisted plan artifacts --------------------------------------------
+    def plan_artifact(self, fp: str, out_len: int) -> Optional[dict]:
+        """The memoized (possibly persisted) plan artifact for one
+        ``(structural fingerprint, out_len)`` point, or ``None``."""
+        return self._plans.get((fp, int(out_len)))
+
+    def store_artifact(self, fp: str, out_len: int, artifact: dict) -> None:
+        """Memoize a plan artifact and (when persisting) write through."""
+        self._plans[(fp, int(out_len))] = artifact
+        self.save()
+
+    def save(self) -> None:
+        """Atomically write the artifact store to the ``persist`` path
+        (no-op for in-memory caches)."""
+        if not self._persist:
+            return
+        d = os.path.dirname(os.path.abspath(self._persist))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump({"schema": _PLAN_SCHEMA, "plans": self._plans}, f)
+            os.replace(tmp, self._persist)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
 
     def intern(self, root: ir.Node) -> ir.Node:
         """Canonical (interned) equivalent of ``root``; subsumes per-query

@@ -48,6 +48,7 @@ class Tracer:
         self._stack: List[str] = []
         self._spans: Dict[str, Dict] = {}
         self._compiles: Dict[str, int] = {}
+        self._aot: Dict[str, str] = {}
 
     @contextlib.contextmanager
     def span(self, name: str):
@@ -70,6 +71,17 @@ class Tracer:
     def record_compile(self, key: str) -> None:
         """Note a jit-cache miss at a policy point (a staged compile)."""
         self._compiles[key] = self._compiles.get(key, 0) + 1
+
+    def record_aot(self, key: str, how: str = "loaded") -> None:
+        """Note an AOT executable installed under a staging key
+        (``how``: ``"loaded"`` from a persisted cache or ``"compiled"``
+        ahead of time).  The complement of :meth:`record_compile`: a warm
+        serving start shows AOT loads here and *no* compile records — the
+        tracer-verified zero-compile warm-start proof."""
+        self._aot[key] = how
+
+    def aot_installs(self) -> Dict[str, str]:
+        return dict(self._aot)
 
     def compiles(self) -> Dict[str, int]:
         return dict(self._compiles)
@@ -96,9 +108,11 @@ class Tracer:
         return {k: dict(v) for k, v in sorted(self._spans.items())}
 
     def compile_report(self) -> Dict:
-        return {"counts": self.compiles(), "retraces": self.retraces()}
+        return {"counts": self.compiles(), "retraces": self.retraces(),
+                "aot_installs": self.aot_installs()}
 
     def reset(self) -> None:
         self._spans.clear()
         self._compiles.clear()
+        self._aot.clear()
         self._stack.clear()

@@ -1,0 +1,29 @@
+"""Low-latency serving on the policy runner (ROADMAP open item 2).
+
+Three pieces, composable but separable:
+
+* :mod:`repro.serve.aot` — AOT compilation of every staged step through
+  the runner's ``staged_steps()`` surface, with a persisted executable
+  cache (``jax.experimental.serialize_executable``) so a fresh process
+  reaches first-result without tracing or compiling.
+* :mod:`repro.serve.ring` — fixed-capacity FIFO admission ring with
+  explicit shed policies and ``serve.*`` telemetry.
+* :mod:`repro.serve.loop` — :class:`ServeLoop` (double-buffered async
+  chunk path + ring-fed event path over
+  :class:`repro.ingest.IngestRunner`) and :func:`build_service`, the
+  one-call constructor wiring the persisted plan + executable caches.
+
+``python -m repro.serve --smoke`` runs a small end-to-end serving loop
+and gates it with the ``serving`` analysis pass (the ``make lint-plans``
+hook).
+"""
+from .aot import (ExecutableCache, aot_compile, enable_jax_compilation_cache,
+                  step_fingerprint)
+from .loop import (ServeLoop, body_spec_from_artifact, build_service,
+                   plan_artifact_of)
+from .ring import AdmissionRing, Backpressure, RingEntry
+
+__all__ = ["AdmissionRing", "Backpressure", "ExecutableCache", "RingEntry",
+           "ServeLoop", "aot_compile", "body_spec_from_artifact",
+           "build_service", "enable_jax_compilation_cache",
+           "plan_artifact_of", "step_fingerprint"]
